@@ -1,0 +1,66 @@
+"""Paper Figs. 6/7: request serving time, ACORN vs server-based.
+
+Server prediction latency is *measured* (wall-clock single-request predicts
+of the numpy models, as the paper measures sklearn on a server); network
+terms come from the documented latency model; the ACORN side is the
+planner's J_L on a fat-tree path.  Also reports the engine's measured
+per-packet classification cost on this CPU for reference."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import WORKLOADS, fit_workload
+from repro.core import packets
+from repro.core.netsim import (
+    acorn_serving_time,
+    measure_inference_time,
+    server_serving_time,
+    simulate_serving,
+)
+from repro.core.packets import PacketBatch
+from repro.core.plane import PlaneProfile, SwitchEngine
+from repro.core.planner import plan_program
+from repro.core.topology import fat_tree
+from repro.core.translator import translate
+
+
+def run(workloads=("1", "3", "9", "12")) -> list[str]:
+    out = ["fig67,workload,kind,acorn_ms,server_ms,speedup,pred_ms_server,hops"]
+    net = fat_tree(4)
+    h = net.hosts()
+    for wid, ds, kind in WORKLOADS:
+        if wid not in workloads:
+            continue
+        f = fit_workload(ds, kind, 24)
+        prog = translate(f.model)
+        plan = plan_program(prog, net, h[0], h[-1], solver="dp")
+        t_acorn = acorn_serving_time(plan)
+        t_pred = measure_inference_time(f.model, f.Xte, n_requests=60)
+        rq = packets.request_bytes(prog.n_features, n_trees=prog.n_trees,
+                                   n_hyperplanes=prog.n_hyperplanes)
+        t_server = server_serving_time(t_pred, rq)
+        samples = simulate_serving(t_acorn, n=500)
+        out.append(
+            f"fig67,{wid},{kind},{np.median(samples)*1e3:.4f},"
+            f"{t_server*1e3:.4f},{t_server/t_acorn:.1f}x,"
+            f"{t_pred*1e3:.4f},{plan.breakdown['hops']}")
+    # prediction-latency breakdown (Fig. 7): plane batch throughput on CPU
+    f = fit_workload("satdap", "rf", 24)
+    prog = translate(f.model)
+    prof = PlaneProfile(max_features=36, max_trees=8, max_layers=16,
+                        max_entries_per_layer=256, max_leaves=256,
+                        max_classes=8, max_hyperplanes=8)
+    eng = SwitchEngine(prof)
+    packed = eng.install(eng.empty(), prog)
+    pb = PacketBatch.make_request(f.Xte[:512], mid=prog.mid, max_features=36,
+                                  n_trees=8, n_hyperplanes=8)
+    eng.classify(packed, pb).rslt.block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(5):
+        eng.classify(packed, pb).rslt.block_until_ready()
+    per_pkt = (time.perf_counter() - t0) / 5 / 512
+    out.append(f"fig67,engine,rf,per_packet_us={per_pkt*1e6:.2f},"
+               f"(XLA-CPU engine; Tofino pipeline ~1us/packet at line rate),,,")
+    return out

@@ -1,0 +1,51 @@
+"""Paper Fig. 8: optimizer solve time across datacenter topologies.
+
+Paper setups (Table 6) are Fat-Tree k=12/16/20, DCell/BCube/Jellyfish of
+similar switch counts.  We run the same families; sizes are trimmed to this
+container's single core (documented), plus the beyond-paper DP-vs-MILP
+speedup on identical subproblems."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import fit_workload
+from repro.core.planner import DeviceModel, plan_program
+from repro.core.topology import bcube, dcell, fat_tree, jellyfish
+from repro.core.translator import translate
+
+SETUPS = [
+    ("fat-tree", lambda: fat_tree(8)),
+    ("fat-tree", lambda: fat_tree(12)),
+    ("dcell", lambda: dcell(3, 1)),
+    ("dcell", lambda: dcell(4, 1)),
+    ("bcube", lambda: bcube(4, 1)),
+    ("bcube", lambda: bcube(5, 1)),
+    ("jellyfish", lambda: jellyfish(80, 3)),
+    ("jellyfish", lambda: jellyfish(125, 4)),
+]
+
+
+def run() -> list[str]:
+    out = ["fig8,topology,switches,model,solver,solve_s,devices_used"]
+    f_small = fit_workload("satdap", "dt", 24, max_leaf_nodes=64)
+    f_big = fit_workload("nsl-kdd", "rf", 40, max_leaf_nodes=128, n_estimators=4)
+    for name, mk in SETUPS:
+        net = mk()
+        h = net.hosts()
+        src, dst = h[0], h[-1]
+        for label, f in (("dt", f_small), ("rf", f_big)):
+            prog = translate(f.model)
+            for solver in ("dp", "milp"):
+                t0 = time.perf_counter()
+                try:
+                    plan = plan_program(prog, net, src, dst,
+                                        default_device=DeviceModel(n_stages=8),
+                                        solver=solver)
+                    dt = time.perf_counter() - t0
+                    out.append(f"fig8,{name},{net.n_switches},{label},{solver},"
+                               f"{dt:.3f},{len(plan.breakdown['devices_used'])}")
+                    assert dt < 10.0  # the paper's Fig. 8 bound
+                except RuntimeError as e:
+                    out.append(f"fig8,{name},{net.n_switches},{label},{solver},"
+                               f"infeasible,{e}")
+    return out

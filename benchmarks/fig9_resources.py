@@ -1,0 +1,33 @@
+"""Paper Fig. 9 (+ Fig. 12): TCAM/SRAM entries vs feature count per system."""
+from __future__ import annotations
+
+from benchmarks.common import fit_workload
+from repro.core.baselines import (
+    acorn_resources,
+    dinc_resources,
+    leo_resources,
+    switchtree_resources,
+)
+from repro.core.translator import translate
+
+DATASETS = ["cicids-17", "digits", "nsl-kdd", "unsw-nb15"]
+FEATURES = [5, 15, 25, 45]
+
+
+def run(datasets=None) -> list[str]:
+    out = ["fig9,dataset,features,system,tcam,sram,feasible"]
+    for ds in datasets or DATASETS:
+        for nf in FEATURES:
+            f = fit_workload(ds, "dt", nf, max_leaf_nodes=128)
+            for fn in (acorn_resources, switchtree_resources, leo_resources,
+                       dinc_resources):
+                r = fn(f.model)
+                out.append(f"fig9,{ds},{f.Xtr.shape[1]},{r.system},"
+                           f"{r.tcam_entries},{r.sram_entries},{r.feasible}")
+    # Fig. 12: SVM SRAM — ACORN == DINC by design (same representation)
+    for nf in (4, 8, 16, 46):
+        f = fit_workload("nsl-kdd", "svm", nf)
+        prog = translate(f.model)
+        sram = prog.total_sram_entries()
+        out.append(f"fig9,svm-sram,{f.Xtr.shape[1]},acorn==dinc,0,{sram},True")
+    return out

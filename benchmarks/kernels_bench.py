@@ -1,0 +1,67 @@
+"""Kernel micro-bench: XLA-ref path wall time on CPU (us/call) + the
+VMEM/MXU tiling parameters the Pallas versions claim on TPU."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+
+def _time(fn, *args, n=10):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        r = fn(*args)
+        (r[0] if isinstance(r, tuple) else r).block_until_ready()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run() -> list[str]:
+    rng = np.random.default_rng(0)
+    out = ["kernels,name,us_per_call,config"]
+    B, T, E, F = 2048, 8, 128, 46
+    codes = jnp.asarray(rng.integers(0, 2**12, (B, T)), jnp.uint32)
+    feats = jnp.asarray(rng.integers(0, 256, (B, F)), jnp.int32)
+    cv = jnp.asarray(rng.integers(0, 64, (T, E)), jnp.uint32)
+    cm = jnp.asarray(rng.integers(0, 64, (T, E)), jnp.uint32)
+    fid = jnp.asarray(rng.integers(0, F, (T, E)), jnp.int32)
+    flo = jnp.zeros((T, E), jnp.int32)
+    fhi = jnp.full((T, E), 128, jnp.int32)
+    bit = jnp.asarray(rng.integers(0, 2, (T, E)), jnp.uint32)
+    valid = jnp.ones((T, E), bool)
+    us = _time(lambda *a: ops.tcam_match(*a, mode="ref"),
+               codes, feats, cv, cm, fid, flo, fhi, bit, valid, jnp.int32(3))
+    out.append(f"kernels,tcam_match,{us:.1f},B={B} T={T} E={E} F={F} "
+               f"(Pallas: block_b=256 E_pad=128 f-sel MXU matmul)")
+
+    H, L = 10, 256
+    lut = jnp.asarray(rng.integers(-50000, 50000, (H, F, L)), jnp.int32)
+    bias = jnp.zeros((H,), jnp.int32)
+    us = _time(lambda *a: ops.svm_lookup(*a, mode="ref"), feats, lut, bias)
+    out.append(f"kernels,svm_lookup,{us:.1f},B={B} H={H} F={F} L={L} "
+               f"(Pallas: chunk_f=8 one-hot MXU, int-exact accum)")
+
+    P, C = 256, 25
+    pc = jnp.asarray(np.sort(rng.choice(2**16, (T, P), replace=False)
+                             .astype(np.uint32), axis=1))
+    pl = jnp.asarray(rng.integers(0, C, (T, P)), jnp.int32)
+    pv = jnp.ones((T, P), bool)
+    w = jnp.ones((T,), jnp.float32)
+    us = _time(lambda *a: ops.forest_predict_vote(*a, C, mode="ref"),
+               codes, pc, pl, pv, w)
+    out.append(f"kernels,forest_predict_vote,{us:.1f},B={B} T={T} P={P} C={C} "
+               f"(Pallas: compare-reduce CAM, block_b=256)")
+
+    Bq, Hq, Hkv, D, S = 8, 16, 8, 128, 4096
+    q = jnp.asarray(rng.normal(size=(Bq, Hq, D)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(Bq, S, Hkv, D)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(Bq, S, Hkv, D)), jnp.bfloat16)
+    kvl = jnp.full((Bq,), S, jnp.int32)
+    us = _time(lambda *a: ops.decode_attn(*a, mode="ref"), q, k, v, kvl)
+    out.append(f"kernels,decode_attn,{us:.1f},B={Bq} Hq={Hq} Hkv={Hkv} S={S} "
+               f"(Pallas: flash-decode, block_s=512, VMEM scratch accum)")
+    return out

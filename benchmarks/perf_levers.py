@@ -1,0 +1,59 @@
+"""§Perf hillclimb record: baseline vs optimized roofline terms for the three
+hillclimbed cells (reads the tagged dry-run JSONs; see EXPERIMENTS.md §Perf)."""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+CELLS = [
+    ("qwen3-moe-235b-a22b", "train_4k", [
+        ("baseline(onehot-dispatch)", ""),
+        ("sort-dispatch", "perf1"),
+        ("sort+sharded-buffers", "perf2"),
+        ("sharded+capacity1.0", "perf4"),
+    ]),
+    ("grok-1-314b", "train_4k", [
+        ("baseline(onehot-dispatch)", ""),
+        ("sort-dispatch", "perf1"),
+        ("sort+sharded-buffers", "perf2"),
+        ("sharded+flash-attn", "perf4"),
+    ]),
+    ("internlm2-20b", "decode_32k", [
+        ("baseline(replicated-cache)", "perf0"),
+        ("split-KV", "perf1"),
+        ("split-KV+mxu-native", "perf2"),
+    ]),
+]
+
+
+def _load(arch, shape, tag):
+    suffix = f"__{tag}" if tag else ""
+    p = os.path.join(RESULTS, f"{arch}__{shape}__1pod{suffix}.json")
+    with open(p) as f:
+        return json.load(f)
+
+
+def run() -> list[str]:
+    out = ["perf,cell,variant,compute_s,memory_s,collective_s,lower_bound_s,"
+           "useful,speedup_vs_baseline"]
+    for arch, shape, variants in CELLS:
+        # Note: the decode baseline is the tagged pre-default record if the
+        # untagged one was re-run with split-KV on.
+        base_lb = None
+        for label, tag in variants:
+            try:
+                r = _load(arch, shape, tag)
+            except FileNotFoundError:
+                out.append(f"perf,{arch}x{shape},{label},missing,,,,,")
+                continue
+            rl = r["roofline"]
+            lb = rl["step_s_lower_bound"]
+            if base_lb is None:
+                base_lb = lb
+            out.append(
+                f"perf,{arch}x{shape},{label},{rl['compute_s']:.4g},"
+                f"{rl['memory_s']:.4g},{rl['collective_s']:.4g},{lb:.4g},"
+                f"{r['useful_flops_ratio']:.3f},{base_lb/lb:.2f}x")
+    return out

@@ -1,0 +1,44 @@
+"""§Roofline: read the dry-run JSON records into the per-cell table.
+
+Single-pod (16x16 = 256 chips) per the brief; the 2-pod records prove the
+pod axis shards (status column only)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def load_records(pods: int = 1, tag: str = "") -> list[dict]:
+    recs = []
+    suffix = f"__{tag}" if tag else ""
+    for p in sorted(glob.glob(os.path.join(RESULTS, f"*__{pods}pod{suffix}.json"))):
+        if not tag and "pod__" in os.path.basename(p):
+            continue  # skip tagged (perf-iteration) records in the baseline table
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run() -> list[str]:
+    out = ["roofline,arch,shape,status,compute_s,memory_s,collective_s,"
+           "dominant,useful_ratio,bytes_per_dev_GB"]
+    for r in load_records(1):
+        if r["status"] != "ok":
+            out.append(f"roofline,{r['arch']},{r['shape']},{r['status']},,,,,,"
+                       + r.get("reason", r.get("error", ""))[:60])
+            continue
+        rl = r["roofline"]
+        ur = r.get("useful_flops_ratio")
+        out.append(
+            f"roofline,{r['arch']},{r['shape']},ok,"
+            f"{rl['compute_s']:.4g},{rl['memory_s']:.4g},"
+            f"{rl['collective_s']:.4g},{rl['dominant']},"
+            f"{ur:.3f},"
+            f"{r['meta']['analytic_bytes_per_device']/1e9:.2f}")
+    ok2 = sum(1 for r in load_records(2) if r["status"] == "ok")
+    skip2 = sum(1 for r in load_records(2) if r["status"] == "skip")
+    out.append(f"roofline,multi-pod,2x16x16,ok={ok2} skip={skip2},,,,,,")
+    return out

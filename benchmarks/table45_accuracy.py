@@ -1,0 +1,78 @@
+"""Paper Tables 4/5: classification quality per system per workload.
+
+Per system we train under that system's feature budget (Tables 3/4), apply
+its representation constraints (DINC: decision-table cap -> shrink-to-fit =
+the paper's observed underfitting), run the model through the ACORN plane
+(in-network predictions) and report Acc / Macro-F1 / Cohen's kappa between
+in-network and server-side predictions.
+
+Synthetic datasets => absolute accuracies are proxies; the *orderings and
+mechanisms* (more features -> better; DINC shrink -> worse; kappa == 1 for
+trees) are the reproduced claims.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import FEATURE_BUDGET, WORKLOADS, fit_workload
+from repro.core.baselines import dinc_resources
+from repro.core.mlmodels import DecisionTree, RandomForest, accuracy, cohen_kappa, macro_f1
+from repro.core.packets import PacketBatch
+from repro.core.plane import PlaneProfile, SwitchEngine
+from repro.core.translator import translate
+
+PROF = PlaneProfile(max_features=60, max_trees=8, max_layers=16,
+                    max_entries_per_layer=512, max_leaves=512,
+                    max_classes=32, max_hyperplanes=12)
+
+
+def _through_plane(model, f):
+    prog = translate(model)
+    eng = SwitchEngine(PROF)
+    packed = eng.install(eng.empty(), prog)
+    pb = PacketBatch.make_request(f.Xte, mid=prog.mid,
+                                  max_features=PROF.max_features,
+                                  n_trees=PROF.max_trees,
+                                  n_hyperplanes=PROF.max_hyperplanes)
+    return np.asarray(eng.classify(packed, pb).rslt)
+
+
+def run(workloads=None) -> list[str]:
+    out = ["table45,workload,system,acc,macro_f1,kappa,features"]
+    for wid, ds, kind in WORKLOADS:
+        if workloads and wid not in workloads:
+            continue
+        systems = (("acorn", 46),) if kind == "svm" else tuple(
+            FEATURE_BUDGET.items())
+        for sys_, nf in systems:
+            if kind != "dt" and sys_ in ("switchtree", "leo"):
+                continue  # Table 3: N/A
+            try:
+                f = fit_workload(ds, kind, nf)
+            except Exception as e:  # pragma: no cover
+                out.append(f"table45,{wid},{sys_},err,{e},,")
+                continue
+            model = f.model
+            if sys_ == "dinc" and kind in ("dt", "rf"):
+                # representation cap: shrink until Planter's table fits
+                leaves = 128
+                while leaves >= 4 and not dinc_resources(
+                        model, entry_cap=1 << 20).feasible:
+                    leaves //= 2
+                    if kind == "dt":
+                        model = DecisionTree(max_depth=12,
+                                             max_leaf_nodes=leaves).fit(f.Xtr, f.ytr)
+                    else:
+                        model = RandomForest(n_estimators=3, max_depth=8,
+                                             max_leaf_nodes=max(leaves // 2, 2)
+                                             ).fit(f.Xtr, f.ytr)
+            server_pred = model.predict(f.Xte)
+            if sys_ == "acorn":
+                net_pred = _through_plane(model, f)
+            else:
+                net_pred = server_pred  # baselines: representation-exact
+            out.append(
+                f"table45,{wid},{sys_},{accuracy(f.yte, net_pred):.3f},"
+                f"{macro_f1(f.yte, net_pred):.3f},"
+                f"{cohen_kappa(net_pred, server_pred):.3f},{f.Xtr.shape[1]}")
+    return out

@@ -1,0 +1,45 @@
+"""Paper Tables 7/8: static resource usage % and pipeline-stage scaling.
+
+Table 7 reports per-component usage against Tofino-1 capacities; we report
+the analogous shares of our DeviceModel budget from the real translator
+output.  Table 8: stages used vs feature count (the headline claim: stage
+usage does NOT grow with features — fewer features force deeper trees)."""
+from __future__ import annotations
+
+from benchmarks.common import fit_workload
+from repro.core.planner import DeviceModel
+from repro.core.translator import translate
+
+# Tofino-1-class budgets used for the % columns.
+TOFINO_TCAM = 24 * 2048       # 24 TCAM blocks x 2k entries
+TOFINO_SRAM = 48 * 4096
+TOFINO_STAGES = 12
+
+
+def run() -> list[str]:
+    out = ["table7,component,tcam_pct,sram_pct,stages"]
+    f = fit_workload("nsl-kdd", "dt", 46, max_leaf_nodes=256)
+    prog = translate(f.model)
+    specs = prog.stages()
+    lay = [s for s in specs if any(t.kind == "dt_layer" for t in s.tables)]
+    pred = [s for s in specs if any(t.kind == "dt_predict" for t in s.tables)]
+    out.append(
+        f"table7,dt_layer(x{len(lay)}),"
+        f"{100*sum(s.tcam_entries for s in lay)/TOFINO_TCAM:.2f},"
+        f"{100*sum(s.sram_entries for s in lay)/TOFINO_SRAM:.2f},{len(lay)}")
+    out.append(
+        f"table7,dt_predict,0.00,"
+        f"{100*sum(s.sram_entries for s in pred)/TOFINO_SRAM:.2f},{len(pred)}")
+    fs = fit_workload("nsl-kdd", "svm", 46)
+    ps = translate(fs.model)
+    out.append(
+        f"table7,svm_mul+predict,0.00,"
+        f"{100*ps.total_sram_entries()/TOFINO_SRAM:.2f},{ps.n_stages}")
+
+    out.append("table8,dataset,features,stages")
+    for ds in ("cicids-17", "digits", "nsl-kdd", "mnist"):
+        for nf in (5, 15, 25, 45):
+            f = fit_workload(ds, "dt", nf, max_leaf_nodes=128)
+            prog = translate(f.model)
+            out.append(f"table8,{ds},{f.Xtr.shape[1]},{prog.n_stages}")
+    return out

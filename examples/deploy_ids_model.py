@@ -1,0 +1,69 @@
+"""Scenario: an IDS operator runs a random forest + an SVM side by side,
+hot-swaps model versions at runtime, and survives a switch failure.
+
+Demonstrates the paper's three pillars on one network:
+  * runtime programmability — version swap = entry rewrite, zero recompile
+    (engine trace count stays 1);
+  * multi-model data plane — tree + SVM pipelines coexist (Fig. 5);
+  * beyond-paper fault tolerance — replan around a dead switch.
+
+    PYTHONPATH=src python examples/deploy_ids_model.py
+"""
+import numpy as np
+
+from repro.core.distributed_plane import build_device_programs, run_sequential
+from repro.core.mlmodels import LinearSVM, Quantizer, RandomForest, accuracy
+from repro.core.packets import PacketBatch
+from repro.core.plane import PlaneProfile, SwitchEngine
+from repro.core.planner import DeviceModel, plan_program, replan
+from repro.core.topology import fat_tree
+from repro.core.translator import translate
+from repro.data import load_dataset
+
+Xtr, ytr, Xte, yte = load_dataset("cicids-17", scale=0.04, max_train=4000)
+q = Quantizer(8).fit(Xtr)
+Xtrq, Xteq = q.transform(Xtr)[:, :36], q.transform(Xte)[:, :36]
+
+prof = PlaneProfile(max_features=36, max_trees=8, max_layers=12,
+                    max_entries_per_layer=256, max_leaves=256,
+                    max_classes=8, max_hyperplanes=8)
+eng = SwitchEngine(prof)
+state = eng.empty()
+
+# v1 forest + an SVM tenant on the same plane
+rf_v1 = RandomForest(n_estimators=4, max_depth=6, max_leaf_nodes=40,
+                     random_state=1).fit(Xtrq, ytr)
+svm = LinearSVM(epochs=150).fit(Xtrq, ytr)
+state = eng.install(state, translate(rf_v1, vid=1))
+state = eng.install(state, translate(svm, vid=1))
+
+mk = lambda mid: PacketBatch.make_request(Xteq, mid=mid, max_features=36,
+                                          n_trees=8, n_hyperplanes=8)
+acc_rf = accuracy(yte, np.asarray(eng.classify(state, mk(1)).rslt))
+acc_svm = accuracy(yte, np.asarray(eng.classify(state, mk(2)).rslt))
+print(f"v1 forest acc={acc_rf:.3f} | svm tenant acc={acc_svm:.3f} "
+      f"(one plane, two pipelines)")
+
+# hot-swap to a stronger v2 forest — no recompilation
+rf_v2 = RandomForest(n_estimators=8, max_depth=8, max_leaf_nodes=100,
+                     random_state=2).fit(Xtrq, ytr)
+state = eng.install(state, translate(rf_v2, vid=2))
+acc_v2 = accuracy(yte, np.asarray(eng.classify(state, mk(1)).rslt))
+print(f"v2 forest acc={acc_v2:.3f} after runtime swap; "
+      f"engine traces = {eng.cache_size()} (no recompile)")
+
+# distributed deployment + failure recovery
+net = fat_tree(4)
+h = net.hosts()
+dev = DeviceModel(n_stages=10)
+prog = translate(rf_v2)
+plan = plan_program(prog, net, h[0], h[-1], default_device=dev, solver="dp")
+print(f"deployed across {plan.breakdown['devices_used']}")
+dead = plan.breakdown["devices_used"][-1]
+plan2 = replan(prog, net, h[0], h[-1], {dead}, default_device=dev, solver="dp")
+print(f"switch {dead} died -> replanned onto {plan2.breakdown['devices_used']} "
+      f"in {plan2.solve_time*1e3:.1f}ms")
+_, dps = build_device_programs(prog, plan2, prof)
+out = run_sequential(dps, mk(1), n_classes=prof.max_classes)
+assert (np.asarray(out.rslt) == rf_v2.predict(Xteq)).all()
+print("post-failure answers identical — service uninterrupted.")

@@ -1,0 +1,70 @@
+"""The paper's Figure 2 on a device mesh: a forest distributed across
+"switches" (devices), packets hopping via collective-permute, GPipe-style
+pipelining so every switch processes a different in-flight microbatch.
+
+Needs >= 2 emulated devices:
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python examples/distributed_inference.py
+"""
+import os
+
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core.distributed_plane import PipelinedPlane, build_device_programs
+from repro.core.mlmodels import Quantizer, RandomForest, accuracy
+from repro.core.packets import PacketBatch
+from repro.core.plane import PlaneProfile
+from repro.core.planner import DeviceModel, plan_program
+from repro.core.topology import fat_tree
+from repro.core.translator import translate
+from repro.data import load_dataset
+
+print(f"devices: {len(jax.devices())}")
+Xtr, ytr, Xte, yte = load_dataset("satdap", scale=0.3)
+q = Quantizer(8).fit(Xtr)
+Xtrq, Xteq = q.transform(Xtr), q.transform(Xte)
+rf = RandomForest(n_estimators=4, max_depth=5, max_leaf_nodes=30).fit(Xtrq, ytr)
+prog = translate(rf)
+
+net = fat_tree(4)
+h = net.hosts()
+plan = plan_program(prog, net, h[0], h[-1],
+                    default_device=DeviceModel(n_stages=4), solver="dp")
+print(f"plan: {len(plan.device_stages())} switches on path {plan.path}")
+
+prof = PlaneProfile(max_features=36, max_trees=4, max_layers=8,
+                    max_entries_per_layer=64, max_leaves=64,
+                    max_classes=8, max_hyperplanes=8)
+devices, dps = build_device_programs(prog, plan, prof)
+n_dev = min(len(dps), len(jax.devices()))
+plane = PipelinedPlane(dps[:n_dev], n_classes=prof.max_classes)
+
+n_micro, B = 8, 64
+Xm = np.tile(Xteq, (4, 1))[: n_micro * B]
+mbs = PacketBatch.make_request(Xm, mid=prog.mid, max_features=36, n_trees=4,
+                               n_hyperplanes=8)
+mbs = jax.tree.map(lambda x: x.reshape((n_micro, B) + x.shape[1:]), mbs)
+out = plane.run(mbs)  # compile + run
+t0 = time.perf_counter()
+out = plane.run(mbs)
+jax.block_until_ready(out.rslt)
+dt = time.perf_counter() - t0
+got = np.asarray(out.rslt).reshape(-1)
+assert (got == rf.predict(Xm)).all()
+print(f"pipelined {n_micro}x{B} packets across {n_dev} 'switches' in "
+      f"{dt*1e3:.1f} ms — answers match the forest exactly")
+
+# runtime reprogram the whole distributed plane
+rf2 = RandomForest(n_estimators=4, max_depth=5, max_leaf_nodes=30,
+                   random_state=9).fit(Xtrq, ytr)
+_, dps2 = build_device_programs(translate(rf2), plan, prof)
+plane.swap_model(dps2[:n_dev])
+out2 = plane.run(mbs)
+assert (np.asarray(out2.rslt).reshape(-1) == rf2.predict(Xm)).all()
+print("hot-swapped the model on every switch — same compiled pipeline.")

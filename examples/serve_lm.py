@@ -1,0 +1,63 @@
+"""LM serving driver: prefill a batch of prompts, then batched greedy decode
+with the KV-cache/recurrent-state engine — fixed shapes, so tenant/model
+swaps never retrace (same discipline as the ACORN plane).
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch rwkv6-7b]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.models import decode_step, forward, init_decode_state, init_params
+from repro.serving.serve import greedy_decode
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch)
+    params = init_params(cfg, jax.random.key(0))
+    B, P = args.batch, args.prompt_len
+    prompts = jax.random.randint(jax.random.key(1), (B, P), 0, cfg.vocab)
+
+    # prefill: run the prompt through decode steps to warm the cache
+    state = init_decode_state(cfg, B, P + args.gen)
+    if cfg.family == "encdec":
+        from repro.models.transformer import encode_kv
+        enc = jax.random.normal(jax.random.key(2), (B, cfg.enc_seq, cfg.d_model),
+                                cfg.jdtype)
+        state["ek"], state["ev"] = encode_kv(params, enc, cfg)
+    step = jax.jit(lambda p, s, t, pos: decode_step(p, s, t, pos, cfg))
+    t0 = time.perf_counter()
+    logits = None
+    for t in range(P):
+        logits, state = step(params, state, prompts[:, t:t + 1], jnp.int32(t))
+    print(f"prefill {B}x{P} in {(time.perf_counter()-t0)*1e3:.0f} ms")
+
+    first = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(prompts.dtype)
+    t0 = time.perf_counter()
+    toks = greedy_decode(params, state, first, jnp.int32(P), cfg, args.gen)
+    jax.block_until_ready(toks)
+    dt = time.perf_counter() - t0
+    print(f"decoded {B}x{args.gen} tokens in {dt*1e3:.0f} ms "
+          f"({B*args.gen/dt:.0f} tok/s on CPU; serving batch stays fixed-shape)")
+    print("sample continuation ids:", np.asarray(toks[0, :12]))
+
+    # weight hot-swap: same compiled decode, new model version
+    params2 = init_params(cfg, jax.random.key(7))
+    logits2, _ = step(params2, state, prompts[:, :1], jnp.int32(P))
+    print("weight swap OK — no retrace "
+          f"(cache size {step._cache_size()})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,218 @@
+"""Deterministic cost model parsed from optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` on the CPU backend proved unreliable for
+SPMD modules (flops shrink while dot count grows — see EXPERIMENTS.md
+§Dry-run notes), so the roofline uses our own parser:
+
+* ``matmul_flops`` — for every ``dot`` op: 2 * prod(result dims) *
+  prod(lhs contracting dims).  Batch dims are already in the result.
+  (Elementwise flops are ignored: <2% for these models, documented.)
+* ``traffic_bytes`` — HBM traffic model: for every *top-level* instruction in
+  ENTRY and while-body computations, result bytes + operand bytes, skipping
+  ops that do not touch HBM (parameter/constant/tuple plumbing/bitcast).
+  Fusion internals are excluded — a fusion's operands/results are exactly
+  its HBM traffic.
+* ``collective_bytes`` — same per-op accounting as
+  ``roofline.collective_bytes_from_hlo`` (kept there).
+
+On unrolled probe modules (no ``while``) both measures are exact; the
+dry-run's scan-correction probes rely on that.
+"""
+from __future__ import annotations
+
+import re
+
+__all__ = ["parse_hlo_cost"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^=]*?\)|[\w\[\],{}\s/]+?)\s+([\w\-]+)\(")
+_PARAM_RE = re.compile(r"%?([\w.\-]+):\s*((?:\([^)]*\))|(?:\w+\[[\d,]*\](?:\{[\d,]*\})?))")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_SKIP_TRAFFIC = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "copy-done",
+    "all-reduce-done", "all-gather-done", "collective-permute-done",
+    "opt-barrier", "custom-call",
+}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(shape_str: str) -> list[int] | None:
+    """Dims of a non-tuple shape string like 'f32[2,3,4]{...}'."""
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",") if d] or [1]
+
+
+def _split_computations(text: str) -> list[tuple[str, list[str]]]:
+    comps: list[tuple[str, list[str]]] = []
+    cur_name, cur_lines = None, []
+    for line in text.splitlines():
+        if line and not line[0].isspace() and "{" in line and ("(" in line):
+            if cur_name is not None:
+                comps.append((cur_name, cur_lines))
+            cur_name, cur_lines = line, []
+        elif cur_name is not None:
+            if line.startswith("}"):
+                comps.append((cur_name, cur_lines))
+                cur_name, cur_lines = None, []
+            else:
+                cur_lines.append(line)
+    if cur_name is not None:
+        comps.append((cur_name, cur_lines))
+    return comps
+
+
+_TRANSPARENT_OPS = {
+    "convert", "copy", "bitcast", "transpose", "reshape", "parameter",
+    "tuple", "get-tuple-element", "broadcast", "constant", "slice", "bitcast-convert",
+}
+_CALLS_RE = re.compile(r"calls=%([\w.\-]+)")
+
+
+def _dus_root_fusions(comps) -> set[str]:
+    """Fused computations whose ROOT is a dynamic-update-slice: XLA updates
+    these in place (donated KV caches), so the aliased full-size read+write
+    must be discounted — only the slice actually moves."""
+    out = set()
+    for header, lines in comps:
+        name_m = re.match(r"(?:ENTRY\s+)?%([\w.\-]+)", header)
+        if not name_m:
+            continue
+        for line in lines:
+            if line.strip().startswith("ROOT"):
+                dm = _DEF_RE.match(line)
+                if dm and dm.group(3) == "dynamic-update-slice":
+                    out.add(name_m.group(1))
+    return out
+
+
+def _transparent_fusions(comps) -> set[str]:
+    """Fused computations that only move/convert data.  The CPU backend has
+    no native bf16 matmul, so it wraps every dot in bf16<->f32 convert
+    fusions; on the TPU target these do not exist, so they are excluded from
+    the HBM-traffic model."""
+    out = set()
+    for header, lines in comps:
+        name_m = re.match(r"(?:ENTRY\s+)?%([\w.\-]+)", header)
+        if not name_m:
+            continue
+        ops = set()
+        for line in lines:
+            dm = _DEF_RE.match(line)
+            if dm:
+                ops.add(dm.group(3))
+        if ops and ops <= _TRANSPARENT_OPS:
+            out.add(name_m.group(1))
+    return out
+
+
+def parse_hlo_cost(text: str) -> dict:
+    flops = 0.0
+    traffic = 0.0
+    # which computations are while bodies/conditions (traffic counted once)
+    while_calls = set(re.findall(r"while\(.*?\)[^\n]*?body=%([\w.\-]+)", text))
+    while_conds = set(re.findall(r"condition=%([\w.\-]+)", text))
+
+    comps = _split_computations(text)
+    transparent = _transparent_fusions(comps)
+    dus_fusions = _dus_root_fusions(comps)
+    for header, lines in comps:
+        name_m = re.match(r"(?:ENTRY\s+)?%([\w.\-]+)", header)
+        cname = name_m.group(1) if name_m else ""
+        is_entry = header.startswith("ENTRY")
+        count_traffic = is_entry or cname in while_calls or cname in while_conds
+
+        symtab: dict[str, str] = {}
+        par = header[header.find("(") + 1:]
+        for pm in _PARAM_RE.finditer(par):
+            symtab[pm.group(1)] = pm.group(2)
+        for line in lines:
+            dm = _DEF_RE.match(line)
+            if dm:
+                symtab[dm.group(1)] = dm.group(2).strip()
+
+        for line in lines:
+            dm = _DEF_RE.match(line)
+            if not dm:
+                continue
+            rname, rshape, op = dm.group(1), dm.group(2).strip(), dm.group(3)
+            if op == "dot":
+                args = line[line.find("dot(") + 4:]
+                args = args[: args.find(")")]
+                ops = _OPERAND_RE.findall(args)
+                cd = _CDIMS_RE.search(line)
+                rdims = _shape_dims(rshape)
+                if ops and cd and rdims is not None:
+                    lhs_shape = symtab.get(ops[0])
+                    ldims = _shape_dims(lhs_shape) if lhs_shape else None
+                    if ldims:
+                        k = 1
+                        for ci in cd.group(1).split(","):
+                            if ci:
+                                idx = int(ci)
+                                if idx < len(ldims):
+                                    k *= ldims[idx]
+                        r = 1
+                        for d in rdims:
+                            r *= d
+                        flops += 2.0 * r * k
+            if count_traffic and op not in _SKIP_TRAFFIC and op != "while":
+                in_place = op == "dynamic-update-slice"
+                if op == "fusion":
+                    cm = _CALLS_RE.search(line)
+                    if cm and cm.group(1) in transparent:
+                        continue  # CPU-backend convert/copy artifact
+                    if cm and cm.group(1) in dus_fusions:
+                        in_place = True
+                result_b = _shape_bytes(rshape)
+                bts = result_b
+                paren = line.find(op + "(")
+                operand_bs = []
+                if paren >= 0:
+                    args = line[paren + len(op) + 1:]
+                    depth = 1
+                    end = 0
+                    for i, ch in enumerate(args):
+                        if ch == "(":
+                            depth += 1
+                        elif ch == ")":
+                            depth -= 1
+                            if depth == 0:
+                                end = i
+                                break
+                    for oname in _OPERAND_RE.findall(args[:end]):
+                        oshape = symtab.get(oname)
+                        if oshape:
+                            operand_bs.append(_shape_bytes(oshape))
+                bts += sum(operand_bs)
+                if in_place and operand_bs:
+                    # discount the aliased full-size read+write: keep only
+                    # the updated slice (the remaining small operands) moving
+                    big = max(operand_bs)
+                    if big >= result_b // 2:
+                        bts -= result_b + big
+                traffic += max(bts, 0)
+    return {"matmul_flops": flops, "traffic_bytes": traffic}

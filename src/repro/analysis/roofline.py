@@ -1,0 +1,130 @@
+"""Three-term roofline model from the compiled dry-run artifact.
+
+    compute    = HLO_FLOPs      / (chips * 197e12  bf16 FLOP/s)
+    memory     = HLO_bytes      / (chips * 819e9   HBM B/s)
+    collective = wire_bytes     / (chips * 50e9    ICI B/s per link)
+
+``cost_analysis()`` supplies FLOPs / bytes-accessed of the *per-device* SPMD
+module (CPU backend convention, validated in tests/test_roofline.py against
+6·N·D) — so ``chips`` divides only the collective term's aggregate wire
+bytes, while compute/memory terms use the per-device numbers directly.
+
+collective_bytes parses the optimized HLO: for every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute we take the
+result shape bytes and apply the ring cost factor over the participant group
+parsed from ``replica_groups``:
+
+    all-reduce      2 (n-1)/n        all-gather     (n-1)/n
+    reduce-scatter  (n-1)/n          all-to-all     (n-1)/n
+    collective-permute  1
+
+DCN (pod axis) collectives are charged at ``dcn_gbps`` instead of ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+__all__ = ["HW", "collective_bytes_from_hlo", "roofline_terms", "model_flops"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12        # bf16 / chip (TPU v5e)
+    hbm_gbps: float = 819e9           # bytes/s / chip
+    ici_gbps: float = 50e9            # bytes/s / link
+    dcn_gbps: float = 25e9            # bytes/s / chip cross-pod
+    hbm_bytes: float = 16e9           # capacity / chip
+
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.M)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([\d,]+)\}")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{\{")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Sum wire bytes per collective kind from optimized HLO text."""
+    out = {"all-reduce": 0.0, "all-gather": 0.0, "reduce-scatter": 0.0,
+           "all-to-all": 0.0, "collective-permute": 0.0, "n_ops": 0}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        size = _shape_bytes(shape_str)
+        if size == 0:
+            continue
+        g = _GROUPS_RE.search(line)
+        n = len(g.group(1).split(",")) if g else 2
+        n = max(n, 2)
+        if kind == "all-reduce":
+            wire = 2.0 * size * (n - 1) / n
+        elif kind in ("all-gather", "reduce-scatter", "all-to-all"):
+            wire = size * (n - 1) / n
+        else:  # collective-permute
+            wire = float(size)
+        out[kind] += wire
+        out["n_ops"] += 1
+    out["total"] = sum(v for k, v in out.items() if k not in ("n_ops", "total"))
+    return out
+
+
+def model_flops(cfg, seq_len: int, global_batch: int, kind: str) -> float:
+    """6·N·D (dense) / 6·N_active·D (MoE); decode counts one token/seq."""
+    n = cfg.active_param_count()
+    if kind == "train":
+        tokens = seq_len * global_batch
+        return 6.0 * n * tokens
+    if kind == "prefill":
+        tokens = seq_len * global_batch
+        return 2.0 * n * tokens
+    # decode: one new token per sequence
+    return 2.0 * n * global_batch
+
+
+def roofline_terms(
+    *,
+    hlo_flops: float,            # per-device (cost_analysis convention)
+    hlo_bytes: float,            # per-device bytes accessed
+    collective_wire_bytes: float,  # aggregate across devices
+    chips: int,
+    hw: HW = HW(),
+) -> dict:
+    compute_s = hlo_flops / hw.peak_flops
+    memory_s = hlo_bytes / hw.hbm_gbps
+    coll_s = collective_wire_bytes / chips / hw.ici_gbps
+    dominant = max(
+        (("compute", compute_s), ("memory", memory_s), ("collective", coll_s)),
+        key=lambda kv: kv[1],
+    )[0]
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": coll_s,
+        "dominant": dominant,
+        "step_s_lower_bound": max(compute_s, memory_s, coll_s),
+    }

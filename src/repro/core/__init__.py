@@ -1,0 +1,13 @@
+"""ACORN core: the paper's contribution as a composable system.
+
+    mlmodels/            trainable model classes (CART, forest, SVM)
+    tables.py            the 5 pre-defined MAT types + TCAM prefix expansion
+    translator.py        trained model -> TableProgram (stages + entries)
+    plane.py             jit-once runtime-programmable switch engine
+    packets.py           ACORN header as a packet-batch pytree
+    planner.py           MILP (paper) + exact DP deployment optimizer
+    topology.py          fat-tree / DCell / BCube / Jellyfish
+    netsim.py            latency/overhead model (J_L / J_D / J_O)
+    distributed_plane.py shard_map multi-switch plane, ppermute hops
+    baselines/           SwitchTree / LEO / DINC representation models
+"""

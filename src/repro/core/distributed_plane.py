@@ -1,0 +1,151 @@
+"""Distributed ACORN data plane over a device mesh (paper Fig. 2 on TPUs).
+
+The deployment plan assigns program stages to switches along a path; here the
+"switches" are mesh devices.  Each device holds only *its* table entries (a
+partial ``PackedProgram``); the packet batch's intermediates (status codes,
+SVM partial sums) ride along between hops — exactly the paper's in-packet
+intermediate transport — realized as ``lax.ppermute`` (collective-permute =
+the wire).
+
+Two execution modes:
+
+* ``run_sequential``  — functional reference: apply device programs in path
+  order on one device.  Used by tests to prove the distributed decomposition
+  is semantically identical to the single-switch plane.
+* ``PipelinedPlane``  — ``shard_map`` over a ``("switch",)`` mesh axis with a
+  GPipe-style ring: microbatch m enters device 0 at step m, hops via
+  ppermute, exits device n-1 at step m+n-1.  Steady-state: every "switch"
+  processes a different in-flight microbatch each step — the data plane
+  pipeline model (TNA), not run-to-completion.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.packets import PacketBatch
+from repro.core.plane import PackedProgram, PlaneProfile, _classify_impl, empty_program, install_program
+from repro.core.planner import DeploymentPlan
+from repro.core.translator import TableProgram
+
+__all__ = ["build_device_programs", "run_sequential", "PipelinedPlane"]
+
+
+def build_device_programs(
+    program: TableProgram,
+    plan: DeploymentPlan,
+    profile: PlaneProfile,
+) -> tuple[list[str], list[PackedProgram]]:
+    """One partial PackedProgram per programmable device on the plan's path,
+    in path order (the control plane's per-switch entry updates, §6.2)."""
+    per_dev = plan.device_stages()
+    devices = [d for d in plan.path if d in per_dev]
+    progs = []
+    for d in devices:
+        packed = empty_program(profile)
+        packed = install_program(packed, program, profile, stages=per_dev[d])
+        progs.append(packed)
+    return devices, progs
+
+
+def run_sequential(
+    device_programs: list[PackedProgram],
+    batch: PacketBatch,
+    *,
+    n_classes: int,
+    mode: str | None = None,
+) -> PacketBatch:
+    """Reference semantics: the batch visits each device in path order."""
+    for packed in device_programs:
+        batch = _classify_impl(packed, batch, n_classes=n_classes, mode=mode)
+    return batch
+
+
+class PipelinedPlane:
+    """shard_map ring pipeline across a 'switch' mesh axis."""
+
+    def __init__(
+        self,
+        device_programs: list[PackedProgram],
+        *,
+        n_classes: int,
+        mode: str | None = None,
+        devices=None,
+    ) -> None:
+        self.n_dev = len(device_programs)
+        if devices is None:
+            devices = jax.devices()[: self.n_dev]
+        if len(devices) < self.n_dev:
+            raise ValueError(f"need {self.n_dev} devices, have {len(devices)}")
+        self.mesh = Mesh(devices, ("switch",))
+        self.n_classes = n_classes
+        self.mode = mode
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *device_programs)
+        sharding = NamedSharding(self.mesh, P("switch"))
+        self.packed = jax.tree.map(lambda x: jax.device_put(x, sharding), stacked)
+        self._run = None
+
+    def _build(self, n_micro: int):
+        n_dev, n_classes, mode = self.n_dev, self.n_classes, self.mode
+        n_steps = n_micro + n_dev - 1
+        perm = [(i, (i + 1) % n_dev) for i in range(n_dev)]
+
+        @functools.partial(
+            jax.shard_map,
+            mesh=self.mesh,
+            in_specs=(P("switch"), P(None)),
+            out_specs=P(None, "switch"),
+            check_vma=False,
+        )
+        def pipeline(packed_stack, micro):
+            packed = jax.tree.map(lambda x: x[0], packed_stack)
+            idx = jax.lax.axis_index("switch")
+
+            def step(state, s):
+                inj = jax.tree.map(
+                    lambda x: jnp.take(x, jnp.minimum(s, n_micro - 1), axis=0), micro
+                )
+                mb = jax.tree.map(
+                    lambda a, b: jnp.where(idx == 0, a, b), inj, state
+                )
+                out = _classify_impl(packed, mb, n_classes=n_classes, mode=mode)
+                nxt = jax.tree.map(
+                    lambda x: jax.lax.ppermute(x, "switch", perm), out
+                )
+                return nxt, out
+
+            init = jax.tree.map(
+                lambda x: jnp.zeros_like(x[0]), micro
+            )
+            _, outs = jax.lax.scan(step, init, jnp.arange(n_steps))
+            # leading axis: steps; device axis added by out_specs on axis 1
+            return jax.tree.map(lambda x: x[:, None], outs)
+
+        return jax.jit(pipeline)
+
+    def run(self, microbatches: PacketBatch) -> PacketBatch:
+        """``microbatches`` has leading axis [n_micro, B_mb]. Returns the
+        classified microbatches, re-concatenated in order."""
+        n_micro = microbatches.packet_id.shape[0]
+        if self._run is None or self._n_micro != n_micro:
+            self._run = self._build(n_micro)
+            self._n_micro = n_micro
+        outs = self._run(self.packed, microbatches)
+        n_dev = self.n_dev
+        # microbatch m exits the last device at step m + n_dev - 1
+        sel = jax.tree.map(
+            lambda x: x[n_dev - 1 :, n_dev - 1], outs
+        )  # [n_micro, B_mb, ...]
+        return sel
+
+    def swap_model(self, device_programs: list[PackedProgram]) -> None:
+        """Runtime reprogram: new entry arrays, same compiled pipeline."""
+        if len(device_programs) != self.n_dev:
+            raise ValueError("device count changed — replan instead")
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *device_programs)
+        sharding = NamedSharding(self.mesh, P("switch"))
+        self.packed = jax.tree.map(lambda x: jax.device_put(x, sharding), stacked)

@@ -1,0 +1,114 @@
+"""ACORN packet header (paper Appendix A) as a struct-of-arrays pytree.
+
+Basic header: Packet ID | Type | MID | VID | RSLT | RID.
+Data part: raw input features (size set by the max supported feature count —
+an operator knob).  Intermediate part: per-tree status codes / SVM partial
+sums that must travel between devices (paper §4).  When classification
+finishes, the data + intermediate parts are dropped (``strip_payload``) to
+shrink response packets — the planner's overhead objective J_O models exactly
+this request/response size asymmetry.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["PacketType", "PacketBatch", "header_bytes", "request_bytes", "response_bytes"]
+
+
+class PacketType:
+    FORWARD = 0   # ordinary traffic: data plane only forwards
+    REQUEST = 1   # inference request (carries features)
+    RESPONSE = 2  # inference response (carries RSLT only)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PacketBatch:
+    """A batch of ACORN packets (one pipeline's PHV state, vectorized)."""
+
+    packet_id: jax.Array   # uint32 [B]
+    ptype: jax.Array       # int32 [B]
+    mid: jax.Array         # int32 [B]  model type id (0=DT, 1=RF, 2=SVM)
+    vid: jax.Array         # int32 [B]  model version
+    rslt: jax.Array        # int32 [B]  prediction result (-1 = not yet)
+    rid: jax.Array         # int32 [B]  routing code (next hop)
+    features: jax.Array    # int32 [B, F]
+    codes: jax.Array       # uint32 [B, T]  per-tree status codes
+    svm_acc: jax.Array     # int32 [B, H]   partial hyperplane sums
+
+    @property
+    def batch(self) -> int:
+        return self.packet_id.shape[0]
+
+    @classmethod
+    def make_request(
+        cls,
+        features: np.ndarray,
+        *,
+        mid: int = 0,
+        vid: int = 0,
+        max_features: int | None = None,
+        n_trees: int = 1,
+        n_hyperplanes: int = 1,
+    ) -> "PacketBatch":
+        features = np.asarray(features, dtype=np.int32)
+        B, F = features.shape
+        Fmax = max_features or F
+        if F > Fmax:
+            raise ValueError(f"{F} features > plane max {Fmax}")
+        feats = np.zeros((B, Fmax), dtype=np.int32)
+        feats[:, :F] = features
+        return cls(
+            packet_id=jnp.arange(B, dtype=jnp.uint32),
+            ptype=jnp.full((B,), PacketType.REQUEST, jnp.int32),
+            mid=jnp.full((B,), mid, jnp.int32),
+            vid=jnp.full((B,), vid, jnp.int32),
+            rslt=jnp.full((B,), -1, jnp.int32),
+            rid=jnp.zeros((B,), jnp.int32),
+            features=jnp.asarray(feats),
+            codes=jnp.zeros((B, n_trees), jnp.uint32),
+            svm_acc=jnp.zeros((B, n_hyperplanes), jnp.int32),
+        )
+
+    def strip_payload(self) -> "PacketBatch":
+        """Drop data + intermediates after classification (response packet)."""
+        B = self.batch
+        return dataclasses.replace(
+            self,
+            ptype=jnp.full((B,), PacketType.RESPONSE, jnp.int32),
+            features=jnp.zeros((B, 0), jnp.int32),
+            codes=jnp.zeros((B, 0), jnp.uint32),
+            svm_acc=jnp.zeros((B, 0), jnp.int32),
+        )
+
+
+# --------------------------------------------------------------------------
+# Wire-size model (bytes) — drives the planner's J_O and netsim.
+# --------------------------------------------------------------------------
+BASIC_HEADER_BYTES = 12  # packet_id(4) type(1) mid(1) vid(1) rslt(4) rid(1)
+ETH_IP_BYTES = 34        # enclosing L2/L3 headers
+
+
+def header_bytes(n_features: int, feat_bytes: int = 1, n_trees: int = 0,
+                 code_bytes: int = 4, n_hyperplanes: int = 0, acc_bytes: int = 4) -> int:
+    """ACORN header size with data + intermediate parts."""
+    return (
+        BASIC_HEADER_BYTES
+        + n_features * feat_bytes
+        + n_trees * code_bytes
+        + n_hyperplanes * acc_bytes
+    )
+
+
+def request_bytes(n_features: int, feat_bytes: int = 1, n_trees: int = 0,
+                  n_hyperplanes: int = 0) -> int:
+    return ETH_IP_BYTES + header_bytes(n_features, feat_bytes, n_trees, 4, n_hyperplanes, 4)
+
+
+def response_bytes() -> int:
+    """After the last stage the data/intermediate parts are dropped."""
+    return ETH_IP_BYTES + BASIC_HEADER_BYTES

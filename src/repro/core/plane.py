@@ -1,0 +1,298 @@
+"""The ACORN data plane engine: compile once, reprogram at runtime (paper §6).
+
+A physical switch compiles the *template* P4 program once; afterwards every
+model (re)deployment only rewrites match-action entries.  The TPU-native
+equivalent: ``SwitchEngine`` jits one fixed-shape classification step whose
+table entries are **inputs** (a ``PackedProgram`` pytree), so installing or
+swapping a model is an array update — zero retrace (asserted by tests via
+``cache_size() == 1``).
+
+Like the paper's Fig. 5 data plane, one engine hosts *both* pipelines
+simultaneously — a tree pipeline (dt_layer scan → dt_predict →
+multitree_voting) and an SVM pipeline (svm_mul partials → native adds →
+svm_predict) — and each packet selects its result by MID.  Non-request
+packets pass through untouched (forwarding is unaffected).
+
+Distribution hooks: a ``PackedProgram`` can be *partial* — only the tables of
+the program stages assigned to this device are installed; status codes and
+SVM partial sums travel in the ``PacketBatch`` intermediates, so a packet
+finishes classification after visiting every assigned device in path order
+(see ``distributed_plane.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.packets import PacketBatch, PacketType
+from repro.core.translator import MID_SVM, TableProgram
+from repro.kernels import ops
+
+__all__ = ["PlaneProfile", "PackedProgram", "SwitchEngine", "empty_program", "install_program"]
+
+_SENTINEL = np.uint32(0xFFFFFFFF)
+
+
+@dataclasses.dataclass(frozen=True)
+class PlaneProfile:
+    """Fixed template shapes — the operator's compile-time knobs (paper §3.2:
+    "the size of the data part is decided by the maximum number of supported
+    features, which can be configured by the network operator")."""
+
+    max_features: int = 60       # paper: up to 60 features
+    feature_width: int = 8       # quantization bits
+    max_trees: int = 8
+    max_layers: int = 32         # paper: tree depth up to 32
+    max_entries_per_layer: int = 128   # 2 * nodes per layer
+    max_leaves: int = 256        # dt_predict entries per tree
+    max_classes: int = 32
+    max_hyperplanes: int = 12    # svm_predict direct table = 2^H entries
+    levels: int = 256
+
+    def __post_init__(self):
+        if self.max_hyperplanes > 16:
+            raise ValueError("svm_predict direct table capped at 2^16 entries")
+        if self.max_layers > 32:
+            raise ValueError("status code is 32-bit (paper: 16-32 bit bitstring)")
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PackedProgram:
+    """Entry arrays for one engine — the runtime-swappable 'flow table' state.
+
+    Layouts use leading layer axis [L, T, E] so the engine scans over layers.
+    """
+
+    # tree pipeline
+    dt_cv: jax.Array       # uint32 [L, T, E]
+    dt_cm: jax.Array       # uint32 [L, T, E]
+    dt_fid: jax.Array      # int32 [L, T, E]
+    dt_flo: jax.Array      # int32 [L, T, E]
+    dt_fhi: jax.Array      # int32 [L, T, E]
+    dt_bit: jax.Array      # uint32 [L, T, E]
+    dt_valid: jax.Array    # bool [L, T, E]
+    layer_shift: jax.Array  # int32 [L] status-code bit per scan step
+    pred_codes: jax.Array  # uint32 [T, P] sorted
+    pred_labels: jax.Array  # int32 [T, P]
+    pred_valid: jax.Array  # bool [T, P]
+    pred_enable: jax.Array  # bool scalar — this device owns dt_predict/voting
+    vote_weights: jax.Array  # float32 [T]
+    # svm pipeline
+    svm_lut: jax.Array     # int32 [H, F, levels]
+    svm_bias: jax.Array    # int32 [H]
+    svm_hvalid: jax.Array  # bool [H] — which hyperplanes the model defines
+    svm_pred_table: jax.Array  # int32 [2^H]
+    svm_pred_enable: jax.Array  # bool scalar
+
+
+def empty_program(profile: PlaneProfile) -> PackedProgram:
+    L, T, E = profile.max_layers, profile.max_trees, profile.max_entries_per_layer
+    P, H, F = profile.max_leaves, profile.max_hyperplanes, profile.max_features
+    return PackedProgram(
+        dt_cv=jnp.zeros((L, T, E), jnp.uint32),
+        dt_cm=jnp.full((L, T, E), _SENTINEL, jnp.uint32),
+        dt_fid=jnp.zeros((L, T, E), jnp.int32),
+        dt_flo=jnp.ones((L, T, E), jnp.int32),
+        dt_fhi=jnp.zeros((L, T, E), jnp.int32),
+        dt_bit=jnp.zeros((L, T, E), jnp.uint32),
+        dt_valid=jnp.zeros((L, T, E), bool),
+        layer_shift=jnp.arange(L, dtype=jnp.int32),
+        pred_codes=jnp.full((T, P), _SENTINEL, jnp.uint32),
+        pred_labels=jnp.zeros((T, P), jnp.int32),
+        pred_valid=jnp.zeros((T, P), bool),
+        pred_enable=jnp.asarray(False),
+        vote_weights=jnp.zeros((T,), jnp.float32),
+        svm_lut=jnp.zeros((H, F, profile.levels), jnp.int32),
+        svm_bias=jnp.zeros((H,), jnp.int32),
+        svm_hvalid=jnp.zeros((H,), bool),
+        svm_pred_table=jnp.zeros((2**H,), jnp.int32),
+        svm_pred_enable=jnp.asarray(False),
+    )
+
+
+def install_program(
+    packed: PackedProgram,
+    program: TableProgram,
+    profile: PlaneProfile,
+    *,
+    stages: set[int] | None = None,
+) -> PackedProgram:
+    """Write a TableProgram's entries into the engine state (control plane's
+    'update the entries in predefined tables', paper §6.2).
+
+    ``stages`` restricts installation to a subset of program stages (the
+    planner's per-device assignment); ``None`` installs everything.  The
+    *other* pipeline's state in ``packed`` is preserved, so a tree model and
+    an SVM can coexist (paper Fig. 5).
+    """
+    specs = program.stages()
+    if stages is None:
+        stages = set(range(len(specs)))
+    own = [specs[i] for i in sorted(stages)]
+
+    if program.kind in ("dt", "rf"):
+        L, T, E = profile.max_layers, profile.max_trees, profile.max_entries_per_layer
+        P = profile.max_leaves
+        if program.n_trees > T:
+            raise ValueError(f"{program.n_trees} trees > profile max {T}")
+        cv = np.zeros((L, T, E), np.uint32)
+        cm = np.full((L, T, E), _SENTINEL, np.uint32)
+        fid = np.zeros((L, T, E), np.int32)
+        flo = np.ones((L, T, E), np.int32)
+        fhi = np.zeros((L, T, E), np.int32)
+        bit = np.zeros((L, T, E), np.uint32)
+        valid = np.zeros((L, T, E), bool)
+        owned_pairs = {
+            (tab.tree, tab.layer) for s in own for tab in s.tables if tab.kind == "dt_layer"
+        }
+        for t, layers in enumerate(program.dt_layers):
+            for lt in layers:
+                if (t, lt.layer) not in owned_pairs:
+                    continue
+                n = lt.n_entries
+                if lt.layer >= L:
+                    raise ValueError(f"layer {lt.layer} > profile max {L}")
+                if n > E:
+                    raise ValueError(f"{n} entries at layer {lt.layer} > profile max {E}")
+                cv[lt.layer, t, :n] = lt.code_value
+                cm[lt.layer, t, :n] = lt.code_mask
+                fid[lt.layer, t, :n] = lt.fid
+                flo[lt.layer, t, :n] = lt.f_lo
+                fhi[lt.layer, t, :n] = lt.f_hi
+                bit[lt.layer, t, :n] = lt.set_bit
+                valid[lt.layer, t, :n] = True
+        own_predict = any(tab.kind == "dt_predict" for s in own for tab in s.tables)
+        pc = np.full((T, P), _SENTINEL, np.uint32)
+        pl_ = np.zeros((T, P), np.int32)
+        pv = np.zeros((T, P), bool)
+        w = np.zeros((T,), np.float32)
+        if own_predict:
+            for p in program.dt_predicts:
+                n = p.n_entries
+                if n > P:
+                    raise ValueError(f"{n} leaves > profile max {P}")
+                pc[p.tree, :n] = p.codes
+                pl_[p.tree, :n] = p.labels
+                pv[p.tree, :n] = True
+            if program.voting is not None:
+                w[: program.n_trees] = program.voting.weights
+            else:
+                w[0] = 1.0
+        return dataclasses.replace(
+            packed,
+            dt_cv=jnp.asarray(cv), dt_cm=jnp.asarray(cm), dt_fid=jnp.asarray(fid),
+            dt_flo=jnp.asarray(flo), dt_fhi=jnp.asarray(fhi), dt_bit=jnp.asarray(bit),
+            dt_valid=jnp.asarray(valid),
+            pred_codes=jnp.asarray(pc), pred_labels=jnp.asarray(pl_),
+            pred_valid=jnp.asarray(pv), pred_enable=jnp.asarray(own_predict),
+            vote_weights=jnp.asarray(w),
+        )
+
+    if program.kind == "svm":
+        H, F, Lev = profile.max_hyperplanes, profile.max_features, profile.levels
+        if program.n_hyperplanes > H:
+            raise ValueError(f"{program.n_hyperplanes} hyperplanes > profile max {H}")
+        if program.n_features > F:
+            raise ValueError(f"{program.n_features} features > profile max {F}")
+        lut = np.zeros((H, F, Lev), np.int32)
+        # Ownership by stage (matches TableProgram.stages()/svm_stage_muls()).
+        stage_muls = program.svm_stage_muls()
+        owned_flat = set()
+        for si in sorted(stages):
+            if si < len(stage_muls):
+                owned_flat.update(stage_muls[si])
+        for k in owned_flat:
+            m = program.svm_muls[k]
+            lut[m.hyperplane, m.feature, : m.n_entries] = m.lut
+        own_pred = any(tab.kind == "svm_predict" for s in own for tab in s.tables)
+        bias = np.zeros((H,), np.int32)
+        tbl = np.zeros((2**H,), np.int32)
+        if own_pred:
+            bias[: program.n_hyperplanes] = program.svm_bias
+            sp = program.svm_predict
+            if sp.table is None:
+                raise ValueError("svm_predict table too large for direct materialization")
+            tbl[: sp.table.shape[0]] = sp.table
+        hvalid = np.zeros((H,), bool)
+        hvalid[: program.n_hyperplanes] = True
+        return dataclasses.replace(
+            packed,
+            svm_lut=jnp.asarray(lut),
+            svm_bias=jnp.asarray(bias),
+            svm_hvalid=jnp.asarray(hvalid),
+            svm_pred_table=jnp.asarray(tbl),
+            svm_pred_enable=jnp.asarray(own_pred),
+        )
+
+    raise ValueError(f"unknown program kind {program.kind}")
+
+
+# --------------------------------------------------------------------------
+# The jitted classification step
+# --------------------------------------------------------------------------
+def _classify_impl(packed: PackedProgram, pb: PacketBatch, *, n_classes: int,
+                   mode: str | None) -> PacketBatch:
+    feats = pb.features
+
+    # ---- tree pipeline: scan the dt_layer tables over layers ----
+    def layer_step(codes, xs):
+        cv, cm, fid, flo, fhi, bit, valid, shift = xs
+        new = ops.tcam_match(codes, feats, cv, cm, fid, flo, fhi, bit, valid,
+                             shift, mode=mode)
+        return new, None
+
+    xs = (packed.dt_cv, packed.dt_cm, packed.dt_fid, packed.dt_flo,
+          packed.dt_fhi, packed.dt_bit, packed.dt_valid, packed.layer_shift)
+    codes, _ = jax.lax.scan(layer_step, pb.codes, xs)
+
+    tree_label, _per_tree = ops.forest_predict_vote(
+        codes, packed.pred_codes, packed.pred_labels, packed.pred_valid,
+        packed.vote_weights, n_classes, mode=mode)
+    tree_result = jnp.where(packed.pred_enable, tree_label, -1)
+
+    # ---- svm pipeline: LUT partials + native adds ----
+    partial = ops.svm_lookup(feats, packed.svm_lut, jnp.zeros_like(packed.svm_bias),
+                             mode=mode)
+    acc = pb.svm_acc + partial
+    sums = acc + packed.svm_bias[None, :]
+    signs = ((sums >= 0) & packed.svm_hvalid[None, :]).astype(jnp.int32)
+    sign_code = (signs << jnp.arange(signs.shape[1])[None, :]).sum(axis=1)
+    svm_result = jnp.where(packed.svm_pred_enable, packed.svm_pred_table[sign_code], -1)
+
+    # ---- result select + forwarding passthrough ----
+    is_req = pb.ptype == PacketType.REQUEST
+    result = jnp.where(pb.mid == MID_SVM, svm_result, tree_result)
+    rslt = jnp.where(is_req & (result >= 0), result, pb.rslt)
+    return dataclasses.replace(pb, codes=codes, svm_acc=acc, rslt=rslt)
+
+
+class SwitchEngine:
+    """One programmable data plane: jit-compiled once per (profile, batch shape)."""
+
+    def __init__(self, profile: PlaneProfile, *, mode: str | None = None) -> None:
+        self.profile = profile
+        self.mode = mode
+        self._fn = jax.jit(
+            functools.partial(
+                _classify_impl, n_classes=profile.max_classes, mode=mode
+            )
+        )
+
+    def classify(self, packed: PackedProgram, batch: PacketBatch) -> PacketBatch:
+        return self._fn(packed, batch)
+
+    def cache_size(self) -> int:
+        """Number of distinct traces — must stay 1 across model swaps."""
+        return self._fn._cache_size()
+
+    def empty(self) -> PackedProgram:
+        return empty_program(self.profile)
+
+    def install(self, packed: PackedProgram, program: TableProgram,
+                stages: set[int] | None = None) -> PackedProgram:
+        return install_program(packed, program, self.profile, stages=stages)

@@ -1,0 +1,11 @@
+"""Dataset substrate.
+
+* ``synth`` — seeded synthetic stand-ins for the paper's 10 datasets
+  (offline container; shapes per paper Table 9).
+* ``tokens`` — deterministic, resumable synthetic LM token pipeline used by
+  the training loop (cursor-addressable: restart never replays or skips).
+"""
+from repro.data.synth import DATASETS, load_dataset, make_classification
+from repro.data.tokens import TokenPipeline
+
+__all__ = ["DATASETS", "load_dataset", "make_classification", "TokenPipeline"]

@@ -1,0 +1,9 @@
+from repro.distributed.sharding import (
+    batch_spec,
+    dp_axes,
+    opt_specs,
+    param_specs,
+    state_specs,
+)
+
+__all__ = ["param_specs", "opt_specs", "state_specs", "batch_spec", "dp_axes"]

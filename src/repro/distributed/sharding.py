@@ -1,0 +1,173 @@
+"""Sharding rules: param-tree paths -> PartitionSpec over ("pod","data","model").
+
+The layout is FSDP x TP (+ EP for MoE):
+
+* matmul weights shard their *input-feature* axis over ``data`` (ZeRO-3
+  weight sharding — all-gathered per layer inside the scan) and their
+  *output-feature* axis over ``model`` (Megatron tensor parallel); row-
+  parallel weights ("wo", "wd", "cv", "w_out") are transposed in the rule.
+* MoE expert stacks shard the expert axis over ``model`` when it divides
+  evenly (expert parallelism: qwen3 128e/16); otherwise fall back to plain
+  FSDP x TP on the (D, F) axes (grok 8e on a 16-way model axis).
+* 1-D / small tensors (norms, biases, per-channel gates) replicate.
+* ``pod`` is a pure data-parallel axis: batch shards over ("pod","data"),
+  parameters are replicated across pods (cross-pod gradient all-reduce is
+  the only pod-axis collective — DESIGN.md §5).
+
+Rules are *name-driven* with shape-divisibility guards, so every arch in the
+pool maps without per-arch tables, and a failed guard degrades to
+replication instead of a lowering error.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ArchConfig
+
+__all__ = ["param_specs", "opt_specs", "state_specs", "batch_spec", "dp_axes"]
+
+# weight name -> which logical axis gets "model": "col" shards the last axis,
+# "row" shards the second-to-last.
+_COL = {"wq", "wk", "wv", "wg", "wu", "xq", "xk", "xv", "ck", "cr",
+        "w_gate", "w_in", "wr", "wa", "wi", "w_lora_a"}
+_ROW = {"wo", "wd", "xo", "cv", "w_out", "w_lora_b"}
+
+
+def dp_axes(multi_pod: bool):
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def _divisible(n: int, mesh_shape: dict, axis: str) -> bool:
+    return axis in mesh_shape and n % mesh_shape[axis] == 0
+
+
+def _spec_for(path: tuple[str, ...], shape: tuple[int, ...], mesh_shape: dict,
+              cfg: ArchConfig) -> P:
+    name = path[-1]
+    nd = len(shape)
+    md, dt = mesh_shape.get("model", 1), mesh_shape.get("data", 1)
+
+    if name == "embed":  # [V, D] — vocab over model (Megatron embedding)
+        if _divisible(shape[0], mesh_shape, "model"):
+            return P("model", None)
+        return P(None, "model") if _divisible(shape[1], mesh_shape, "model") else P()
+    if name == "head":   # [D, V]
+        if _divisible(shape[1], mesh_shape, "model") and _divisible(shape[0], mesh_shape, "data"):
+            return P("data", "model")
+        return P(None, "model") if _divisible(shape[1], mesh_shape, "model") else P()
+    if name == "enc_pos":
+        return P()
+
+    # MoE expert stacks: [L, E, D, F] / [L, E, F, D]
+    if name in ("wg", "wu", "wd") and nd == 4:
+        L, E = shape[0], shape[1]
+        if _divisible(E, mesh_shape, "model"):
+            # expert parallelism + FSDP on the wider matrix axis
+            wide = 2 if shape[2] >= shape[3] else 3
+            spec = [None, "model", None, None]
+            if _divisible(shape[wide], mesh_shape, "data"):
+                spec[wide] = "data"
+            return P(*spec)
+        # fallback: FSDP x TP on (D, F)
+        col = name in ("wg", "wu")
+        d_ax, f_ax = (2, 3) if col else (3, 2)
+        spec = [None, None, None, None]
+        if _divisible(shape[d_ax], mesh_shape, "data"):
+            spec[d_ax] = "data"
+        if _divisible(shape[f_ax], mesh_shape, "model"):
+            spec[f_ax] = "model"
+        return P(*spec)
+    if name == "router":  # [L, D, E]
+        return P(None, "data", None) if _divisible(shape[1], mesh_shape, "data") else P()
+
+    if name in _COL and nd >= 2:
+        spec = [None] * nd
+        model_ok = _divisible(shape[-1], mesh_shape, "model")
+        if name in ("wk", "wv", "xk", "xv"):
+            # KV projections: sharding the flat (Hkv*hd) axis more ways than
+            # there are KV heads splits head_dim — GSPMD then replicates the
+            # attention logits (observed 20 GB/layer traffic).  Only shard
+            # when whole heads land on each shard.
+            model_ok = model_ok and cfg.n_kv % max(md, 1) == 0
+        if model_ok:
+            spec[-1] = "model"
+        if _divisible(shape[-2], mesh_shape, "data"):
+            spec[-2] = "data"
+        return P(*spec)
+    if name in _ROW and nd >= 2:
+        spec = [None] * nd
+        if _divisible(shape[-2], mesh_shape, "model"):
+            spec[-2] = "model"
+        if _divisible(shape[-1], mesh_shape, "data"):
+            spec[-1] = "data"
+        return P(*spec)
+    return P()  # norms, gates, biases, conv taps: replicated
+
+
+def param_specs(cfg: ArchConfig, mesh) -> dict:
+    """PartitionSpec tree matching ``init_params_shape(cfg)``."""
+    from repro.models.transformer import init_params_shape
+
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    shapes = init_params_shape(cfg)
+
+    def walk(path, leaf):
+        names = tuple(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        return _spec_for(names, leaf.shape, mesh_shape, cfg)
+
+    return jax.tree_util.tree_map_with_path(walk, shapes)
+
+
+def opt_specs(pspecs) -> dict:
+    """Optimizer moments shard exactly like their parameters."""
+    return {"m": pspecs, "v": pspecs, "step": P()}
+
+
+def batch_spec(multi_pod: bool, *, n_micro: bool = False) -> P:
+    dp = dp_axes(multi_pod)
+    return P(None, dp, None) if n_micro else P(dp, None)
+
+
+def state_specs(cfg: ArchConfig, mesh, multi_pod: bool, *, batch: int = 8,
+                cache_len: int = 16, split_kv: bool = True) -> dict:
+    """Decode-state sharding: batch over dp axes, heads over model when even.
+
+    Divisibility guards are evaluated on the *real* (batch, cache_len), so a
+    batch-1 long-context cell degrades to replication instead of erroring.
+
+    ``split_kv`` (beyond-paper, §Perf): when the KV-head count does not
+    divide the model axis, shard the cache *sequence* dimension over
+    ``model`` instead — FlashDecoding-style split-KV: every model shard
+    scans 1/16th of the cache and the softmax is combined with small
+    collectives, instead of every shard reading the whole cache.
+    """
+    from repro.models.transformer import init_decode_state
+
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = dp_axes(multi_pod)
+    dp_total = 1
+    for a in dp:
+        dp_total *= mesh_shape.get(a, 1)
+
+    def spec(path, leaf):
+        shape = leaf.shape
+        nd = len(shape)
+        # leading axis is the layer stack; batch is axis 1
+        s = [None] * nd
+        if nd >= 2 and shape[1] % dp_total == 0 and shape[1] > 1:
+            s[1] = dp
+        # KV caches [L, B, T, Hkv, hd]: shard heads over model if divisible
+        md = mesh_shape.get("model", 1)
+        if nd == 5 and shape[3] % md == 0 and shape[3] > 1:
+            s[3] = "model"
+        elif nd == 5 and split_kv and shape[2] % md == 0 and shape[2] > md:
+            s[2] = "model"  # split-KV: shard the cache sequence dim
+        # RWKV state [L, B, H, K, K]
+        if nd == 5 and path and "S" in str(path[-1]) and shape[2] % mesh_shape.get("model", 1) == 0:
+            s[2] = "model"
+            s[3] = None
+        return P(*s)
+
+    shapes = jax.eval_shape(lambda: init_decode_state(cfg, batch, cache_len))
+    return jax.tree_util.tree_map_with_path(spec, shapes)

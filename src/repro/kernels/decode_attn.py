@@ -1,0 +1,118 @@
+"""Pallas TPU kernel: GQA decode attention (flash-decoding style).
+
+Beyond-paper serving hot-spot: one new token's query against a long KV cache.
+Online-softmax over sequence chunks — running (max, denominator, accumulator)
+live in VMEM scratch and persist across the sequential S-chunk grid axis, so
+the cache is streamed HBM→VMEM exactly once per decode step.
+
+Grid: (batch, S chunks).  Per-step VMEM: q [Hq, D] + k/v chunk [Sc, Hkv*D]
+(Sc=512, Hkv=8, D=128 → 2 × 512 KiB bf16) + f32 accumulators.
+
+The q@k contraction is grouped for GQA: q is reshaped [Hkv, G, D] and each KV
+head's chunk multiplies its G query rows on the MXU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["decode_attn_pallas"]
+
+_NEG_INF = -1e30
+
+
+def _kernel(kvlen_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, block_s: int, n_chunks: int):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)            # [Hq, D]
+    k = k_ref[0].astype(jnp.float32)            # [Sc, Hkv, D]
+    v = v_ref[0].astype(jnp.float32)
+    Hq, D = q.shape
+    Sc, Hkv, _ = k.shape
+    G = Hq // Hkv
+
+    qg = q.reshape(Hkv, G, D)
+    # [Hkv, G, Sc] logits, grouped GQA contraction on the MXU.
+    logits = jax.lax.dot_general(
+        qg, k.transpose(1, 2, 0),
+        (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    ) * scale
+    kv_len = kvlen_ref[0, 0]
+    spos = c * block_s + jax.lax.iota(jnp.int32, Sc)
+    mask = (spos < kv_len)[None, None, :]
+    logits = jnp.where(mask, logits, _NEG_INF)
+    logits = logits.reshape(Hq, Sc)
+
+    m_prev = m_ref[...]                          # [Hq, 1]
+    l_prev = l_ref[...]
+    m_cur = jnp.max(logits, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(logits - m_new)                  # [Hq, Sc]
+    p = jnp.where(mask.reshape(1, Sc) | jnp.zeros((Hq, 1), bool), p, 0.0)
+    l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+    pg = p.reshape(Hkv, G, Sc)
+    pv = jax.lax.dot_general(
+        pg, v.transpose(1, 0, 2),
+        (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    ).reshape(Hq, D)
+    acc_ref[...] = acc_ref[...] * alpha + pv
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(c == n_chunks - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def decode_attn_pallas(
+    q: jax.Array,       # [B, Hq, D]
+    k: jax.Array,       # [B, S, Hkv, D]
+    v: jax.Array,
+    kv_len: jax.Array,  # int32 [B]
+    *,
+    block_s: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Hq, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    scale = D ** -0.5
+    pad_s = (-S) % block_s
+    k_p = jnp.pad(k, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+    v_p = jnp.pad(v, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+    S_pad = k_p.shape[1]
+    n_chunks = S_pad // block_s
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, block_s=block_s, n_chunks=n_chunks),
+        grid=(B, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, c: (b, 0)),                    # kv_len
+            pl.BlockSpec((1, Hq, D), lambda b, c: (b, 0, 0)),             # q
+            pl.BlockSpec((1, block_s, Hkv, D), lambda b, c: (b, c, 0, 0)),  # k
+            pl.BlockSpec((1, block_s, Hkv, D), lambda b, c: (b, c, 0, 0)),  # v
+        ],
+        out_specs=pl.BlockSpec((1, Hq, D), lambda b, c: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((Hq, 1), jnp.float32),   # running max
+            pltpu.VMEM((Hq, 1), jnp.float32),   # running denominator
+            pltpu.VMEM((Hq, D), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(kv_len.reshape(B, 1).astype(jnp.int32), q, k_p, v_p)
+    return out

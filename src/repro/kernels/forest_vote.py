@@ -1,0 +1,89 @@
+"""Pallas TPU kernel: fused ``dt_predict`` + ``multitree_voting``.
+
+The switch's exact-match SRAM lookup (status code -> leaf label) is
+re-expressed as a compare-reduce — a content-addressable match, which is what
+the SRAM hash table emulates anyway:
+
+    eq[b,t,p]   = (pred_codes[t,p] == codes[b,t]) & valid[t,p]
+    label[b,t]  = sum_p eq * pred_labels          (at most one p matches)
+
+followed by weighted one-hot voting and an argmax with smaller-class-id tie
+break (matches ``RandomForest.vote``).  Everything is VPU elementwise +
+reductions over VMEM-resident blocks; no gathers.
+
+Grid: (batch blocks,).  Entry tables [T, P] are fully VMEM-resident
+(T<=8, P<=1024 → 32 KiB).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["forest_predict_vote_pallas"]
+
+
+def _kernel(codes_ref, pc_ref, plab_ref, pvalid_ref, w_ref, out_label_ref,
+            out_per_tree_ref, *, n_classes: int):
+    codes = codes_ref[...]                       # [Bb, T] uint32
+    pc = pc_ref[...]                             # [T, P] uint32
+    plab = plab_ref[...]                         # [T, P] int32
+    pvalid = pvalid_ref[...]                     # [T, P] int32
+    eq = (codes[:, :, None] == pc[None]) & (pvalid[None] != 0)   # [Bb, T, P]
+    per_tree = jnp.sum(jnp.where(eq, plab[None], 0), axis=2)     # [Bb, T]
+    out_per_tree_ref[...] = per_tree.astype(jnp.int32)
+    w = w_ref[...]                               # [1, T] f32
+    classes = jax.lax.iota(jnp.int32, n_classes)
+    onehot = (per_tree[:, :, None] == classes[None, None, :]).astype(jnp.float32)
+    scores = jnp.sum(onehot * w[0][None, :, None], axis=1)       # [Bb, C]
+    # argmax with ties to the smaller class id
+    best = jnp.max(scores, axis=1, keepdims=True)
+    is_best = scores >= best
+    first_best = is_best & (jnp.cumsum(is_best.astype(jnp.int32), axis=1) == 1)
+    out_label_ref[...] = jnp.sum(
+        jnp.where(first_best, classes[None, :], 0), axis=1, keepdims=True
+    ).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("n_classes", "block_b", "interpret"))
+def forest_predict_vote_pallas(
+    codes: jax.Array,        # uint32 [B, T]
+    pred_codes: jax.Array,   # uint32 [T, P]
+    pred_labels: jax.Array,  # int32 [T, P]
+    pred_valid: jax.Array,   # bool [T, P]
+    weights: jax.Array,      # float32 [T]
+    n_classes: int,
+    *,
+    block_b: int = 256,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    B, T = codes.shape
+    P = pred_codes.shape[1]
+    pad_b = (-B) % block_b
+    codes_p = jnp.pad(codes, ((0, pad_b), (0, 0)))
+    B_pad = codes_p.shape[0]
+
+    label, per_tree = pl.pallas_call(
+        functools.partial(_kernel, n_classes=n_classes),
+        grid=(B_pad // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, T), lambda i: (i, 0)),
+            pl.BlockSpec((T, P), lambda i: (0, 0)),
+            pl.BlockSpec((T, P), lambda i: (0, 0)),
+            pl.BlockSpec((T, P), lambda i: (0, 0)),
+            pl.BlockSpec((1, T), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, T), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B_pad, 1), jnp.int32),
+            jax.ShapeDtypeStruct((B_pad, T), jnp.int32),
+        ],
+        interpret=interpret,
+    )(codes_p, pred_codes, pred_labels, pred_valid.astype(jnp.int32),
+      weights.reshape(1, -1).astype(jnp.float32))
+    return label[:B, 0], per_tree[:B]

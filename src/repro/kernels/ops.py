@@ -1,0 +1,60 @@
+"""Public kernel API: jit'd wrappers that dispatch Pallas vs the jnp oracle.
+
+On TPU the Pallas path compiles natively; on CPU (this container) the default
+is the XLA-compiled ``ref`` oracle, with ``mode="interpret"`` available to
+execute the actual Pallas kernel bodies in the interpreter (the kernel-sweep
+tests do exactly that and ``assert_allclose`` against ``ref``).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.decode_attn import decode_attn_pallas
+from repro.kernels.forest_vote import forest_predict_vote_pallas
+from repro.kernels.svm_lookup import svm_lookup_pallas
+from repro.kernels.tcam_match import tcam_match_pallas
+
+__all__ = ["tcam_match", "svm_lookup", "forest_predict_vote", "decode_attn"]
+
+
+def _resolve(mode: str | None) -> str:
+    if mode is not None:
+        return mode
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def tcam_match(codes, features, code_value, code_mask, fid, f_lo, f_hi,
+               set_bit, valid, shift, *, mode: str | None = None):
+    m = _resolve(mode)
+    if m == "ref":
+        return ref.tcam_match(codes, features, code_value, code_mask, fid,
+                              f_lo, f_hi, set_bit, valid, shift)
+    return tcam_match_pallas(codes, features, code_value, code_mask, fid,
+                             f_lo, f_hi, set_bit, valid, shift,
+                             interpret=(m == "interpret"))
+
+
+def svm_lookup(features, lut, bias, *, mode: str | None = None):
+    m = _resolve(mode)
+    if m == "ref":
+        return ref.svm_lookup(features, lut, bias)
+    return svm_lookup_pallas(features, lut, bias, interpret=(m == "interpret"))
+
+
+def forest_predict_vote(codes, pred_codes, pred_labels, pred_valid, weights,
+                        n_classes, *, mode: str | None = None):
+    m = _resolve(mode)
+    if m == "ref":
+        return ref.forest_predict_vote(codes, pred_codes, pred_labels,
+                                       pred_valid, weights, n_classes)
+    return forest_predict_vote_pallas(codes, pred_codes, pred_labels,
+                                      pred_valid, weights, n_classes,
+                                      interpret=(m == "interpret"))
+
+
+def decode_attn(q, k, v, kv_len, *, mode: str | None = None):
+    m = _resolve(mode)
+    if m == "ref":
+        return ref.decode_attn(q, k, v, kv_len)
+    return decode_attn_pallas(q, k, v, kv_len, interpret=(m == "interpret"))

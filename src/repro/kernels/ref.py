@@ -1,0 +1,111 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function is the semantic ground truth; kernels in this package must
+``assert_allclose`` against these over shape/dtype sweeps (tests/test_kernels*).
+They are also the engine's CPU execution path — the dry-run and the paper
+benchmarks run these through XLA, while the Pallas versions target TPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["tcam_match", "svm_lookup", "forest_predict_vote", "decode_attn"]
+
+
+def tcam_match(
+    codes: jax.Array,      # uint32 [B, T]
+    features: jax.Array,   # int32 [B, F]
+    code_value: jax.Array,  # uint32 [T, E]
+    code_mask: jax.Array,   # uint32 [T, E]
+    fid: jax.Array,         # int32 [T, E]
+    f_lo: jax.Array,        # int32 [T, E]
+    f_hi: jax.Array,        # int32 [T, E]
+    set_bit: jax.Array,     # uint32 [T, E]
+    valid: jax.Array,       # bool [T, E]
+    shift: jax.Array,       # int32 scalar — which status-code bit this layer writes
+) -> jax.Array:
+    """One ``dt_layer`` ternary lookup for B packets × T trees.
+
+    Entries are pre-sorted priority-descending, so "first matching entry" ==
+    "highest-priority match" (the TCAM contract).  No match => code unchanged
+    (that is how early leaves fall through, paper §4.1).
+    """
+    f = features[:, fid]                                   # [B, T, E]
+    code_ok = (codes[:, :, None] & code_mask[None]) == code_value[None]
+    ok = code_ok & (f >= f_lo[None]) & (f <= f_hi[None]) & valid[None]
+    hit = ok.any(axis=-1)
+    first = jnp.argmax(ok, axis=-1)                        # [B, T]
+    bit = jnp.take_along_axis(
+        jnp.broadcast_to(set_bit[None], ok.shape), first[..., None], axis=-1
+    )[..., 0].astype(jnp.uint32)
+    new = codes | (bit << shift.astype(jnp.uint32))
+    return jnp.where(hit, new, codes)
+
+
+def svm_lookup(
+    features: jax.Array,  # int32 [B, F]
+    lut: jax.Array,       # int32 [H, F, L]  precomputed products
+    bias: jax.Array,      # int32 [H]
+) -> jax.Array:
+    """``svm_mul`` exact-match lookups + native-adder hyperplane sums.
+
+    Returns int32 sums [B, H]; the sign bit of each is the hyperplane code
+    (paper §4.3: "extracts the highest bits as the code for the hyperplanes").
+    """
+    B, F = features.shape
+    # lut[h, f, features[b, f]] summed over f
+    per_f = jnp.take_along_axis(
+        lut.transpose(1, 2, 0)[None],                  # [1, F, L, H]
+        features[:, :, None, None].astype(jnp.int32),  # [B, F, 1, 1]
+        axis=2,
+    )[:, :, 0, :]                                      # [B, F, H]
+    return per_f.sum(axis=1).astype(jnp.int32) + bias[None, :]
+
+
+def forest_predict_vote(
+    codes: jax.Array,        # uint32 [B, T] final status codes
+    pred_codes: jax.Array,   # uint32 [T, P] sorted ascending (pad: 0xFFFFFFFF)
+    pred_labels: jax.Array,  # int32 [T, P]
+    pred_valid: jax.Array,   # bool [T, P]
+    weights: jax.Array,      # float32 [T] voting weights (0 disables a tree)
+    n_classes: int,
+) -> tuple[jax.Array, jax.Array]:
+    """``dt_predict`` (exact match via binary search) + ``multitree_voting``.
+
+    Returns (final_label int32 [B], per_tree_labels int32 [B, T]).
+    Argmax ties break to the smaller class id (matches RandomForest.vote).
+    """
+    def one_tree(c, pc, pl, pv):
+        pos = jnp.clip(jnp.searchsorted(pc, c), 0, pc.shape[0] - 1)
+        found = (pc[pos] == c) & pv[pos]
+        return jnp.where(found, pl[pos], 0)
+
+    per_tree = jax.vmap(one_tree, in_axes=(1, 0, 0, 0), out_axes=1)(
+        codes, pred_codes, pred_labels, pred_valid
+    )  # [B, T]
+    onehot = (per_tree[:, :, None] == jnp.arange(n_classes)[None, None, :])
+    scores = (onehot * weights[None, :, None]).sum(axis=1)  # [B, C]
+    return jnp.argmax(scores, axis=-1).astype(jnp.int32), per_tree.astype(jnp.int32)
+
+
+def decode_attn(
+    q: jax.Array,        # [B, Hq, D]      single-step query
+    k: jax.Array,        # [B, S, Hkv, D]  KV cache
+    v: jax.Array,        # [B, S, Hkv, D]
+    kv_len: jax.Array,   # int32 [B]       valid cache length per sequence
+    scale: float | None = None,
+) -> jax.Array:
+    """GQA decode attention (one new token against the cache), masked softmax."""
+    B, Hq, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qg = q.reshape(B, Hkv, G, D)
+    logits = jnp.einsum("bhgd,bshd->bhgs", qg.astype(jnp.float32), k.astype(jnp.float32))
+    logits = logits * scale
+    mask = (jnp.arange(S)[None, :] < kv_len[:, None])[:, None, None, :]
+    logits = jnp.where(mask, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Hq, D).astype(q.dtype)

@@ -1,0 +1,29 @@
+"""Production mesh builders (functions, not module constants — importing this
+module never touches jax device state)."""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "mesh_chip_count"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 chips per pod (TPU v5e); the multi-pod mesh adds a leading pure-DP
+    'pod' axis of 2 (DCN-connected pods).
+
+    The single-pod mesh explicitly takes the first 256 of the (512 emulated)
+    devices so both meshes can be built in one dry-run process.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    return jax.make_mesh(shape, axes, devices=jax.devices()[:n])
+
+
+def mesh_chip_count(mesh) -> int:
+    n = 1
+    for s in mesh.devices.shape:
+        n *= s
+    return n

@@ -1,0 +1,64 @@
+"""Serving launcher: batched fixed-shape decode with weight hot-swap.
+
+The serving engine follows the ACORN discipline: compile once per
+(arch, batch, cache_len); model/tenant swaps are weight-array updates with
+zero retrace (asserted at runtime).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-7b --smoke \
+      --batch 4 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--swaps", type=int, default=2,
+                    help="simulated tenant/model-version swaps")
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config, smoke_config
+    from repro.models import decode_step, init_decode_state, init_params
+    from repro.models.transformer import encode_kv
+    from repro.serving.serve import greedy_decode
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    B, P = args.batch, args.prompt_len
+    cache = P + args.gen
+    step = jax.jit(lambda p, s, t, pos: decode_step(p, s, t, pos, cfg))
+
+    for tenant in range(args.swaps):
+        params = init_params(cfg, jax.random.key(tenant))
+        prompts = jax.random.randint(jax.random.key(100 + tenant), (B, P), 0,
+                                     cfg.vocab)
+        state = init_decode_state(cfg, B, cache)
+        if cfg.family == "encdec":
+            enc = jnp.zeros((B, cfg.enc_seq, cfg.d_model), cfg.jdtype)
+            state["ek"], state["ev"] = encode_kv(params, enc, cfg)
+        t0 = time.perf_counter()
+        logits = None
+        for t in range(P):
+            logits, state = step(params, state, prompts[:, t:t + 1], jnp.int32(t))
+        first = jnp.argmax(logits[:, -1], -1)[:, None].astype(prompts.dtype)
+        toks = greedy_decode(params, state, first, jnp.int32(P), cfg, args.gen)
+        jax.block_until_ready(toks)
+        dt = time.perf_counter() - t0
+        print(f"tenant {tenant}: {B}x({P} prefill + {args.gen} decode) in "
+              f"{dt*1e3:.0f} ms ({B*args.gen/dt:.0f} tok/s) "
+              f"traces={step._cache_size()}")
+    assert step._cache_size() == 1, "weight swap must not retrace"
+    print(f"served {args.swaps} tenants through ONE compiled decode step")
+
+
+if __name__ == "__main__":
+    main()

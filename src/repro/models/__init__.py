@@ -1,0 +1,25 @@
+"""LM substrate: the 10 assigned architectures as composable JAX modules.
+
+Pure-functional models: parameters are pytrees of arrays (or
+ShapeDtypeStructs for the dry-run), layers are stacked on a leading axis and
+executed with ``lax.scan`` so the HLO stays small at 94 layers, and every
+entry point is a plain function — ``pjit``-able with the sharding rules in
+``repro.distributed.sharding``.
+"""
+from repro.models.common import ArchConfig
+from repro.models.transformer import (
+    init_params,
+    init_params_shape,
+    forward,
+    decode_step,
+    init_decode_state,
+)
+
+__all__ = [
+    "ArchConfig",
+    "init_params",
+    "init_params_shape",
+    "forward",
+    "decode_step",
+    "init_decode_state",
+]

@@ -1,0 +1,149 @@
+"""GQA attention: full-causal, sliding-window, q-chunked (long prefill),
+and single-token decode against a KV cache.
+
+All variants take q [B, S, Hq, D], k/v [B, T, Hkv, D] and fold the GQA group
+into the head axis with a reshape (no materialized repeat).  The q-chunked
+path bounds the logits working set to [B, Hq, chunk, T] — the memory lever
+for 32k prefill (see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["gqa_attention", "decode_attention"]
+
+_NEG = -1e30
+
+
+def _logits_mask(S: int, T: int, offset: int, window: int) -> jax.Array:
+    """Causal (+ optional sliding window) mask [S, T]; query i sits at
+    absolute position offset+i, keys at 0..T-1."""
+    qpos = offset + jnp.arange(S)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    m = kpos <= qpos
+    if window > 0:
+        m &= kpos > qpos - window
+    return m
+
+
+def gqa_attention(
+    q: jax.Array,            # [B, S, Hq, D]
+    k: jax.Array,            # [B, T, Hkv, D]
+    v: jax.Array,            # [B, T, Hkv, D]
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    q_chunk: int = 0,        # 0 = single-shot; >0 = scan over query chunks
+    k_chunk: int = 0,        # >0 = online-softmax over key chunks ("flash")
+) -> jax.Array:
+    B, S, Hq, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = D ** -0.5
+    qg = q.reshape(B, S, Hkv, G, D)
+
+    def block(q_blk, offset):
+        # q_blk [B, s, Hkv, G, D] -> out [B, s, Hkv, G, D]
+        logits = jnp.einsum(
+            "bshgd,bthd->bhgst", q_blk.astype(jnp.float32), k.astype(jnp.float32)
+        ) * scale
+        s = q_blk.shape[1]
+        if causal:
+            m = _logits_mask(s, T, offset, window)
+            logits = jnp.where(m[None, None, None], logits, _NEG)
+        p = jax.nn.softmax(logits, axis=-1)
+        return jnp.einsum("bhgst,bthd->bshgd", p, v.astype(jnp.float32))
+
+    def block_online(q_blk, offset):
+        """FlashAttention-style: scan over key chunks with running
+        (max, denominator, accumulator) — the [s, T] logits never exist as
+        one tensor, which is exactly what the fused TPU kernel guarantees
+        (HBM traffic drops from O(S*T) to O(S*D))."""
+        s = q_blk.shape[1]
+        nk = T // k_chunk
+        qf = q_blk.astype(jnp.float32)
+        kc = k.reshape(B, nk, k_chunk, Hkv, D).transpose(1, 0, 2, 3, 4)
+        vc = v.reshape(B, nk, k_chunk, Hkv, D).transpose(1, 0, 2, 3, 4)
+
+        def kstep(carry, xs):
+            m, l, acc = carry
+            k_b, v_b, j = xs
+            logits = jnp.einsum(
+                "bshgd,bthd->bhgst", qf, k_b.astype(jnp.float32)) * scale
+            if causal:
+                qpos = offset + jnp.arange(s)[:, None]
+                kpos = j * k_chunk + jnp.arange(k_chunk)[None, :]
+                msk = kpos <= qpos
+                if window > 0:
+                    msk &= kpos > qpos - window
+                logits = jnp.where(msk[None, None, None], logits, _NEG)
+            m_new = jnp.maximum(m, logits.max(axis=-1))
+            p = jnp.exp(logits - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            pv = jnp.einsum("bhgst,bthd->bshgd", p, v_b.astype(jnp.float32))
+            acc_new = acc * alpha.transpose(0, 3, 1, 2)[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, G, s), _NEG, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, s), jnp.float32)
+        a0 = jnp.zeros((B, s, Hkv, G, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kstep, (m0, l0, a0),
+                                      (kc, vc, jnp.arange(nk)))
+        return acc / jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+
+    blk = block_online if (k_chunk and T % k_chunk == 0) else block
+    if q_chunk and S > q_chunk and S % q_chunk == 0:
+        n = S // q_chunk
+        qc = qg.reshape(B, n, q_chunk, Hkv, G, D).transpose(1, 0, 2, 3, 4, 5)
+
+        def step(_, xs):
+            q_blk, i = xs
+            return None, blk(q_blk, q_offset + i * q_chunk)
+
+        _, out = jax.lax.scan(step, None, (qc, jnp.arange(n)))
+        out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, Hq, D)
+    else:
+        out = blk(qg, q_offset).reshape(B, S, Hq, D)
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,        # [B, 1, Hq, D]
+    k_cache: jax.Array,  # [B, T, Hkv, D]
+    v_cache: jax.Array,
+    kv_len: jax.Array,   # int32 [B] — valid entries (new token already written)
+    *,
+    window: int = 0,
+    mxu_native: bool = False,
+) -> jax.Array:
+    """One-token GQA decode. With ``window>0`` the cache is a ring buffer of
+    size ``window`` and every slot is valid once warm.
+
+    ``mxu_native``: feed the matmuls bf16 operands with f32 accumulation
+    (what the MXU does natively) instead of materializing f32 copies of the
+    whole cache — §Perf decode lever, numerics validated in tests.
+    """
+    B, _, Hq, D = q.shape
+    T, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    scale = D ** -0.5
+    qg = q.reshape(B, Hkv, G, D)
+    if mxu_native:
+        logits = jnp.einsum("bhgd,bthd->bhgt", qg, k_cache,
+                            preferred_element_type=jnp.float32) * scale
+    else:
+        logits = jnp.einsum(
+            "bhgd,bthd->bhgt", qg.astype(jnp.float32),
+            k_cache.astype(jnp.float32)) * scale
+    mask = jnp.arange(T)[None, :] < kv_len[:, None]
+    logits = jnp.where(mask[:, None, None], logits, _NEG)
+    p = jax.nn.softmax(logits, axis=-1)
+    if mxu_native:
+        out = jnp.einsum("bhgt,bthd->bhgd", p.astype(v_cache.dtype), v_cache,
+                         preferred_element_type=jnp.float32)
+    else:
+        out = jnp.einsum("bhgt,bthd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, Hq, D).astype(q.dtype)

@@ -1,0 +1,91 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+TPU-native adaptation: the gated *diagonal* linear recurrence
+
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t^2) ⊙ (i_t ⊙ x_t),
+    a_t = exp(-c · softplus(Λ) · sigmoid(W_a x_t))
+
+is associative, so training runs ``jax.lax.associative_scan`` (log-depth,
+fully parallel — no CUDA linear-scan kernel needed) and decoding is an O(1)
+state update.  The block wraps the recurrence Griffin-style:
+linear-in → short temporal conv → RG-LRU → (⊙ GeLU gate branch) → linear-out.
+
+State = (h [B, R], conv tail [B, W-1, R]) — constant-size, which is what
+makes ``long_500k`` runnable for this family.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rglru_scan", "rglru_step", "recurrent_block", "recurrent_block_step"]
+
+_C = 8.0
+
+
+def _gates(x, params):
+    """x [..., R] -> (log_a [..., R], gated input [..., R])."""
+    a_gate = jax.nn.sigmoid(x @ params["wa"] + params["ba"])
+    i_gate = jax.nn.sigmoid(x @ params["wi"] + params["bi"])
+    log_a = -_C * jax.nn.softplus(params["lam"]) * a_gate          # <= 0
+    gx = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6)) * (i_gate * x)
+    return log_a, gx
+
+
+def rglru_scan(x: jax.Array, params: dict, h0: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x [B, S, R], h0 [B, R] -> (h_seq [B, S, R], h_last [B, R])."""
+    xf = x.astype(jnp.float32)
+    log_a, gx = _gates(xf, params)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 + a2, jnp.exp(a2) * b1 + b2
+
+    la, b = jax.lax.associative_scan(combine, (log_a, gx), axis=1)
+    h = jnp.exp(la) * h0[:, None, :] + b
+    return h.astype(x.dtype), h[:, -1, :]
+
+
+def rglru_step(x: jax.Array, params: dict, h: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """One decode step: x [B, R], h [B, R] -> (out, new h)."""
+    xf = x.astype(jnp.float32)
+    log_a, gx = _gates(xf, params)
+    h_new = jnp.exp(log_a) * h + gx
+    return h_new.astype(x.dtype), h_new
+
+
+def _conv_scan(x: jax.Array, w: jax.Array, tail: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv width W. x [B, S, R], tail [B, W-1, R]."""
+    W = w.shape[0]
+    xx = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    out = sum(xx[:, i : i + x.shape[1], :] * w[i] for i in range(W))
+    return out, xx[:, -(W - 1):, :]
+
+
+def recurrent_block(x: jax.Array, params: dict, state: dict | None):
+    """Griffin recurrent block over a sequence. x [B, S, D]."""
+    B, S, _ = x.shape
+    R = params["w_in"].shape[1]
+    gate = jax.nn.gelu(x @ params["w_gate"])
+    u = x @ params["w_in"]
+    tail = state["conv"] if state else jnp.zeros((B, params["conv_w"].shape[0] - 1, R), x.dtype)
+    h0 = state["h"] if state else jnp.zeros((B, R), jnp.float32)
+    u, new_tail = _conv_scan(u, params["conv_w"], tail)
+    h_seq, h_last = rglru_scan(u, params["lru"], h0)
+    y = (h_seq.astype(x.dtype) * gate) @ params["w_out"]
+    return y.astype(x.dtype), {"h": h_last, "conv": new_tail.astype(x.dtype)}
+
+
+def recurrent_block_step(x: jax.Array, params: dict, state: dict):
+    """One-token decode. x [B, 1, D]."""
+    xt = x[:, 0, :]
+    gate = jax.nn.gelu(xt @ params["w_gate"])
+    u = xt @ params["w_in"]
+    tail = state["conv"]                                  # [B, W-1, R]
+    W = params["conv_w"].shape[0]
+    window = jnp.concatenate([tail, u[:, None, :].astype(tail.dtype)], axis=1)
+    u_conv = sum(window[:, i, :] * params["conv_w"][i] for i in range(W))
+    out, h_new = rglru_step(u_conv, params["lru"], state["h"])
+    y = (out.astype(x.dtype) * gate) @ params["w_out"]
+    return y[:, None, :].astype(x.dtype), {"h": h_new, "conv": window[:, 1:, :]}

@@ -1,0 +1,167 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free time mixing with
+data-dependent per-channel decay.
+
+TPU-native adaptation (DESIGN.md §2): the CUDA wkv6 kernel is a sequential
+scan; here training uses the *chunkwise-parallel* form — within a chunk the
+decay products become cumulative log-sums and the token-token interaction is
+a masked einsum on the MXU; across chunks a [K, V] state is carried by a
+``lax.scan``.  Decode is the O(1) recurrence.
+
+Per head (K = V = head size):
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    o_t = (r_t · S_{t-1}) + (r_t · (u ⊙ k_t)) v_t
+with w_t = exp(-exp(wbase + lora(x_t))) ∈ (0,1) per channel (data-dependent),
+u the per-channel "bonus" for the current token.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["time_mix", "time_mix_step", "channel_mix", "channel_mix_step"]
+
+
+def _token_shift(x: jax.Array, last: jax.Array | None) -> jax.Array:
+    """x_{t-1} stream: shift right; slot 0 takes ``last`` (decode carry)."""
+    prev = jnp.roll(x, 1, axis=1)
+    first = jnp.zeros_like(x[:, :1]) if last is None else last[:, None, :]
+    return prev.at[:, :1].set(first.astype(x.dtype))
+
+
+def _mix_inputs(x, xprev, params):
+    """RWKV6 token-shift mixing for each projection stream."""
+    out = {}
+    for name in ("r", "k", "v", "g", "w"):
+        mu = params[f"mu_{name}"]
+        out[name] = x + (xprev - x) * mu
+    return out
+
+
+def _decay(xw, params):
+    """Data-dependent per-channel log-decay (<= 0), via a low-rank mlp."""
+    lora = jnp.tanh(xw @ params["w_lora_a"]) @ params["w_lora_b"]
+    return -jnp.exp(params["w_base"].astype(jnp.float32) + lora.astype(jnp.float32))
+
+
+def _project(x, xprev, params, n_heads):
+    m = _mix_inputs(x, xprev, params)
+    B, S, D = x.shape
+    K = D // n_heads
+    r = (m["r"] @ params["wr"]).reshape(B, S, n_heads, K)
+    k = (m["k"] @ params["wk"]).reshape(B, S, n_heads, K)
+    v = (m["v"] @ params["wv"]).reshape(B, S, n_heads, K)
+    g = jax.nn.silu(m["g"] @ params["wg"])
+    logw = _decay(m["w"], params).reshape(B, S, n_heads, K)
+    return r, k, v, g, logw
+
+
+def time_mix(
+    x: jax.Array,          # [B, S, D]
+    params: dict,
+    state: dict | None,    # {"S": [B, H, K, K] f32, "last": [B, D]}
+    *,
+    n_heads: int,
+    chunk: int = 64,
+) -> tuple[jax.Array, dict]:
+    B, S, D = x.shape
+    K = D // n_heads
+    last = state["last"] if state else None
+    S0 = state["S"] if state else jnp.zeros((B, n_heads, K, K), jnp.float32)
+    xprev = _token_shift(x, last)
+    r, k, v, g, logw = _project(x, xprev, params, n_heads)
+    u = params["u"].reshape(n_heads, K)
+
+    pad = (-S) % chunk
+    if pad:
+        z = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        r, k, v, logw = z(r), z(k), z(v), z(logw)
+    T = r.shape[1]
+    n_chunks = T // chunk
+    # [n_chunks, B, H, C, K]
+    resh = lambda a: a.reshape(B, n_chunks, chunk, n_heads, K).transpose(1, 0, 3, 2, 4)
+    rc, kc, vc, wc = resh(r), resh(k), resh(v), resh(logw)
+
+    def chunk_step(Sst, xs):
+        rr, kk, vv, ww = xs                        # [B, H, C, K]
+        rr = rr.astype(jnp.float32)
+        kk = kk.astype(jnp.float32)
+        vv = vv.astype(jnp.float32)
+        cum = jnp.cumsum(ww, axis=2)               # inclusive log-decay products
+        # inter-chunk: r_t decayed by prod_{<t} w = exp(cum - w_t); exponent
+        # <= 0, so underflow-safe.
+        rdec = rr * jnp.exp(cum - ww)
+        o = jnp.einsum("bhck,bhkv->bhcv", rdec, Sst)
+        # intra-chunk (s < t): sum_k r_t k_s exp(cum_{t-1} - cum_s).  Keep the
+        # exponent *joint* in (t, s, k) — factorizing it into exp(cum_t)*
+        # exp(-cum_s) overflows f32 once the chunk accumulates ~90 nats of
+        # decay; the joint form is <= 0 for s < t, hence exact.
+        dec = jnp.exp(
+            jnp.minimum((cum - ww)[:, :, :, None, :] - cum[:, :, None, :, :], 0.0)
+        )                                          # [B, H, C, C, K]
+        att = (rr[:, :, :, None, :] * dec * kk[:, :, None, :, :]).sum(-1)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool), -1)
+        att = jnp.where(mask[None, None], att, 0.0)
+        o = o + jnp.einsum("bhcs,bhsv->bhcv", att, vv)
+        # current-token bonus
+        bonus = jnp.einsum("bhck,bhck->bhc", rr, u[None, :, None, :] * kk)
+        o = o + bonus[..., None] * vv
+        # state to next chunk: S' = diag(prod w) S + sum_s (k_s prod_{>s} w) v_s^T
+        total = cum[:, :, -1:, :]                  # [B, H, 1, K]
+        kdec = kk * jnp.exp(total - cum)
+        Snew = jnp.exp(total[:, :, 0, :])[..., None] * Sst + jnp.einsum(
+            "bhsk,bhsv->bhkv", kdec, vv
+        )
+        return Snew, o
+
+    S_last, o = jax.lax.scan(chunk_step, S0, (rc, kc, vc, wc))
+    o = o.transpose(1, 0, 3, 2, 4).reshape(B, T, n_heads, K)[:, :S]
+    o = _group_norm(o, params).reshape(B, S, D)
+    y = (o * g) @ params["wo"]
+    return y.astype(x.dtype), {"S": S_last, "last": x[:, -1, :].astype(jnp.float32)}
+
+
+def _group_norm(o, params):
+    """Per-head layer norm (RWKV's ln_x)."""
+    mu = o.mean(-1, keepdims=True)
+    var = o.var(-1, keepdims=True)
+    return (o - mu) * jax.lax.rsqrt(var + 64e-5) * params["ln_x_w"] + params["ln_x_b"]
+
+
+def time_mix_step(x: jax.Array, params: dict, state: dict, *, n_heads: int):
+    """One-token decode. x [B, 1, D]."""
+    B, _, D = x.shape
+    K = D // n_heads
+    xprev = state["last"][:, None, :]
+    r, k, v, g, logw = _project(x, xprev.astype(x.dtype), params, n_heads)
+    rr = r[:, 0].astype(jnp.float32)               # [B, H, K]
+    kk = k[:, 0].astype(jnp.float32)
+    vv = v[:, 0].astype(jnp.float32)
+    ww = jnp.exp(logw[:, 0])                       # decay in (0,1)
+    u = params["u"].reshape(n_heads, K)
+    Sst = state["S"]
+    o = jnp.einsum("bhk,bhkv->bhv", rr, Sst)
+    o = o + jnp.einsum("bhk,bhk->bh", rr, u[None] * kk)[..., None] * vv
+    Snew = ww[..., None] * Sst + jnp.einsum("bhk,bhv->bhkv", kk, vv)
+    o = _group_norm(o[:, None].reshape(B, 1, n_heads, K), params).reshape(B, 1, D)
+    y = (o * g) @ params["wo"]
+    return y.astype(x.dtype), {"S": Snew, "last": x[:, -1, :].astype(jnp.float32)}
+
+
+def channel_mix(x: jax.Array, params: dict, state: dict | None):
+    """RWKV FFN: r-gated squared-relu. x [B, S, D]."""
+    last = state["last_c"] if state else None
+    xprev = _token_shift(x, last)
+    xr = x + (xprev - x) * params["mu_cr"]
+    xk = x + (xprev - x) * params["mu_ck"]
+    r = jax.nn.sigmoid(xr @ params["cr"])
+    kk = jnp.square(jax.nn.relu(xk @ params["ck"]))
+    return (r * (kk @ params["cv"])).astype(x.dtype), {"last_c": x[:, -1, :].astype(jnp.float32)}
+
+
+def channel_mix_step(x: jax.Array, params: dict, state: dict):
+    xprev = state["last_c"][:, None, :].astype(x.dtype)
+    xr = x + (xprev - x) * params["mu_cr"]
+    xk = x + (xprev - x) * params["mu_ck"]
+    r = jax.nn.sigmoid(xr @ params["cr"])
+    kk = jnp.square(jax.nn.relu(xk @ params["ck"]))
+    return (r * (kk @ params["cv"])).astype(x.dtype), {"last_c": x[:, -1, :].astype(jnp.float32)}

@@ -1,0 +1,531 @@
+"""Decoder-only / enc-dec LM over the block families, scan-over-layers.
+
+One ``forward``/``decode_step`` pair covers all 10 assigned architectures via
+``ArchConfig.family``:
+
+  dense   — GQA + SwiGLU (internlm2*, starcoder2, granite, chameleon backbone)
+  moe     — GQA + capacity-dispatch MoE (grok-1, qwen3-moe)
+  hybrid  — RecurrentGemma: (RG-LRU, RG-LRU, local-attn) superblocks
+  rwkv    — RWKV-6 time-mix + channel-mix
+  encdec  — whisper backbone: encoder over stub frame embeddings + decoder
+            with self+cross attention
+
+Layers are stacked on a leading axis and executed with ``lax.scan`` (small
+HLO at 94 layers, scan-carry remat point per layer).  Parameters are plain
+pytrees; ``init_params_shape`` gives the allocation-free ShapeDtypeStruct
+tree for the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import rwkv as rwkv_mod
+from repro.models.attention import decode_attention, gqa_attention
+from repro.models.common import ArchConfig, apply_rope, dense_init, rms_norm, rope
+from repro.models.moe import moe_ffn
+from repro.models.rglru import recurrent_block, recurrent_block_step
+
+__all__ = [
+    "init_params",
+    "init_params_shape",
+    "forward",
+    "decode_step",
+    "init_decode_state",
+]
+
+
+# --------------------------------------------------------------------------
+# Init
+# --------------------------------------------------------------------------
+def _attn_params(key, cfg: ArchConfig, L: int, dt):
+    D, hd, Hq, Hkv = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (L, D, Hq * hd), dt),
+        "wk": dense_init(ks[1], (L, D, Hkv * hd), dt),
+        "wv": dense_init(ks[2], (L, D, Hkv * hd), dt),
+        "wo": dense_init(ks[3], (L, Hq * hd, D), dt),
+    }
+
+
+def _mlp_params(key, D: int, F: int, L: int, dt):
+    ks = jax.random.split(key, 3)
+    return {
+        "wg": dense_init(ks[0], (L, D, F), dt),
+        "wu": dense_init(ks[1], (L, D, F), dt),
+        "wd": dense_init(ks[2], (L, F, D), dt),
+    }
+
+
+def _rec_params(key, cfg: ArchConfig, L: int, dt):
+    D, R, W = cfg.d_model, cfg.lru_dim, cfg.conv_width
+    ks = jax.random.split(key, 8)
+    return {
+        "w_gate": dense_init(ks[0], (L, D, R), dt),
+        "w_in": dense_init(ks[1], (L, D, R), dt),
+        "w_out": dense_init(ks[2], (L, R, D), dt),
+        "conv_w": dense_init(ks[3], (L, W, R), jnp.float32, scale=0.3),
+        "lru": {
+            "wa": dense_init(ks[4], (L, R, R), jnp.float32),
+            "ba": jnp.zeros((L, R), jnp.float32),
+            "wi": dense_init(ks[5], (L, R, R), jnp.float32),
+            "bi": jnp.zeros((L, R), jnp.float32),
+            "lam": jnp.linspace(0.5, 4.0, R)[None, :].repeat(L, 0).astype(jnp.float32),
+        },
+    }
+
+
+def _rwkv_params(key, cfg: ArchConfig, L: int, dt):
+    D, F = cfg.d_model, cfg.d_ff
+    H = cfg.n_heads if cfg.n_heads else D // 64
+    K = D // H
+    lora = max(D // 16, 32)
+    ks = jax.random.split(key, 12)
+    p = {
+        "wr": dense_init(ks[0], (L, D, D), dt),
+        "wk": dense_init(ks[1], (L, D, D), dt),
+        "wv": dense_init(ks[2], (L, D, D), dt),
+        "wg": dense_init(ks[3], (L, D, D), dt),
+        "wo": dense_init(ks[4], (L, D, D), dt),
+        "w_lora_a": dense_init(ks[5], (L, D, lora), dt),
+        "w_lora_b": dense_init(ks[6], (L, lora, D), dt, scale=0.01),
+        "w_base": jnp.full((L, D), 0.5, jnp.float32),
+        "u": dense_init(ks[7], (L, D), jnp.float32, scale=0.5),
+        "ln_x_w": jnp.ones((L, H, K), jnp.float32),
+        "ln_x_b": jnp.zeros((L, H, K), jnp.float32),
+        "cr": dense_init(ks[8], (L, D, D), dt),
+        "ck": dense_init(ks[9], (L, D, F), dt),
+        "cv": dense_init(ks[10], (L, F, D), dt),
+    }
+    for i, name in enumerate(("r", "k", "v", "g", "w", "cr", "ck")):
+        p[f"mu_{name if len(name)==1 else name}"] = jnp.full((L, D), 0.5, jnp.float32)
+    return p
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> dict:
+    dt = cfg.jdtype
+    D, V, L = cfg.d_model, cfg.vocab, cfg.n_layers
+    keys = jax.random.split(key, 12)
+    params: dict = {
+        "embed": dense_init(keys[0], (V, D), dt, scale=0.02),
+        "head": dense_init(keys[1], (D, V), dt),
+        "ln_f": jnp.zeros((D,), jnp.float32),
+    }
+    if cfg.family in ("dense",):
+        params["layers"] = {
+            "ln1": jnp.zeros((L, D), jnp.float32),
+            "ln2": jnp.zeros((L, D), jnp.float32),
+            **_attn_params(keys[2], cfg, L, dt),
+            **_mlp_params(keys[3], D, cfg.d_ff, L, dt),
+        }
+    elif cfg.family == "moe":
+        E, F = cfg.n_experts, cfg.moe_d_ff
+        ks = jax.random.split(keys[3], 4)
+        params["layers"] = {
+            "ln1": jnp.zeros((L, D), jnp.float32),
+            "ln2": jnp.zeros((L, D), jnp.float32),
+            **_attn_params(keys[2], cfg, L, dt),
+            "router": dense_init(ks[0], (L, D, E), jnp.float32),
+            "wg": dense_init(ks[1], (L, E, D, F), dt),
+            "wu": dense_init(ks[2], (L, E, D, F), dt),
+            "wd": dense_init(ks[3], (L, E, F, D), dt),
+        }
+    elif cfg.family == "hybrid":
+        n_super, n_tail = L // 3, L % 3
+        params["super"] = {
+            "ln_r1": jnp.zeros((n_super, D), jnp.float32),
+            "ln_r2": jnp.zeros((n_super, D), jnp.float32),
+            "ln_a": jnp.zeros((n_super, D), jnp.float32),
+            "ln_m1": jnp.zeros((n_super, D), jnp.float32),
+            "ln_m2": jnp.zeros((n_super, D), jnp.float32),
+            "ln_m3": jnp.zeros((n_super, D), jnp.float32),
+            "rec1": _rec_params(keys[2], cfg, n_super, dt),
+            "rec2": _rec_params(keys[4], cfg, n_super, dt),
+            **_attn_params(keys[5], cfg, n_super, dt),
+            "mlp1": _mlp_params(keys[6], D, cfg.d_ff, n_super, dt),
+            "mlp2": _mlp_params(keys[7], D, cfg.d_ff, n_super, dt),
+            "mlp3": _mlp_params(keys[8], D, cfg.d_ff, n_super, dt),
+        }
+        if n_tail:
+            params["tail"] = {
+                "ln_r": jnp.zeros((n_tail, D), jnp.float32),
+                "ln_m": jnp.zeros((n_tail, D), jnp.float32),
+                "rec": _rec_params(keys[9], cfg, n_tail, dt),
+                "mlp": _mlp_params(keys[10], D, cfg.d_ff, n_tail, dt),
+            }
+    elif cfg.family == "rwkv":
+        params["layers"] = {
+            "ln1": jnp.zeros((L, D), jnp.float32),
+            "ln2": jnp.zeros((L, D), jnp.float32),
+            **_rwkv_params(keys[2], cfg, L, dt),
+        }
+    elif cfg.family == "encdec":
+        Le = cfg.n_enc_layers
+        params["enc_pos"] = dense_init(keys[4], (cfg.enc_seq, D), dt, scale=0.02)
+        params["enc_layers"] = {
+            "ln1": jnp.zeros((Le, D), jnp.float32),
+            "ln2": jnp.zeros((Le, D), jnp.float32),
+            **_attn_params(keys[2], cfg, Le, dt),
+            **_mlp_params(keys[3], D, cfg.d_ff, Le, dt),
+        }
+        params["ln_enc"] = jnp.zeros((D,), jnp.float32)
+        xa = _attn_params(keys[5], cfg, L, dt)
+        params["layers"] = {
+            "ln1": jnp.zeros((L, D), jnp.float32),
+            "ln_x": jnp.zeros((L, D), jnp.float32),
+            "ln2": jnp.zeros((L, D), jnp.float32),
+            **_attn_params(keys[6], cfg, L, dt),
+            "xq": xa["wq"], "xk": xa["wk"], "xv": xa["wv"], "xo": xa["wo"],
+            **_mlp_params(keys[7], D, cfg.d_ff, L, dt),
+        }
+    else:
+        raise ValueError(cfg.family)
+    return params
+
+
+def init_params_shape(cfg: ArchConfig):
+    """ShapeDtypeStruct tree — zero allocation (dry-run input)."""
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.key(0)))
+
+
+# --------------------------------------------------------------------------
+# Blocks (sequence forward)
+# --------------------------------------------------------------------------
+def _attn_block(x, lp, cfg: ArchConfig, sin, cos, *, window=0, q_chunk=0,
+                causal=True, prefix=""):
+    B, S, D = x.shape
+    hd, Hq, Hkv = cfg.hd, cfg.n_heads, cfg.n_kv
+    g = lambda n: lp[prefix + n] if prefix else lp[n]
+    q = (x @ g("wq")).reshape(B, S, Hq, hd)
+    k = (x @ g("wk")).reshape(B, S, Hkv, hd)
+    v = (x @ g("wv")).reshape(B, S, Hkv, hd)
+    if sin is not None:
+        q, k = apply_rope(q, sin, cos), apply_rope(k, sin, cos)
+    o = gqa_attention(q, k, v, causal=causal, window=window, q_chunk=q_chunk,
+                      k_chunk=cfg.attn_k_chunk)
+    return o.reshape(B, S, Hq * hd) @ g("wo")
+
+
+def _mlp_block(x, lp, prefix=""):
+    g = lambda n: lp[prefix][n] if prefix else lp[n]
+    return (jax.nn.silu(x @ g("wg")) * (x @ g("wu"))) @ g("wd")
+
+
+def _dense_layer(x, lp, cfg, sin, cos, q_chunk):
+    h = x + _attn_block(rms_norm(x, lp["ln1"]), lp, cfg, sin, cos, q_chunk=q_chunk)
+    return h + _mlp_block(rms_norm(h, lp["ln2"]), lp)
+
+
+def _moe_layer(carry, lp, cfg, sin, cos, q_chunk):
+    x, aux = carry
+    h = x + _attn_block(rms_norm(x, lp["ln1"]), lp, cfg, sin, cos, q_chunk=q_chunk)
+    y, a = moe_ffn(
+        rms_norm(h, lp["ln2"]),
+        {"router": lp["router"], "wg": lp["wg"], "wu": lp["wu"], "wd": lp["wd"]},
+        top_k=cfg.top_k,
+        capacity_factor=cfg.capacity_factor,
+        impl=cfg.moe_impl,
+    )
+    return (h + y, aux + a)
+
+
+def _hybrid_super(x, lp, cfg, sin, cos, q_chunk):
+    y, _ = recurrent_block(rms_norm(x, lp["ln_r1"]), lp["rec1"], None)
+    x = x + y
+    x = x + _mlp_block(rms_norm(x, lp["ln_m1"]), lp, "mlp1")
+    y, _ = recurrent_block(rms_norm(x, lp["ln_r2"]), lp["rec2"], None)
+    x = x + y
+    x = x + _mlp_block(rms_norm(x, lp["ln_m2"]), lp, "mlp2")
+    x = x + _attn_block(rms_norm(x, lp["ln_a"]), lp, cfg, sin, cos,
+                        window=cfg.window, q_chunk=q_chunk)
+    x = x + _mlp_block(rms_norm(x, lp["ln_m3"]), lp, "mlp3")
+    return x
+
+
+def _rwkv_layer(x, lp, cfg):
+    H = cfg.n_heads if cfg.n_heads else cfg.d_model // 64
+    y, _ = rwkv_mod.time_mix(rms_norm(x, lp["ln1"]), lp, None, n_heads=H)
+    x = x + y
+    y, _ = rwkv_mod.channel_mix(rms_norm(x, lp["ln2"]), lp, None)
+    return x + y
+
+
+# --------------------------------------------------------------------------
+# Forward (training / prefill)
+# --------------------------------------------------------------------------
+def _scan(fn, x, stack, remat: bool, unroll: bool = False):
+    f = jax.checkpoint(fn) if remat else fn
+
+    def body(carry, lp):
+        return f(carry, lp), None
+
+    out, _ = jax.lax.scan(body, x, stack, unroll=True if unroll else 1)
+    return out
+
+
+def forward(
+    params: dict,
+    tokens: jax.Array,          # int32 [B, S]
+    cfg: ArchConfig,
+    *,
+    enc_inputs: jax.Array | None = None,   # [B, enc_seq, D] (encdec stub frontend)
+    q_chunk: int = 0,
+    remat: bool = True,
+    unroll: bool = False,
+) -> jax.Array:
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    pos = jnp.arange(S)
+    sin, cos = rope(pos, cfg.hd, cfg.rope_theta)
+    sin, cos = sin[None], cos[None]
+
+    if cfg.family == "dense":
+        x = _scan(lambda h, lp: _dense_layer(h, lp, cfg, sin, cos, q_chunk),
+                  x, params["layers"], remat, unroll)
+    elif cfg.family == "moe":
+        x, _aux = _scan(
+            lambda c, lp: _moe_layer(c, lp, cfg, sin, cos, q_chunk),
+            (x, jnp.zeros((), jnp.float32)), params["layers"], remat, unroll)
+    elif cfg.family == "hybrid":
+        x = _scan(lambda h, lp: _hybrid_super(h, lp, cfg, sin, cos, q_chunk),
+                  x, params["super"], remat, unroll)
+        if "tail" in params:
+            def tail_layer(h, lp):
+                y, _ = recurrent_block(rms_norm(h, lp["ln_r"]), lp["rec"], None)
+                h = h + y
+                return h + _mlp_block(rms_norm(h, lp["ln_m"]), lp, "mlp")
+            x = _scan(tail_layer, x, params["tail"], remat, unroll)
+    elif cfg.family == "rwkv":
+        x = _scan(lambda h, lp: _rwkv_layer(h, lp, cfg), x, params["layers"], remat, unroll)
+    elif cfg.family == "encdec":
+        if enc_inputs is None:
+            raise ValueError("encdec needs enc_inputs (frontend stub output)")
+        e = _encode(params, enc_inputs, cfg, remat=remat, unroll=unroll)
+
+        def dec_layer(h, lp):
+            h = h + _attn_block(rms_norm(h, lp["ln1"]), lp, cfg, sin, cos, q_chunk=q_chunk)
+            # cross attention
+            Bq, Sq, D = h.shape
+            hd, Hq, Hkv = cfg.hd, cfg.n_heads, cfg.n_kv
+            q = (rms_norm(h, lp["ln_x"]) @ lp["xq"]).reshape(Bq, Sq, Hq, hd)
+            k = (e @ lp["xk"]).reshape(Bq, -1, Hkv, hd)
+            v = (e @ lp["xv"]).reshape(Bq, -1, Hkv, hd)
+            o = gqa_attention(q, k, v, causal=False)
+            h = h + o.reshape(Bq, Sq, Hq * hd) @ lp["xo"]
+            return h + _mlp_block(rms_norm(h, lp["ln2"]), lp)
+
+        x = _scan(dec_layer, x, params["layers"], remat, unroll)
+    else:
+        raise ValueError(cfg.family)
+
+    x = rms_norm(x, params["ln_f"])
+    return x @ params["head"]
+
+
+def _encode(params, enc_inputs, cfg: ArchConfig, *, remat: bool = True,
+            unroll: bool = False):
+    """Whisper encoder over stub frame embeddings (frontend is a STUB)."""
+    e = enc_inputs + params["enc_pos"][None]
+
+    def enc_layer(h, lp):
+        h = h + _attn_block(rms_norm(h, lp["ln1"]), lp, cfg, None, None, causal=False)
+        return h + _mlp_block(rms_norm(h, lp["ln2"]), lp)
+
+    e = _scan(enc_layer, e, params["enc_layers"], remat, unroll)
+    return rms_norm(e, params["ln_enc"])
+
+
+def encode_kv(params, enc_inputs, cfg: ArchConfig):
+    """Precompute per-decoder-layer cross-attention K/V (decode-time state)."""
+    e = _encode(params, enc_inputs, cfg)
+    B, Se, _ = e.shape
+    hd, Hkv = cfg.hd, cfg.n_kv
+
+    def per_layer(lp):
+        return ((e @ lp["xk"]).reshape(B, Se, Hkv, hd),
+                (e @ lp["xv"]).reshape(B, Se, Hkv, hd))
+
+    ks, vs = jax.vmap(per_layer)(
+        {"xk": params["layers"]["xk"], "xv": params["layers"]["xv"]})
+    return ks, vs
+
+
+# --------------------------------------------------------------------------
+# Decode (one token against caches / recurrent state)
+# --------------------------------------------------------------------------
+def init_decode_state(cfg: ArchConfig, batch: int, cache_len: int) -> dict:
+    dt = cfg.jdtype
+    hd, Hkv, D = cfg.hd, cfg.n_kv, cfg.d_model
+    if cfg.family in ("dense", "moe"):
+        L = cfg.n_layers
+        return {
+            "k": jnp.zeros((L, batch, cache_len, Hkv, hd), dt),
+            "v": jnp.zeros((L, batch, cache_len, Hkv, hd), dt),
+        }
+    if cfg.family == "hybrid":
+        n_super, n_tail = cfg.n_layers // 3, cfg.n_layers % 3
+        R, W = cfg.lru_dim, cfg.conv_width
+        win = min(cfg.window, cache_len)
+        st = {
+            "super": {
+                "h1": jnp.zeros((n_super, batch, R), jnp.float32),
+                "c1": jnp.zeros((n_super, batch, W - 1, R), dt),
+                "h2": jnp.zeros((n_super, batch, R), jnp.float32),
+                "c2": jnp.zeros((n_super, batch, W - 1, R), dt),
+                "k": jnp.zeros((n_super, batch, win, Hkv, hd), dt),
+                "v": jnp.zeros((n_super, batch, win, Hkv, hd), dt),
+            }
+        }
+        if n_tail:
+            st["tail"] = {
+                "h": jnp.zeros((n_tail, batch, R), jnp.float32),
+                "c": jnp.zeros((n_tail, batch, W - 1, R), dt),
+            }
+        return st
+    if cfg.family == "rwkv":
+        H = cfg.n_heads if cfg.n_heads else D // 64
+        K = D // H
+        L = cfg.n_layers
+        return {
+            "S": jnp.zeros((L, batch, H, K, K), jnp.float32),
+            "last": jnp.zeros((L, batch, D), jnp.float32),
+            "last_c": jnp.zeros((L, batch, D), jnp.float32),
+        }
+    if cfg.family == "encdec":
+        L = cfg.n_layers
+        return {
+            "k": jnp.zeros((L, batch, cache_len, Hkv, hd), dt),
+            "v": jnp.zeros((L, batch, cache_len, Hkv, hd), dt),
+            "ek": jnp.zeros((L, batch, cfg.enc_seq, Hkv, hd), dt),
+            "ev": jnp.zeros((L, batch, cfg.enc_seq, Hkv, hd), dt),
+        }
+    raise ValueError(cfg.family)
+
+
+def _decode_attn_layer(x, lp, cache_k, cache_v, pos, cfg, sin, cos, *, ring=False,
+                       window=0):
+    B = x.shape[0]
+    hd, Hq, Hkv = cfg.hd, cfg.n_heads, cfg.n_kv
+    q = (x @ lp["wq"]).reshape(B, 1, Hq, hd)
+    k = (x @ lp["wk"]).reshape(B, 1, Hkv, hd)
+    v = (x @ lp["wv"]).reshape(B, 1, Hkv, hd)
+    if sin is not None:
+        q, k = apply_rope(q, sin, cos), apply_rope(k, sin, cos)
+    T = cache_k.shape[1]
+    slot = (pos % T) if ring else jnp.minimum(pos, T - 1)
+    ck = jax.lax.dynamic_update_slice(cache_k, k, (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache_v, v, (0, slot, 0, 0))
+    kv_len = jnp.full((B,), jnp.minimum(pos + 1, T), jnp.int32)
+    o = decode_attention(q, ck, cv, kv_len, mxu_native=cfg.attn_mxu_native)
+    return (o.reshape(B, 1, Hq * hd) @ lp["wo"]), ck, cv
+
+
+def decode_step(
+    params: dict,
+    state: dict,
+    tokens: jax.Array,   # int32 [B, 1]
+    pos: jax.Array,      # int32 scalar — current position
+    cfg: ArchConfig,
+    *,
+    unroll: bool = False,
+) -> tuple[jax.Array, dict]:
+    B = tokens.shape[0]
+    x = params["embed"][tokens]
+    sin, cos = rope(pos[None], cfg.hd, cfg.rope_theta)
+    sin, cos = sin[None], cos[None]
+
+    if cfg.family in ("dense", "moe"):
+        def body(h, xs):
+            lp, ck, cv = xs
+            a, ck, cv = _decode_attn_layer(
+                rms_norm(h, lp["ln1"]), lp, ck, cv, pos, cfg, sin, cos)
+            h = h + a
+            if cfg.family == "dense":
+                h = h + _mlp_block(rms_norm(h, lp["ln2"]), lp)
+            else:
+                y, _ = moe_ffn(
+                    rms_norm(h, lp["ln2"]),
+                    {"router": lp["router"], "wg": lp["wg"], "wu": lp["wu"], "wd": lp["wd"]},
+                    top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+                    impl=cfg.moe_impl)
+                h = h + y
+            return h, (ck, cv)
+
+        x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], state["k"], state["v"]), unroll=True if unroll else 1)
+        state = {"k": ks, "v": vs}
+    elif cfg.family == "hybrid":
+        def sbody(h, xs):
+            lp, st = xs
+            y, s1 = recurrent_block_step(rms_norm(h, lp["ln_r1"]), lp["rec1"],
+                                         {"h": st["h1"], "conv": st["c1"]})
+            h = h + y
+            h = h + _mlp_block(rms_norm(h, lp["ln_m1"]), lp, "mlp1")
+            y, s2 = recurrent_block_step(rms_norm(h, lp["ln_r2"]), lp["rec2"],
+                                         {"h": st["h2"], "conv": st["c2"]})
+            h = h + y
+            h = h + _mlp_block(rms_norm(h, lp["ln_m2"]), lp, "mlp2")
+            a, ck, cv = _decode_attn_layer(
+                rms_norm(h, lp["ln_a"]), lp, st["k"], st["v"], pos, cfg, sin, cos,
+                ring=True)
+            h = h + a
+            h = h + _mlp_block(rms_norm(h, lp["ln_m3"]), lp, "mlp3")
+            return h, {"h1": s1["h"], "c1": s1["conv"], "h2": s2["h"],
+                       "c2": s2["conv"], "k": ck, "v": cv}
+
+        tail_state = state.get("tail")
+        x, new_super = jax.lax.scan(sbody, x, (params["super"], state["super"]), unroll=True if unroll else 1)
+        state = {"super": new_super}
+        if "tail" in params:
+            def tbody(h, xs):
+                lp, st = xs
+                y, s = recurrent_block_step(rms_norm(h, lp["ln_r"]), lp["rec"],
+                                            {"h": st["h"], "conv": st["c"]})
+                h = h + y
+                h = h + _mlp_block(rms_norm(h, lp["ln_m"]), lp, "mlp")
+                return h, {"h": s["h"], "c": s["conv"]}
+
+            x, new_tail = jax.lax.scan(tbody, x, (params["tail"], tail_state), unroll=True if unroll else 1)
+            state["tail"] = new_tail
+    elif cfg.family == "rwkv":
+        H = cfg.n_heads if cfg.n_heads else cfg.d_model // 64
+
+        def body(h, xs):
+            lp, S_l, last_l, lastc_l = xs
+            y, ts = rwkv_mod.time_mix_step(
+                rms_norm(h, lp["ln1"]), lp,
+                {"S": S_l, "last": last_l}, n_heads=H)
+            h = h + y
+            y, cs = rwkv_mod.channel_mix_step(
+                rms_norm(h, lp["ln2"]), lp, {"last_c": lastc_l})
+            h = h + y
+            return h, (ts["S"], ts["last"], cs["last_c"])
+
+        x, (Ss, lasts, lastcs) = jax.lax.scan(
+            body, x, (params["layers"], state["S"], state["last"], state["last_c"]))
+        state = {"S": Ss, "last": lasts, "last_c": lastcs}
+    elif cfg.family == "encdec":
+        def body(h, xs):
+            lp, ck, cv, ek, ev = xs
+            a, ck, cv = _decode_attn_layer(
+                rms_norm(h, lp["ln1"]), lp, ck, cv, pos, cfg, sin, cos)
+            h = h + a
+            hd, Hq = cfg.hd, cfg.n_heads
+            q = (rms_norm(h, lp["ln_x"]) @ lp["xq"]).reshape(B, 1, Hq, hd)
+            kvl = jnp.full((B,), ek.shape[1], jnp.int32)
+            o = decode_attention(q, ek, ev, kvl)
+            h = h + o.reshape(B, 1, Hq * hd) @ lp["xo"]
+            h = h + _mlp_block(rms_norm(h, lp["ln2"]), lp)
+            return h, (ck, cv)
+
+        x, (ks, vs) = jax.lax.scan(
+            body, x,
+            (params["layers"], state["k"], state["v"], state["ek"], state["ev"]))
+        state = {"k": ks, "v": vs, "ek": state["ek"], "ev": state["ev"]}
+    else:
+        raise ValueError(cfg.family)
+
+    x = rms_norm(x, params["ln_f"])
+    return x @ params["head"], state

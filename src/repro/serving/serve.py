@@ -1,0 +1,50 @@
+"""Serving steps: fixed-shape prefill + one-token decode.
+
+Same runtime-programmability discipline as the ACORN plane: the decode step
+compiles once per (arch, batch, cache_len); swapping model *weights* (new
+checkpoint, new tenant) is an array update, zero retrace.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig
+from repro.models.transformer import decode_step, forward
+
+__all__ = ["make_prefill_step", "make_decode_step"]
+
+
+def make_prefill_step(cfg: ArchConfig, *, q_chunk: int = 1024, unroll: bool = False):
+    """prefill(params, tokens[, enc_inputs]) -> logits [B, S, V].
+
+    q-chunked attention bounds the logits working set for 32k prefill."""
+
+    def prefill(params, tokens, enc_inputs=None):
+        return forward(params, tokens, cfg, enc_inputs=enc_inputs,
+                       q_chunk=q_chunk, remat=False, unroll=unroll)
+
+    return prefill
+
+
+def make_decode_step(cfg: ArchConfig, *, unroll: bool = False):
+    """step(params, state, tokens [B,1], pos) -> (logits [B,1,V], state)."""
+
+    def step(params, state, tokens, pos):
+        return decode_step(params, state, tokens, pos, cfg, unroll=unroll)
+
+    return step
+
+
+def greedy_decode(params, state, first_token, pos0, cfg: ArchConfig, n_steps: int):
+    """Serve-loop helper for examples/tests: greedy argmax continuation."""
+
+    def body(carry, _):
+        state, tok, pos = carry
+        logits, state = decode_step(params, state, tok, pos, cfg)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(tok.dtype)
+        return (state, nxt, pos + 1), nxt[:, 0]
+
+    (_, _, _), toks = jax.lax.scan(body, (state, first_token, pos0), None,
+                                   length=n_steps)
+    return toks.T  # [B, n_steps]

@@ -1,0 +1,4 @@
+from repro.train.step import loss_fn, make_train_step, microbatch_plan
+from repro.train.checkpoint import Checkpointer
+
+__all__ = ["loss_fn", "make_train_step", "microbatch_plan", "Checkpointer"]

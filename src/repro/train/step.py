@@ -1,0 +1,89 @@
+"""Training step: CE loss, gradient accumulation, AdamW — one pjit body.
+
+Gradient accumulation is a ``lax.scan`` over the microbatch axis (activation
+memory = one microbatch; the lever that fits grok train_4k in 16 GB — see
+EXPERIMENTS.md §Dry-run).  ``remat=True`` checkpoints each layer inside the
+model scan, so backward recompute is layer-local.
+
+``microbatch_plan`` picks n_micro from a per-device token budget — a perf
+knob hillclimbed in §Perf.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig
+from repro.models.transformer import forward
+from repro.optim.adamw import AdamWConfig, adamw_update
+
+__all__ = ["loss_fn", "make_train_step", "microbatch_plan"]
+
+
+def loss_fn(params, tokens, labels, cfg: ArchConfig, *, enc_inputs=None,
+            q_chunk: int = 0, remat: bool = True, unroll: bool = False):
+    logits = forward(params, tokens, cfg, enc_inputs=enc_inputs,
+                     q_chunk=q_chunk, remat=remat, unroll=unroll)
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None].astype(jnp.int32), axis=-1)
+    return -ll.mean()
+
+
+def microbatch_plan(cfg: ArchConfig, seq_len: int, global_batch: int,
+                    dp_total: int, *, tokens_per_device: int = 8192) -> int:
+    """n_micro so each device sees <= tokens_per_device tokens per microstep."""
+    per_dev_seqs = max(global_batch // dp_total, 1)
+    seqs_per_micro = max(tokens_per_device // seq_len, 1)
+    n_micro = max(per_dev_seqs // seqs_per_micro, 1)
+    while global_batch % (n_micro) != 0:  # keep the reshape exact
+        n_micro -= 1
+    return max(n_micro, 1)
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig, *, n_micro: int,
+                    q_chunk: int = 0, remat: bool = True, has_enc: bool = False,
+                    unroll: bool = False, grad_specs=None):
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``batch["tokens"]/["labels"]``: [n_micro, B_mb, S]; optional
+    ``batch["enc_inputs"]``: [n_micro, B_mb, enc_seq, D] (whisper stub).
+
+    ``grad_specs``: PartitionSpec tree for the gradient accumulator.  Without
+    it GSPMD may replicate weight gradients (observed: full [D, F] f32 dW on
+    every device) — constraining the accumulator pins dW to the parameter
+    sharding.
+    """
+
+    def constrain(tree):
+        if grad_specs is None:
+            return tree
+        return jax.tree.map(jax.lax.with_sharding_constraint, tree, grad_specs)
+
+    def grads_one(params, tokens, labels, enc):
+        return jax.value_and_grad(loss_fn)(
+            params, tokens, labels, cfg, enc_inputs=enc,
+            q_chunk=q_chunk, remat=remat, unroll=unroll)
+
+    def step(params, opt_state, batch):
+        def micro(carry, xs):
+            loss_sum, grads = carry
+            enc = xs.get("enc_inputs") if has_enc else None
+            loss, g = grads_one(params, xs["tokens"], xs["labels"], enc)
+            grads = constrain(jax.tree.map(jnp.add, grads, constrain(g)))
+            return (loss_sum + loss, grads), None
+
+        zeros = constrain(
+            jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+        (loss_sum, grads), _ = jax.lax.scan(
+            micro, (jnp.zeros((), jnp.float32), zeros), batch,
+            unroll=True if unroll else 1)
+        inv = 1.0 / n_micro
+        grads = jax.tree.map(lambda g: g * inv, grads)
+        loss = loss_sum * inv
+        params, opt_state, om = adamw_update(grads, opt_state, params, opt_cfg)
+        return params, opt_state, {"loss": loss, **om}
+
+    return step

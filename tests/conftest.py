@@ -1,0 +1,27 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
+see 1 device; only launch/dryrun.py (and explicit subprocess tests) set the
+512-device emulation."""
+import numpy as np
+import pytest
+
+from repro.core.mlmodels import Quantizer
+from repro.data import load_dataset
+
+
+@pytest.fixture(scope="session")
+def satdap():
+    Xtr, ytr, Xte, yte = load_dataset("satdap", scale=0.25)
+    q = Quantizer(8).fit(Xtr)
+    return q.transform(Xtr), ytr, q.transform(Xte), yte
+
+
+@pytest.fixture(scope="session")
+def iris():
+    Xtr, ytr, Xte, yte = load_dataset("iris")
+    q = Quantizer(8).fit(Xtr)
+    return q.transform(Xtr), ytr, q.transform(Xte), yte
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

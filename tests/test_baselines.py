@@ -1,0 +1,76 @@
+"""Baseline representation models: Table 3 / Fig. 9 semantics."""
+import numpy as np
+
+from repro.core.baselines import (
+    MAX_FEATURES,
+    acorn_resources,
+    dinc_resources,
+    dinc_shrink_to_fit,
+    leo_resources,
+    switchtree_resources,
+)
+from repro.core.mlmodels import DecisionTree, Quantizer, accuracy
+from repro.data import load_dataset
+
+
+def _tree(n_feat=46, leaves=200, seed=0):
+    Xtr, ytr, _, _ = load_dataset("nsl-kdd", scale=0.03, max_train=4000)
+    q = Quantizer(8).fit(Xtr)
+    Xq = q.transform(Xtr)[:, :n_feat]
+    return DecisionTree(max_depth=12, max_leaf_nodes=leaves,
+                        random_state=seed).fit(Xq, ytr), Xq, ytr
+
+
+def test_table3_feature_limits():
+    assert MAX_FEATURES["acorn"]["dt"] == 46
+    assert MAX_FEATURES["leo"]["dt"] == 10
+    assert MAX_FEATURES["switchtree"]["dt"] == 16
+    assert MAX_FEATURES["dinc"]["rf"] == 20
+    dt, _, _ = _tree(46)
+    assert not switchtree_resources(dt).feasible   # 46 > 16
+    assert not leo_resources(dt).feasible          # 46 > 10
+    assert acorn_resources(dt).tcam_entries > 0
+
+
+def test_leo_uses_more_tcam_than_acorn():
+    dt, _, _ = _tree(46)
+    a, l = acorn_resources(dt), leo_resources(dt)
+    assert l.tcam_entries > 1.5 * a.tcam_entries  # paper: 2-3x
+
+
+def test_acorn_sram_equals_leaves():
+    dt, _, _ = _tree(46)
+    assert acorn_resources(dt).sram_entries == dt.tree_.n_leaves
+
+
+def test_dinc_decision_table_explodes():
+    dt, _, _ = _tree(46, leaves=300)
+    r = dinc_resources(dt, entry_cap=1 << 20)
+    assert not r.feasible                           # factorial growth
+    small, _, _ = _tree(4, leaves=8)
+    assert dinc_resources(small).feasible
+
+
+def test_dinc_shrink_underfits():
+    """Paper §7.3: fitting DINC's table budget forces underfitting."""
+    Xtr, ytr, Xte, yte = load_dataset("digits")
+    q = Quantizer(8).fit(Xtr)
+    Xq, Xteq = q.transform(Xtr), q.transform(Xte)
+    m, rep, leaves = dinc_shrink_to_fit(
+        lambda L: DecisionTree(max_depth=12, max_leaf_nodes=L),
+        Xq, ytr, entry_cap=1 << 20)
+    full = DecisionTree(max_depth=12, max_leaf_nodes=256).fit(Xq, ytr)
+    assert rep.feasible
+    assert accuracy(yte, m.predict(Xteq)) < accuracy(yte, full.predict(Xteq))
+
+
+def test_acorn_tcam_shrinks_with_more_features():
+    """Paper Fig. 9 trend: more features => fewer layers/nodes => fewer TCAM."""
+    tc = {}
+    for nf in (5, 46):
+        Xtr, ytr, _, _ = load_dataset("nsl-kdd", scale=0.03, max_train=4000)
+        q = Quantizer(8).fit(Xtr)
+        Xq = q.transform(Xtr)[:, :nf]
+        dt = DecisionTree(max_depth=12, max_leaf_nodes=200).fit(Xq, ytr)
+        tc[nf] = acorn_resources(dt).tcam_entries
+    assert tc[46] <= tc[5] * 1.3  # not growing with feature count

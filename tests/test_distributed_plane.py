@@ -1,0 +1,108 @@
+"""Distributed plane: plan-sliced programs == single plane; pipelined shard_map
+ring (subprocess with 4 emulated devices) == sequential reference."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+
+from repro.core.distributed_plane import build_device_programs, run_sequential
+from repro.core.mlmodels import RandomForest
+from repro.core.packets import PacketBatch
+from repro.core.plane import PlaneProfile, SwitchEngine
+from repro.core.planner import DeviceModel, plan_program
+from repro.core.topology import fat_tree
+from repro.core.translator import translate
+
+PROF = PlaneProfile(max_features=36, max_trees=4, max_layers=8,
+                    max_entries_per_layer=64, max_leaves=64,
+                    max_classes=8, max_hyperplanes=8)
+
+
+def test_distributed_equals_single_plane(satdap):
+    Xtr, ytr, Xte, _ = satdap
+    rf = RandomForest(n_estimators=4, max_depth=5, max_leaf_nodes=30).fit(Xtr, ytr)
+    prog = translate(rf)
+    net = fat_tree(4)
+    h = net.hosts()
+    plan = plan_program(prog, net, h[0], h[-1],
+                        default_device=DeviceModel(n_stages=4), solver="dp")
+    assert len(plan.device_stages()) >= 3  # actually distributed
+    devs, dps = build_device_programs(prog, plan, PROF)
+    pb = PacketBatch.make_request(Xte, mid=prog.mid, max_features=36,
+                                  n_trees=4, n_hyperplanes=8)
+    out = run_sequential(dps, pb, n_classes=8)
+    assert (np.asarray(out.rslt) == rf.predict(Xte)).all()
+    eng = SwitchEngine(PROF)
+    single = eng.classify(eng.install(eng.empty(), prog), pb)
+    assert (np.asarray(out.rslt) == np.asarray(single.rslt)).all()
+
+
+def test_intermediate_devices_leave_rslt_unset(satdap):
+    """Until the device holding dt_predict is reached, RSLT stays -1 — the
+    packet carries only intermediates (paper App. A)."""
+    Xtr, ytr, Xte, _ = satdap
+    rf = RandomForest(n_estimators=4, max_depth=5, max_leaf_nodes=30).fit(Xtr, ytr)
+    prog = translate(rf)
+    net = fat_tree(4)
+    h = net.hosts()
+    plan = plan_program(prog, net, h[0], h[-1],
+                        default_device=DeviceModel(n_stages=4), solver="dp")
+    devs, dps = build_device_programs(prog, plan, PROF)
+    pb = PacketBatch.make_request(Xte[:32], mid=prog.mid, max_features=36,
+                                  n_trees=4, n_hyperplanes=8)
+    out = run_sequential(dps[:-1], pb, n_classes=8)
+    assert (np.asarray(out.rslt) == -1).all()
+
+
+PIPELINE_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import json
+    import numpy as np, jax
+    from repro.core.distributed_plane import build_device_programs, PipelinedPlane
+    from repro.core.mlmodels import RandomForest, Quantizer
+    from repro.core.packets import PacketBatch
+    from repro.core.plane import PlaneProfile
+    from repro.core.planner import DeviceModel, plan_program
+    from repro.core.topology import fat_tree
+    from repro.core.translator import translate
+    from repro.data import load_dataset
+
+    Xtr, ytr, Xte, yte = load_dataset("satdap", scale=0.15)
+    q = Quantizer(8).fit(Xtr)
+    Xtrq, Xteq = q.transform(Xtr), q.transform(Xte)
+    rf = RandomForest(n_estimators=4, max_depth=5, max_leaf_nodes=30).fit(Xtrq, ytr)
+    prog = translate(rf)
+    net = fat_tree(4); h = net.hosts()
+    plan = plan_program(prog, net, h[0], h[-1],
+                        default_device=DeviceModel(n_stages=4), solver="dp")
+    prof = PlaneProfile(max_features=36, max_trees=4, max_layers=8,
+                        max_entries_per_layer=64, max_leaves=64,
+                        max_classes=8, max_hyperplanes=8)
+    devs, dps = build_device_programs(prog, plan, prof)
+    n_micro, B = 4, 32
+    Xm = Xteq[: n_micro * B]
+    mbs = PacketBatch.make_request(Xm, mid=prog.mid, max_features=36,
+                                   n_trees=4, n_hyperplanes=8)
+    mbs = jax.tree.map(lambda x: x.reshape((n_micro, B) + x.shape[1:]), mbs)
+    pp = PipelinedPlane(dps[: len(jax.devices())], n_classes=8) if len(dps) <= 4 \
+        else None
+    assert pp is not None, f"plan used {len(dps)} devices > 4"
+    out = pp.run(mbs)
+    got = np.asarray(out.rslt).reshape(-1)
+    ok = bool((got == rf.predict(Xm)).all())
+    print(json.dumps({"ok": ok, "n_dev": len(dps)}))
+""")
+
+
+def test_pipelined_plane_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, "-c", PIPELINE_SCRIPT],
+                       capture_output=True, text=True, env=env, timeout=480)
+    assert r.returncode == 0, r.stderr[-2000:]
+    res = json.loads(r.stdout.strip().splitlines()[-1])
+    assert res["ok"], res

@@ -1,0 +1,97 @@
+"""Pallas kernel sweeps: interpret-mode kernel bodies vs pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _rand_tcam(rng, B, T, E, F):
+    codes = jnp.asarray(rng.integers(0, 2**12, (B, T)), jnp.uint32)
+    feats = jnp.asarray(rng.integers(0, 256, (B, F)), jnp.int32)
+    cv = jnp.asarray(rng.integers(0, 2**6, (T, E)), jnp.uint32)
+    cm = jnp.asarray(rng.integers(0, 2**6, (T, E)), jnp.uint32)
+    fid = jnp.asarray(rng.integers(0, F, (T, E)), jnp.int32)
+    flo = jnp.asarray(rng.integers(0, 200, (T, E)), jnp.int32)
+    fhi = flo + jnp.asarray(rng.integers(0, 100, (T, E)), jnp.int32)
+    bit = jnp.asarray(rng.integers(0, 2, (T, E)), jnp.uint32)
+    valid = jnp.asarray(rng.random((T, E)) < 0.9)
+    return codes, feats, cv, cm, fid, flo, fhi, bit, valid
+
+
+@pytest.mark.parametrize("B,T,E,F", [(7, 1, 3, 4), (64, 4, 17, 13),
+                                     (257, 8, 64, 60), (33, 2, 128, 46)])
+def test_tcam_match_sweep(rng, B, T, E, F):
+    args = _rand_tcam(rng, B, T, E, F)
+    shift = jnp.int32(rng.integers(0, 20))
+    r = ref.tcam_match(*args, shift)
+    p = ops.tcam_match(*args, shift, mode="interpret")
+    np.testing.assert_array_equal(np.asarray(r), np.asarray(p))
+
+
+@pytest.mark.parametrize("B,H,F,L", [(5, 1, 3, 16), (64, 3, 14, 64),
+                                     (130, 8, 46, 256), (16, 12, 8, 256)])
+def test_svm_lookup_sweep(rng, B, H, F, L):
+    feats = jnp.asarray(rng.integers(0, L, (B, F)), jnp.int32)
+    lut = jnp.asarray(rng.integers(-60_000, 60_000, (H, F, L)), jnp.int32)
+    bias = jnp.asarray(rng.integers(-10_000, 10_000, (H,)), jnp.int32)
+    r = ref.svm_lookup(feats, lut, bias)
+    p = ops.svm_lookup(feats, lut, bias, mode="interpret")
+    np.testing.assert_array_equal(np.asarray(r), np.asarray(p))
+
+
+@pytest.mark.parametrize("B,T,P,C", [(9, 1, 4, 2), (70, 4, 32, 5),
+                                     (300, 8, 256, 25)])
+def test_forest_vote_sweep(rng, B, T, P, C):
+    pc = np.sort(
+        rng.choice(2**16, size=(T, P), replace=False).astype(np.uint32), axis=1)
+    plab = rng.integers(0, C, (T, P)).astype(np.int32)
+    pv = np.ones((T, P), bool)
+    pv[:, -1] = False
+    hit = rng.integers(0, P - 1, (B, T))
+    codes = pc[np.arange(T)[None, :], hit]
+    # some misses
+    codes[: B // 4] = 0xFFFFFFFE
+    w = rng.random(T).astype(np.float32)
+    args = (jnp.asarray(codes), jnp.asarray(pc), jnp.asarray(plab),
+            jnp.asarray(pv), jnp.asarray(w))
+    r = ref.forest_predict_vote(*args, C)
+    p = ops.forest_predict_vote(*args, C, mode="interpret")
+    np.testing.assert_array_equal(np.asarray(r[0]), np.asarray(p[0]))
+    np.testing.assert_array_equal(np.asarray(r[1]), np.asarray(p[1]))
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,D,S,dtype", [
+    (2, 4, 4, 16, 33, jnp.float32),
+    (3, 8, 2, 32, 128, jnp.float32),
+    (1, 16, 8, 64, 700, jnp.bfloat16),
+])
+def test_decode_attn_sweep(rng, B, Hq, Hkv, D, S, dtype):
+    q = jnp.asarray(rng.normal(size=(B, Hq, D)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), dtype)
+    kvl = jnp.asarray(rng.integers(1, S + 1, (B,)), jnp.int32)
+    r = np.asarray(ref.decode_attn(q, k, v, kvl), np.float32)
+    p = np.asarray(ops.decode_attn(q, k, v, kvl, mode="interpret"), np.float32)
+    atol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(r, p, atol=atol, rtol=1e-2)
+
+
+def test_decode_attn_matches_full_softmax(rng):
+    """ref oracle itself vs a trivially-correct dense softmax."""
+    B, Hq, Hkv, D, S = 2, 6, 3, 8, 40
+    q = jnp.asarray(rng.normal(size=(B, Hq, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), jnp.float32)
+    kvl = jnp.full((B,), S, jnp.int32)
+    out = np.asarray(ref.decode_attn(q, k, v, kvl))
+    G = Hq // Hkv
+    for b in range(B):
+        for h in range(Hq):
+            kv_h = h // G
+            logit = (np.asarray(q[b, h]) @ np.asarray(k[b, :, kv_h]).T) * D**-0.5
+            pr = np.exp(logit - logit.max())
+            pr /= pr.sum()
+            want = pr @ np.asarray(v[b, :, kv_h])
+            np.testing.assert_allclose(out[b, h], want, atol=1e-5)

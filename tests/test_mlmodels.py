@@ -1,0 +1,105 @@
+"""ML substrate: CART/forest/SVM/quantizer/metrics unit + property tests."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.mlmodels import (
+    DecisionTree,
+    LinearSVM,
+    Quantizer,
+    RandomForest,
+    accuracy,
+    cohen_kappa,
+    macro_f1,
+    rfe_select,
+)
+from repro.data import make_classification
+
+
+def test_quantizer_bounds_and_monotonic(rng):
+    X = rng.normal(size=(200, 5)) * rng.uniform(0.1, 50, 5)
+    q = Quantizer(8).fit(X)
+    Xq = q.transform(X)
+    assert Xq.min() >= 0 and Xq.max() <= 255
+    # monotonic per column
+    col = np.sort(X[:, 2])
+    qc = q.transform(np.tile(X[0], (200, 1)).copy() * 0 + col[:, None])[:, 2]
+    assert (np.diff(qc) >= 0).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 1000))
+def test_tree_perfectly_fits_small_data(seed):
+    rng = np.random.default_rng(seed)
+    Xq = rng.integers(0, 256, (40, 4))
+    # ensure no duplicate rows with conflicting labels
+    Xq = np.unique(Xq, axis=0)
+    y = rng.integers(0, 3, Xq.shape[0])
+    dt = DecisionTree(max_depth=32, levels=256).fit(Xq, y)
+    assert accuracy(y, dt.predict(Xq)) == 1.0
+
+
+def test_tree_depth_and_leaf_bounds(satdap):
+    Xtr, ytr, _, _ = satdap
+    dt = DecisionTree(max_depth=4, max_leaf_nodes=9).fit(Xtr, ytr)
+    assert dt.tree_.max_depth <= 4
+    assert dt.tree_.n_leaves <= 9
+
+
+def test_tree_path_codes_unique_per_leaf(satdap):
+    Xtr, ytr, _, _ = satdap
+    dt = DecisionTree(max_depth=10, max_leaf_nodes=64).fit(Xtr, ytr)
+    t = dt.tree_
+    leaves = t.leaves()
+    codes = t.path[leaves]
+    assert np.unique(codes).size == leaves.size  # prefix-free => zero-pad unique
+
+
+def test_forest_beats_or_matches_single_tree(satdap):
+    Xtr, ytr, Xte, yte = satdap
+    dt = DecisionTree(max_depth=5, max_leaf_nodes=30).fit(Xtr, ytr)
+    rf = RandomForest(n_estimators=7, max_depth=5, max_leaf_nodes=30,
+                      random_state=3).fit(Xtr, ytr)
+    assert accuracy(yte, rf.predict(Xte)) >= accuracy(yte, dt.predict(Xte)) - 0.05
+
+
+def test_svm_ovo_and_ovr(iris):
+    Xtr, ytr, Xte, yte = iris
+    for mc in ("ovo", "ovr"):
+        svm = LinearSVM(multi_class=mc, epochs=400).fit(Xtr, ytr)
+        assert accuracy(yte, svm.predict(Xte)) > 0.8, mc
+
+
+def test_metrics_agree_with_known_values():
+    y = np.array([0, 0, 1, 1, 2, 2])
+    p = np.array([0, 0, 1, 0, 2, 1])
+    assert abs(accuracy(y, p) - 4 / 6) < 1e-9
+    assert cohen_kappa(y, y) == 1.0
+    assert 0.0 < cohen_kappa(y, p) < 1.0
+    assert 0.0 < macro_f1(y, p) < 1.0
+
+
+def test_rfe_selects_informative(rng):
+    X, y = make_classification(600, 20, 2, n_informative=4, n_redundant=0,
+                               seed=7)
+    q = Quantizer(8).fit(X)
+    Xq = q.transform(X)
+
+    def imp(Xs, ys):
+        dt = DecisionTree(max_depth=6, max_leaf_nodes=40).fit(
+            np.asarray(Xs, np.int64), ys)
+        return dt.feature_importances_()
+
+    keep = rfe_select(Xq, y, 8, imp)
+    assert keep.size == 8
+    dt_full = DecisionTree(max_depth=6, max_leaf_nodes=40).fit(Xq, y)
+    dt_sel = DecisionTree(max_depth=6, max_leaf_nodes=40).fit(Xq[:, keep], y)
+    # selected features retain most of the signal
+    assert accuracy(y, dt_sel.predict(Xq[:, keep])) > 0.8 * accuracy(
+        y, dt_full.predict(Xq))
+
+
+def test_determinism(satdap):
+    Xtr, ytr, Xte, _ = satdap
+    a = RandomForest(n_estimators=3, max_depth=4, random_state=5).fit(Xtr, ytr)
+    b = RandomForest(n_estimators=3, max_depth=4, random_state=5).fit(Xtr, ytr)
+    assert (a.predict(Xte) == b.predict(Xte)).all()

@@ -1,0 +1,151 @@
+"""Per-arch smoke tests + decode/forward consistency (the KV-cache oracle)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, applicable, get_config, smoke_config
+from repro.models import decode_step, forward, init_decode_state, init_params
+from repro.models.transformer import encode_kv
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    """Reduced config: one forward + one train step on CPU; shapes + no NaNs."""
+    cfg = smoke_config(arch)
+    p = init_params(cfg, jax.random.key(0))
+    B, S = 2, 16
+    toks = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab)
+    enc = (jax.random.normal(jax.random.key(2), (B, cfg.enc_seq, cfg.d_model),
+                             cfg.jdtype) if cfg.family == "encdec" else None)
+    logits = forward(p, toks, cfg, enc_inputs=enc)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+    # one real train step
+    from repro.optim.adamw import AdamWConfig, adamw_init
+    from repro.train.step import make_train_step
+    ocfg = AdamWConfig(lr=1e-3)
+    opt = adamw_init(p, ocfg)
+    step = make_train_step(cfg, ocfg, n_micro=2, has_enc=cfg.family == "encdec")
+    batch = {
+        "tokens": jnp.tile(toks[None], (2, 1, 1)),
+        "labels": jnp.tile(toks[None], (2, 1, 1)),
+    }
+    if enc is not None:
+        batch["enc_inputs"] = jnp.tile(enc[None], (2, 1, 1, 1))
+    p2, opt2, metrics = jax.jit(step)(p, opt, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert int(opt2["step"]) == 1
+
+
+@pytest.mark.parametrize("arch", ["internlm2-1.8b", "grok-1-314b",
+                                  "recurrentgemma-2b", "rwkv6-7b",
+                                  "whisper-tiny"])
+def test_decode_matches_forward(arch):
+    """Teacher forcing: step-by-step decode logits == full forward logits.
+    This is the cache/recurrence correctness oracle for every family."""
+    cfg = smoke_config(arch)
+    if cfg.family == "moe":
+        # capacity dropping depends on batch composition (prefill routes S*B
+        # tokens, decode routes B) — inherent to capacity MoE; disable drops
+        # so the cache/recurrence equivalence is exact.
+        cfg = cfg.scaled(capacity_factor=float(cfg.n_experts))
+    p = init_params(cfg, jax.random.key(0))
+    B, S = 2, 10
+    toks = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab)
+    enc = (jax.random.normal(jax.random.key(2), (B, cfg.enc_seq, cfg.d_model),
+                             cfg.jdtype) if cfg.family == "encdec" else None)
+    full = forward(p, toks, cfg, enc_inputs=enc, remat=False)
+
+    state = init_decode_state(cfg, B, S)
+    if cfg.family == "encdec":
+        state["ek"], state["ev"] = encode_kv(p, enc, cfg)
+    outs = []
+    for t in range(S):
+        lg, state = decode_step(p, state, toks[:, t:t + 1], jnp.int32(t), cfg)
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(full, np.float32), np.asarray(dec, np.float32),
+        atol=0.12, rtol=0.05)
+
+
+def test_local_attention_window_masks():
+    cfg = smoke_config("recurrentgemma-2b")
+    from repro.models.attention import gqa_attention
+    B, S, H, D = 1, 12, 2, 8
+    q = jax.random.normal(jax.random.key(0), (B, S, H, D))
+    k = jax.random.normal(jax.random.key(1), (B, S, H, D))
+    v = jax.random.normal(jax.random.key(2), (B, S, H, D))
+    full = gqa_attention(q, k, v, causal=True, window=0)
+    win = gqa_attention(q, k, v, causal=True, window=4)
+    # early positions identical (window not binding), late differ
+    np.testing.assert_allclose(np.asarray(full[:, :3]), np.asarray(win[:, :3]),
+                               atol=1e-5)
+    assert not np.allclose(np.asarray(full[:, -1]), np.asarray(win[:, -1]))
+
+
+def test_q_chunked_attention_equals_single_shot():
+    from repro.models.attention import gqa_attention
+    B, S, Hq, Hkv, D = 2, 32, 4, 2, 8
+    q = jax.random.normal(jax.random.key(0), (B, S, Hq, D))
+    k = jax.random.normal(jax.random.key(1), (B, S, Hkv, D))
+    v = jax.random.normal(jax.random.key(2), (B, S, Hkv, D))
+    a = gqa_attention(q, k, v, causal=True)
+    b = gqa_attention(q, k, v, causal=True, q_chunk=8)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_rwkv_chunked_equals_stepwise():
+    """Chunkwise-parallel wkv == sequential recurrence (decode path)."""
+    from repro.models import rwkv as R
+    cfg = smoke_config("rwkv6-7b")
+    p = init_params(cfg, jax.random.key(0))
+    lp = jax.tree.map(lambda x: x[0], p["layers"])  # layer 0 params
+    B, S, D = 1, 19, cfg.d_model
+    H = cfg.n_heads
+    x = jax.random.normal(jax.random.key(3), (B, S, D), cfg.jdtype) * 0.5
+    y_chunk, st = R.time_mix(x, lp, None, n_heads=H, chunk=8)
+    st2 = {"S": jnp.zeros((B, H, D // H, D // H), jnp.float32),
+           "last": jnp.zeros((B, D), jnp.float32)}
+    outs = []
+    for t in range(S):
+        y, st2 = R.time_mix_step(x[:, t:t + 1], lp, st2, n_heads=H)
+        outs.append(y[:, 0])
+    y_step = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk, np.float32),
+                               np.asarray(y_step, np.float32),
+                               atol=5e-2, rtol=5e-2)
+    np.testing.assert_allclose(np.asarray(st["S"]), np.asarray(st2["S"]),
+                               atol=5e-2, rtol=5e-2)
+
+
+def test_param_counts_close_to_published():
+    """6*N*D roofline inputs: param_count within 20% of the advertised size."""
+    published = {
+        "internlm2-1.8b": 1.8e9, "internlm2-20b": 20e9, "starcoder2-15b": 15e9,
+        "granite-20b": 20e9, "grok-1-314b": 314e9, "rwkv6-7b": 7e9,
+        "chameleon-34b": 34e9, "qwen3-moe-235b-a22b": 235e9,
+        "recurrentgemma-2b": 2.7e9,
+    }
+    for arch, want in published.items():
+        n = get_config(arch).param_count()
+        # starcoder2 upstream uses a 2-matrix MLP; this framework uses SwiGLU
+        # (3 matrices) uniformly, so its count runs ~1.47x the advertised 15B.
+        hi = 1.55 if arch == "starcoder2-15b" else 1.45
+        assert 0.7 * want < n < hi * want, f"{arch}: {n:.3g} vs {want:.3g}"
+
+
+def test_shape_applicability():
+    n_cells = 0
+    for a in ARCH_IDS:
+        cfg = get_config(a)
+        for s in SHAPES:
+            ok, why = applicable(cfg, s)
+            if s == "long_500k":
+                assert ok == (a in ("recurrentgemma-2b", "rwkv6-7b")), (a, why)
+            else:
+                assert ok
+            n_cells += 1
+    assert n_cells == 40

@@ -1,0 +1,50 @@
+"""Latency/overhead model sanity (paper §7.4/§7.6 semantics)."""
+import numpy as np
+
+from repro.core import packets
+from repro.core.mlmodels import DecisionTree
+from repro.core.netsim import (
+    ServerModel,
+    acorn_serving_time,
+    forwarding_overhead,
+    measure_inference_time,
+    server_serving_time,
+    simulate_serving,
+)
+from repro.core.planner import plan_program
+from repro.core.topology import fat_tree
+from repro.core.translator import translate
+
+
+def test_acorn_faster_than_server(satdap):
+    Xtr, ytr, Xte, _ = satdap
+    dt = DecisionTree(max_depth=8, max_leaf_nodes=80).fit(Xtr, ytr)
+    prog = translate(dt)
+    net = fat_tree(4)
+    h = net.hosts()
+    plan = plan_program(prog, net, h[0], h[-1], solver="dp")
+    t_acorn = acorn_serving_time(plan)
+    t_pred = measure_inference_time(dt, Xte, n_requests=50)
+    t_server = server_serving_time(
+        t_pred, packets.request_bytes(prog.n_features, n_trees=1))
+    # paper: 65-90% faster
+    assert t_acorn < t_server
+    assert t_acorn < 0.3e-3  # "requests served within 0.12 ms" ballpark
+
+
+def test_request_response_size_asymmetry():
+    rq = packets.request_bytes(46, n_trees=5)
+    rs = packets.response_bytes()
+    assert rq > rs  # stripping payload shrinks the response
+
+
+def test_simulation_is_stable():
+    s = simulate_serving(1e-4, n=500, seed=1)
+    assert abs(np.median(s) - 1e-4) / 1e-4 < 0.05
+    assert (s > 0).all()
+
+
+def test_forwarding_overhead_bounds():
+    r = forwarding_overhead()
+    assert 0 < r["latency_overhead_frac"] <= 0.033  # paper: 2.7-3.3%
+    assert 0.9 < r["goodput_frac"] < 1.0

@@ -1,0 +1,84 @@
+"""SwitchEngine: jit-once runtime programmability + equivalence to CPU models."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.mlmodels import DecisionTree, LinearSVM, RandomForest
+from repro.core.packets import PacketBatch, PacketType
+from repro.core.plane import PlaneProfile, SwitchEngine
+from repro.core.translator import translate
+
+PROF = PlaneProfile(max_features=36, max_trees=5, max_layers=10,
+                    max_entries_per_layer=256, max_leaves=256,
+                    max_classes=8, max_hyperplanes=8)
+
+
+def _req(X, prog):
+    return PacketBatch.make_request(
+        X, mid=prog.mid, max_features=PROF.max_features,
+        n_trees=PROF.max_trees, n_hyperplanes=PROF.max_hyperplanes)
+
+
+def test_plane_equals_cpu_and_never_retraces(satdap):
+    Xtr, ytr, Xte, _ = satdap
+    eng = SwitchEngine(PROF)
+    packed = eng.empty()
+
+    dt = DecisionTree(max_depth=8, max_leaf_nodes=100).fit(Xtr, ytr)
+    rf = RandomForest(n_estimators=5, max_depth=6, max_leaf_nodes=50).fit(Xtr, ytr)
+    svm = LinearSVM(epochs=100).fit(Xtr, ytr)
+    for model in (dt, rf, svm):
+        prog = translate(model)
+        packed = eng.install(packed, prog)
+        out = eng.classify(packed, _req(Xte, prog))
+        got = np.asarray(out.rslt)
+        want = model.predict(Xte)
+        agree = (got == want).mean()
+        if isinstance(model, LinearSVM):
+            assert agree > 0.97  # fixed-point quantization slack
+        else:
+            assert agree == 1.0
+    # runtime programmability: three installs, two pipelines, ONE trace
+    assert eng.cache_size() == 1
+
+
+def test_both_pipelines_coexist(satdap):
+    """Paper Fig. 5: a tree model and an SVM live in one data plane."""
+    Xtr, ytr, Xte, _ = satdap
+    eng = SwitchEngine(PROF)
+    rf = RandomForest(n_estimators=3, max_depth=5, max_leaf_nodes=40).fit(Xtr, ytr)
+    svm = LinearSVM(epochs=100).fit(Xtr, ytr)
+    prog_rf, prog_svm = translate(rf), translate(svm)
+    packed = eng.install(eng.install(eng.empty(), prog_rf), prog_svm)
+    out_rf = eng.classify(packed, _req(Xte, prog_rf))
+    out_svm = eng.classify(packed, _req(Xte, prog_svm))
+    assert (np.asarray(out_rf.rslt) == rf.predict(Xte)).all()
+    assert (np.asarray(out_svm.rslt) == svm.predict(Xte)).mean() > 0.97
+
+
+def test_forwarding_passthrough(satdap):
+    """Non-request packets are untouched (classification never breaks
+    forwarding — paper §6.1)."""
+    Xtr, ytr, Xte, _ = satdap
+    eng = SwitchEngine(PROF)
+    dt = DecisionTree(max_depth=6, max_leaf_nodes=40).fit(Xtr, ytr)
+    packed = eng.install(eng.empty(), translate(dt))
+    pb = _req(Xte[:16], translate(dt))
+    pb = pb.__class__(**{**pb.__dict__,
+                         "ptype": jnp.full((16,), PacketType.FORWARD, jnp.int32)})
+    out = eng.classify(packed, pb)
+    assert (np.asarray(out.rslt) == -1).all()
+
+
+def test_model_version_swap_changes_predictions(satdap):
+    Xtr, ytr, Xte, _ = satdap
+    eng = SwitchEngine(PROF)
+    d1 = DecisionTree(max_depth=3, max_leaf_nodes=8).fit(Xtr, ytr)
+    d2 = DecisionTree(max_depth=8, max_leaf_nodes=100).fit(Xtr, ytr)
+    p1, p2 = translate(d1, vid=1), translate(d2, vid=2)
+    packed = eng.install(eng.empty(), p1)
+    out1 = eng.classify(packed, _req(Xte, p1))
+    packed = eng.install(packed, p2)  # runtime swap
+    out2 = eng.classify(packed, _req(Xte, p2))
+    assert (np.asarray(out1.rslt) == d1.predict(Xte)).all()
+    assert (np.asarray(out2.rslt) == d2.predict(Xte)).all()
+    assert eng.cache_size() == 1

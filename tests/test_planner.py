@@ -1,0 +1,134 @@
+"""Planner: MILP == DP optimum, constraint satisfaction, failure replanning."""
+import numpy as np
+import pytest
+
+from repro.core.mlmodels import DecisionTree, LinearSVM, RandomForest
+from repro.core.planner import DeviceModel, plan_program, replan
+from repro.core.topology import bcube, dcell, fat_tree, jellyfish
+from repro.core.translator import translate
+
+
+@pytest.fixture(scope="module")
+def models(satdap):
+    Xtr, ytr, _, _ = satdap
+    dt = DecisionTree(max_depth=8, max_leaf_nodes=80).fit(Xtr, ytr)
+    rf = RandomForest(n_estimators=4, max_depth=5, max_leaf_nodes=30).fit(Xtr, ytr)
+    svm = LinearSVM(epochs=60).fit(Xtr, ytr)
+    return translate(dt), translate(rf), translate(svm)
+
+
+@pytest.fixture(scope="module")
+def net():
+    return fat_tree(4)
+
+
+def _ends(net):
+    h = net.hosts()
+    return h[0], h[-1]
+
+
+def test_dp_matches_milp_optimum(models, net):
+    src, dst = _ends(net)
+    for prog in models:
+        for dev in (DeviceModel(), DeviceModel(n_stages=6)):
+            a = plan_program(prog, net, src, dst, default_device=dev, solver="dp")
+            b = plan_program(prog, net, src, dst, default_device=dev, solver="milp")
+            assert abs(a.objective - b.objective) < 1e-6, prog.kind
+
+
+def test_stage_order_follows_path(models, net):
+    src, dst = _ends(net)
+    prog = models[1]  # forest
+    plan = plan_program(prog, net, src, dst,
+                        default_device=DeviceModel(n_stages=4), solver="dp")
+    pos = {d: plan.path.index(d) for d in set(plan.assignment.values())}
+    specs = prog.stages()
+    # within each tree, deeper layers never upstream of shallower ones
+    by_tree = {}
+    for i, d in plan.assignment.items():
+        for t in specs[i].tables:
+            if t.kind == "dt_layer":
+                by_tree.setdefault(t.tree, []).append((t.layer, pos[d]))
+    for t, pairs in by_tree.items():
+        pairs.sort()
+        ps = [p for _, p in pairs]
+        assert ps == sorted(ps), f"tree {t} layer order broken"
+    # predict/voting downstream of everything
+    last_pos = max(pos[plan.assignment[i]] for i, s in enumerate(specs)
+                   if any(t.kind == "dt_layer" for t in s.tables))
+    for i, s in enumerate(specs):
+        if any(t.kind in ("dt_predict", "multitree_voting") for t in s.tables):
+            assert pos[plan.assignment[i]] >= last_pos
+
+
+def test_svm_colocation(models, net):
+    src, dst = _ends(net)
+    prog = models[2]
+    plan = plan_program(prog, net, src, dst,
+                        default_device=DeviceModel(n_stages=6), solver="dp")
+    specs = prog.stages()
+    byh = {}
+    for i, d in plan.assignment.items():
+        for t in specs[i].tables:
+            if t.kind == "svm_mul":
+                byh.setdefault(t.hyperplane, set()).add(d)
+    assert all(len(v) == 1 for v in byh.values())
+
+
+def test_resource_limits_respected(models, net):
+    src, dst = _ends(net)
+    prog = models[1]
+    dev = DeviceModel(n_stages=3)
+    plan = plan_program(prog, net, src, dst, default_device=dev, solver="dp")
+    per_dev = plan.device_stages()
+    assert all(len(s) <= dev.n_stages for s in per_dev.values())
+
+
+def test_infeasible_raises(models, net):
+    src, dst = _ends(net)
+    with pytest.raises(RuntimeError):
+        plan_program(models[1], net, src, dst,
+                     default_device=DeviceModel(n_stages=1), solver="dp")
+
+
+def test_replan_avoids_failed_devices(models, net):
+    src, dst = _ends(net)
+    prog = models[1]  # forest, forced across several devices
+    dev = DeviceModel(n_stages=4)
+    plan = plan_program(prog, net, src, dst, default_device=dev, solver="dp")
+    used = plan.breakdown["devices_used"]
+    assert len(used) >= 2
+    # fail a mid-path device (the host-adjacent edge switch is a cut vertex —
+    # losing it correctly disconnects the host)
+    failed = {used[1]}
+    plan2 = replan(prog, net, src, dst, failed, default_device=dev, solver="dp")
+    assert not (set(plan2.breakdown["devices_used"]) & failed)
+
+
+def test_replan_infeasible_when_cut_vertex_dies(models, net):
+    """Losing the host's only edge switch disconnects it — the planner must
+    say so rather than hallucinate a path."""
+    src, dst = _ends(net)
+    plan = plan_program(models[0], net, src, dst, solver="dp")
+    edge = plan.path[1]  # host-adjacent switch
+    with pytest.raises(RuntimeError):
+        replan(models[0], net, src, dst, {edge}, solver="dp")
+
+
+@pytest.mark.parametrize("mk", [
+    lambda: fat_tree(4), lambda: dcell(3, 1), lambda: bcube(3, 1),
+    lambda: jellyfish(20, 3)])
+def test_all_topologies_plannable(models, mk):
+    net = mk()
+    h = net.hosts()
+    plan = plan_program(models[0], net, h[0], h[-1], solver="dp")
+    assert plan.objective > 0 and plan.solve_time < 10.0  # paper Fig. 8 bound
+
+
+def test_weights_shift_optimum(models, net):
+    """Heavier overhead weight pushes the last stage earlier on the path."""
+    src, dst = _ends(net)
+    prog = models[0]
+    lat = plan_program(prog, net, src, dst, weights=(1, 0, 0), solver="dp")
+    ovh = plan_program(prog, net, src, dst, weights=(0, 0, 1), solver="dp")
+    assert ovh.breakdown["last_pos"] <= lat.breakdown["last_pos"]

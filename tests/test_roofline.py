@@ -1,0 +1,79 @@
+"""Roofline analysis: HLO parsers + term model + 6*N*D validation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.hlocost import parse_hlo_cost
+from repro.analysis.roofline import (
+    HW,
+    collective_bytes_from_hlo,
+    model_flops,
+    roofline_terms,
+)
+from repro.configs import SHAPES, get_config
+
+
+def test_matmul_flops_exact():
+    def f(x, w1, w2):
+        return jnp.tanh(x @ w1) @ w2
+
+    args = [jax.ShapeDtypeStruct(s, jnp.float32)
+            for s in ((64, 128), (128, 256), (256, 32))]
+    txt = jax.jit(f).lower(*args).compile().as_text()
+    c = parse_hlo_cost(txt)
+    assert c["matmul_flops"] == 2 * 64 * 256 * 128 + 2 * 64 * 32 * 256
+
+
+def test_batched_dot_flops():
+    def g(x, w):
+        return jnp.einsum("bij,bjk->bik", x, w)
+
+    args = [jax.ShapeDtypeStruct(s, jnp.float32)
+            for s in ((4, 64, 128), (4, 128, 32))]
+    txt = jax.jit(g).lower(*args).compile().as_text()
+    assert parse_hlo_cost(txt)["matmul_flops"] == 2 * 4 * 64 * 32 * 128
+
+
+def test_collective_parser_on_crafted_hlo():
+    hlo = """
+ENTRY %main () -> f32[] {
+  %ar = f32[1024]{0} all-reduce(%x), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag = bf16[2048]{0} all-gather(%y), replica_groups={{0,1}}, dimensions={0}
+  %cp = f32[512]{0} collective-permute(%z), source_target_pairs={{0,1}}
+}
+"""
+    c = collective_bytes_from_hlo(hlo)
+    assert c["all-reduce"] == 2 * 4096 * 3 / 4
+    assert c["all-gather"] == 4096 * 1 / 2
+    assert c["collective-permute"] == 2048
+    assert c["n_ops"] == 3
+
+
+def test_roofline_terms_and_dominance():
+    hw = HW()
+    r = roofline_terms(hlo_flops=197e12, hlo_bytes=819e9,
+                       collective_wire_bytes=256 * 50e9 * 2, chips=256, hw=hw)
+    assert abs(r["compute_s"] - 1.0) < 1e-9
+    assert abs(r["memory_s"] - 1.0) < 1e-9
+    assert abs(r["collective_s"] - 2.0) < 1e-9
+    assert r["dominant"] == "collective"
+
+
+def test_model_flops_6nd():
+    cfg = get_config("internlm2-20b")
+    sp = SHAPES["train_4k"]
+    mf = model_flops(cfg, sp.seq_len, sp.global_batch, "train")
+    n = cfg.param_count()
+    assert abs(mf - 6 * n * sp.seq_len * sp.global_batch) / mf < 1e-9
+    # MoE uses active params
+    moe = get_config("grok-1-314b")
+    act = model_flops(moe, sp.seq_len, sp.global_batch, "train")
+    tot = 6 * moe.param_count() * sp.seq_len * sp.global_batch
+    assert act < 0.5 * tot
+
+
+def test_decode_flops_one_token():
+    cfg = get_config("internlm2-1.8b")
+    sp = SHAPES["decode_32k"]
+    mf = model_flops(cfg, sp.seq_len, sp.global_batch, "decode")
+    assert abs(mf - 2 * cfg.param_count() * sp.global_batch) / mf < 1e-9

@@ -1,0 +1,99 @@
+"""Table-type unit + property tests (paper §4, §6)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.mlmodels import LinearSVM, RandomForest
+from repro.core.tables import (
+    DtLayerTable,
+    DtPredictTable,
+    SvmPredictTable,
+    VotingTable,
+    range_to_prefixes,
+    tcam_entries_for_le_range,
+)
+
+
+# ---------------------------------------------------------------- prefixes
+@settings(max_examples=200, deadline=None)
+@given(st.integers(0, 255), st.integers(0, 255))
+def test_prefix_expansion_exact_cover(a, b):
+    """Expanded prefixes match exactly the integers in [lo, hi] — the TCAM
+    correctness invariant behind every entry count in the paper."""
+    lo, hi = min(a, b), max(a, b)
+    pref = range_to_prefixes(lo, hi, 8)
+    for x in range(256):
+        hit = any((x & m) == v for v, m in pref)
+        assert hit == (lo <= x <= hi)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(0, 255))
+def test_le_range_at_most_width_prefixes(t):
+    assert tcam_entries_for_le_range(t, 8) <= 8
+
+
+def test_prefix_empty_range():
+    assert range_to_prefixes(5, 4, 8) == []
+
+
+# ---------------------------------------------------------------- dt_layer
+def test_dt_layer_priority_and_fallthrough():
+    # node at depth 1, path bit0=1: test feature 0 <= 10
+    tbl = DtLayerTable(
+        layer=1, tree=0,
+        code_value=np.array([1, 1], np.uint32),
+        code_mask=np.array([1, 1], np.uint32),
+        fid=np.array([0, 0], np.int32),
+        f_lo=np.array([0, 0], np.int32),
+        f_hi=np.array([10, 255], np.int32),
+        priority=np.array([1, 0], np.int32),
+        set_bit=np.array([0, 1], np.uint8),
+    )
+    codes = np.array([1, 1, 0], np.uint32)        # third packet: code miss
+    feats = np.array([[5], [50], [5]], np.int32)
+    out = tbl.lookup(codes, feats)
+    assert out[0] == 1          # <=10 -> bit1 stays 0
+    assert out[1] == 1 | (1 << 1)  # catch-all -> bit1 set
+    assert out[2] == 0          # code mismatch: falls through unchanged
+
+
+def test_dt_predict_rejects_duplicate_codes():
+    with pytest.raises(ValueError):
+        DtPredictTable(tree=0, codes=np.array([3, 3], np.uint32),
+                       labels=np.array([0, 1], np.int32))
+
+
+# ------------------------------------------------------------------ voting
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 4), st.integers(1, 4), st.integers(0))
+def test_voting_table_matches_forest_vote(n_classes, n_trees, seed):
+    rng = np.random.default_rng(seed)
+    votes = rng.integers(0, n_classes, size=(50, n_trees))
+    vt = VotingTable.build(n_trees, n_classes)
+    rf = RandomForest.__new__(RandomForest)
+    rf.n_classes_ = n_classes
+    rf.tree_weights = None
+    rf.trees_ = [None] * n_trees
+    assert (vt.lookup(votes) == rf.vote(votes)).all()
+
+
+def test_voting_table_fallback_when_huge():
+    vt = VotingTable.build(16, 10, max_materialized=1000)  # 10^16 entries
+    assert vt.table is None and vt.n_entries == 0
+    votes = np.tile(np.arange(16) % 10, (3, 1))
+    assert vt.lookup(votes).shape == (3,)
+
+
+# --------------------------------------------------------------- svm tables
+def test_svm_predict_table_matches_vote_fn(iris):
+    Xtr, ytr, Xte, _ = iris
+    svm = LinearSVM(epochs=50).fit(Xtr, ytr)
+    tbl = SvmPredictTable.build(np.asarray(svm.pairs_, np.int32),
+                                svm.n_classes_, svm.votes_from_signs)
+    signs = svm.decision_signs(Xte)
+    assert (tbl.lookup(signs) == svm.votes_from_signs(signs)).all()
+    # computed fallback gives the same answers
+    tbl2 = SvmPredictTable(svm.n_hyperplanes, svm.n_classes_,
+                           np.asarray(svm.pairs_, np.int32), None)
+    assert (tbl2.lookup(signs) == tbl.lookup(signs)).all()

@@ -1,0 +1,45 @@
+"""Topology builders match the published size formulas (paper Table 6)."""
+import pytest
+
+from repro.core.topology import bcube, dcell, fat_tree, jellyfish
+
+
+@pytest.mark.parametrize("k", [4, 8])
+def test_fat_tree_counts(k):
+    net = fat_tree(k)
+    assert net.n_switches == 5 * k * k // 4
+    assert net.n_hosts == k * (k // 2)  # hosts_per_edge=1
+
+
+def test_dcell_counts():
+    net = dcell(3, 1)  # DCell_1: (3+1) cells of 3 servers
+    assert net.n_hosts == 12
+    assert net.n_switches == 4
+
+
+@pytest.mark.parametrize("n,k", [(3, 1), (4, 1)])
+def test_bcube_counts(n, k):
+    net = bcube(n, k)
+    assert net.n_hosts == n ** (k + 1)
+    assert net.n_switches == (k + 1) * n**k
+
+
+def test_jellyfish_regular():
+    net = jellyfish(20, 3, hosts=4)
+    assert net.n_switches == 20
+    degs = [len([v for v in net.adj[s] if net.kind[v] == "switch"])
+            for s in net.switches()]
+    assert max(degs) <= 4 and min(degs) >= 2  # d=3 modulo host attach + patching
+
+
+def test_paths_are_simple_and_connected():
+    net = fat_tree(4)
+    h = net.hosts()
+    paths = net.k_shortest_paths(h[0], h[-1], 4)
+    assert len(paths) >= 2
+    for p in paths:
+        assert p[0] == h[0] and p[-1] == h[-1]
+        assert len(set(p)) == len(p)  # loop-free
+        for a, b in zip(p, p[1:]):
+            assert b in net.adj[a]
+    assert sorted(len(p) for p in paths) == [len(p) for p in paths]

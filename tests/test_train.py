@@ -1,0 +1,126 @@
+"""Training substrate: grad-accum equivalence, AdamW, checkpoint fault
+tolerance, data-pipeline resumability."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.data import TokenPipeline
+from repro.models import init_params
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, lr_schedule
+from repro.train.checkpoint import Checkpointer
+from repro.train.step import loss_fn, make_train_step
+
+
+def _setup(arch="internlm2-1.8b"):
+    cfg = smoke_config(arch)
+    p = init_params(cfg, jax.random.key(0))
+    tp = TokenPipeline(vocab_size=cfg.vocab, seq_len=16, global_batch=8)
+    return cfg, p, tp
+
+
+def test_grad_accum_equals_single_batch():
+    """n_micro=4 microbatches produce the same update as one big batch."""
+    cfg, p, tp = _setup()
+    ocfg = AdamWConfig(lr=1e-3)
+    b = tp.next_batch()
+    toks = jnp.asarray(b["tokens"])
+    labs = jnp.asarray(b["labels"])
+    opt = adamw_init(p, ocfg)
+
+    s1 = make_train_step(cfg, ocfg, n_micro=1)
+    s4 = make_train_step(cfg, ocfg, n_micro=4)
+    p1, _, m1 = jax.jit(s1)(p, opt, {"tokens": toks[None], "labels": labs[None]})
+    p4, _, m4 = jax.jit(s4)(
+        p, adamw_init(p, ocfg),
+        {"tokens": toks.reshape(4, 2, -1), "labels": labs.reshape(4, 2, -1)})
+    np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]), rtol=1e-5)
+    d = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))), p1, p4)
+    assert max(jax.tree.leaves(d)) < 3e-2  # bf16 params: one-ulp scale
+
+
+def test_loss_decreases():
+    cfg, p, tp = _setup()
+    ocfg = AdamWConfig(lr=3e-3, warmup_steps=2, total_steps=40)
+    opt = adamw_init(p, ocfg)
+    step = jax.jit(make_train_step(cfg, ocfg, n_micro=1))
+    losses = []
+    for _ in range(15):
+        b = tp.next_batch()
+        p, opt, m = step(p, opt, {"tokens": jnp.asarray(b["tokens"])[None],
+                                  "labels": jnp.asarray(b["labels"])[None]})
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.1, losses
+
+
+def test_adamw_matches_reference_math():
+    ocfg = AdamWConfig(lr=0.1, weight_decay=0.0, clip_norm=1e9)
+    p = {"w": jnp.asarray([1.0, -2.0], jnp.float32)}
+    g = {"w": jnp.asarray([0.5, 0.5], jnp.float32)}
+    opt = adamw_init(p, ocfg)
+    p2, opt2, _ = adamw_update(g, opt, p, ocfg)
+    m = 0.1 * 0.5 / (1 - 0.9)
+    v = 0.05 * 0.25 / (1 - 0.95)
+    want = 1.0 - 0.1 * lr_schedule(ocfg, jnp.int32(1)) / ocfg.lr * ocfg.lr * (
+        m / (np.sqrt(v) + ocfg.eps)) / 1.0
+    # simpler: direct formula
+    lr = float(lr_schedule(ocfg, jnp.int32(1)))
+    want = 1.0 - lr * (m / (np.sqrt(v) + ocfg.eps))
+    np.testing.assert_allclose(float(p2["w"][0]), want, rtol=1e-5)
+
+
+def test_bf16_state_halves_memory():
+    cfg, p, _ = _setup()
+    o32 = adamw_init(p, AdamWConfig(state_dtype="float32"))
+    o16 = adamw_init(p, AdamWConfig(state_dtype="bfloat16"))
+    b32 = sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(o32["m"]))
+    b16 = sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(o16["m"]))
+    assert b16 * 2 == b32
+
+
+def test_checkpoint_roundtrip_and_retention(tmp_path):
+    cfg, p, tp = _setup()
+    ocfg = AdamWConfig()
+    opt = adamw_init(p, ocfg)
+    ck = Checkpointer(str(tmp_path), keep=2, async_save=False)
+    for s in (1, 2, 3):
+        tp.next_batch()
+        ck.save(s, p, opt, extra={"data": tp.state_dict()})
+    assert ck.all_steps() == [2, 3]  # retention
+    step, p2, opt2, extra = ck.restore(p, opt)
+    assert step == 3 and extra["data"]["cursor"] == 3
+    for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a, dtype=np.float32),
+                                      np.asarray(b, dtype=np.float32))
+    # resume: pipeline continues exactly where it left off
+    tp2 = TokenPipeline(vocab_size=cfg.vocab, seq_len=16, global_batch=8)
+    tp2.load_state_dict(extra["data"])
+    np.testing.assert_array_equal(tp2.next_batch()["tokens"],
+                                  tp.next_batch()["tokens"])
+
+
+def test_checkpoint_atomic_no_partial(tmp_path):
+    cfg, p, _ = _setup()
+    opt = adamw_init(p, AdamWConfig())
+    ck = Checkpointer(str(tmp_path), async_save=True)
+    ck.save(7, p, opt)
+    ck.wait()
+    names = os.listdir(tmp_path)
+    assert "step_0000000007" in names
+    assert not any(n.endswith(".tmp") for n in names)
+
+
+def test_pipeline_elastic_resharding():
+    """Same global stream under a different shard layout (elastic scaling)."""
+    tp_all = TokenPipeline(vocab_size=100, seq_len=8, global_batch=8)
+    full = tp_all.batch_at(5)["tokens"]
+    shards = [
+        TokenPipeline(vocab_size=100, seq_len=8, global_batch=8,
+                      shard=i, num_shards=4).batch_at(5)["tokens"]
+        for i in range(4)
+    ]
+    np.testing.assert_array_equal(full, np.concatenate(shards, axis=0))

@@ -1,0 +1,83 @@
+"""Translator correctness: the table program IS the model (paper §4).
+
+The central invariant: walking the generated dt_layer tables layer by layer
+with the numpy oracle, then exact-matching dt_predict, reproduces
+``DecisionTree.predict`` bit-for-bit — including early-leaf fall-through
+(prefix-freeness, see tables.py docstring).  Hypothesis drives random trees.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.mlmodels import DecisionTree, LinearSVM, RandomForest
+from repro.core.translator import translate
+from repro.data import make_classification
+
+
+def _run_tree_tables(prog, tree_idx, Xq):
+    codes = np.zeros(Xq.shape[0], np.uint32)
+    for tbl in prog.dt_layers[tree_idx]:
+        codes = tbl.lookup(codes, Xq)
+    return prog.dt_predicts[tree_idx].lookup(codes), codes
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 5), st.integers(2, 8))
+def test_dt_tables_equal_model(seed, n_classes, depth):
+    X, y = make_classification(300, 6, n_classes, seed=seed)
+    Xq = np.clip((X * 16 + 128).astype(np.int64), 0, 255)
+    dt = DecisionTree(max_depth=depth, max_leaf_nodes=40).fit(Xq, y)
+    prog = translate(dt)
+    got, codes = _run_tree_tables(prog, 0, Xq)
+    want = dt.predict(Xq)
+    assert (got == want).all()
+    # status codes match the model's own decision-path codes
+    _, want_codes = dt.decision_path_codes(Xq)
+    assert (codes == want_codes.astype(np.uint32)).all()
+
+
+def test_rf_tables_equal_model(satdap):
+    Xtr, ytr, Xte, _ = satdap
+    rf = RandomForest(n_estimators=5, max_depth=6, max_leaf_nodes=40).fit(Xtr, ytr)
+    prog = translate(rf)
+    votes = np.stack(
+        [_run_tree_tables(prog, t, Xte)[0] for t in range(prog.n_trees)], axis=1)
+    got = prog.voting.lookup(votes)
+    assert (got == rf.predict(Xte)).all()
+
+
+def test_svm_tables_equal_model(satdap):
+    Xtr, ytr, Xte, _ = satdap
+    svm = LinearSVM(epochs=100).fit(Xtr, ytr)
+    prog = translate(svm)
+    H, F = svm.n_hyperplanes, svm.n_features_
+    sums = np.array(prog.svm_bias, np.int64)[None, :].repeat(Xte.shape[0], 0)
+    for m in prog.svm_muls:
+        sums[:, m.hyperplane] += m.lookup(Xte[:, m.feature])
+    signs = (sums >= 0).astype(np.int64)
+    got = prog.svm_predict.lookup(signs)
+    # fixed-point signs match float signs except within quantization slack
+    agree = (got == svm.predict(Xte)).mean()
+    assert agree > 0.97
+
+
+def test_stage_accounting(satdap):
+    Xtr, ytr, _, _ = satdap
+    rf = RandomForest(n_estimators=4, max_depth=5, max_leaf_nodes=30).fit(Xtr, ytr)
+    prog = translate(rf)
+    specs = prog.stages()
+    # trees two-per-block (paper Fig. 5): block stages then predict + voting
+    layer_stages = [s for s in specs if any(t.kind == "dt_layer" for t in s.tables)]
+    assert all(len(s.tables) <= 2 for s in layer_stages)
+    assert specs[-2].tables[0].kind == "dt_predict"
+    assert specs[-1].tables[0].kind == "multitree_voting"
+    # svm stages never straddle hyperplanes (colocation integrity)
+    svm = LinearSVM(epochs=30).fit(Xtr, ytr)
+    sprog = translate(svm)
+    for s in sprog.stages():
+        assert len({t.hyperplane for t in s.tables if t.kind == "svm_mul"}) <= 1
+
+
+def test_translate_rejects_unknown():
+    import pytest
+    with pytest.raises(TypeError):
+        translate(object())
