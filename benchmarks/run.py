@@ -20,6 +20,7 @@ MODULES = [
     ("roofline", "benchmarks.roofline_table"),
     ("perf", "benchmarks.perf_levers"),
     ("kernels", "benchmarks.kernels_bench"),
+    ("zoo", "benchmarks.zoo_swap"),
 ]
 
 

@@ -1,0 +1,87 @@
+"""Model-zoo scaling: install latency + classify throughput vs V (zoo size).
+
+For V ∈ {1, 2, 4, 8} version slots, measures
+
+* ``install_ms``   — control-plane latency of writing one version slot
+                     (translate excluded: pure entry-array update + transfer);
+* ``swap_ms``      — same, overwriting an occupied slot (the hot-swap path);
+* ``classify_us``  — per-packet classify time, batch of mixed-VID requests
+                     spread uniformly over all resident versions;
+* ``traces``       — engine trace count after all installs/swaps (must be 1:
+                     the §6 compile-once property is independent of V).
+
+The classify column is the cost of the VID gather at each table lookup; on
+the XLA-CPU ref path the per-packet table gather grows the working set, so
+throughput vs V quantifies what the Pallas version-grid kernels avoid keeping
+off VMEM.
+
+  PYTHONPATH=src python -m benchmarks.run --only zoo
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import fit_workload
+from repro.core.packets import PacketBatch
+from repro.core.plane import PlaneProfile, SwitchEngine
+from repro.core.translator import translate
+
+
+def _block(packed) -> None:
+    packed.dt_cv.block_until_ready()
+    packed.svm_lut.block_until_ready()
+
+
+def run() -> list[str]:
+    out = ["zoo,V,install_ms,swap_ms,classify_us_per_pkt,batch,traces"]
+    f = fit_workload("satdap", "dt", 36)
+    B = 2048
+    X = np.tile(f.Xte, (B // f.Xte.shape[0] + 1, 1))[:B]
+    rng = np.random.default_rng(0)
+
+    for V in (1, 2, 4, 8):
+        prof = PlaneProfile(max_features=36, max_trees=4, max_layers=12,
+                            max_entries_per_layer=256, max_leaves=128,
+                            max_classes=8, max_hyperplanes=8, max_versions=V)
+        eng = SwitchEngine(prof)
+        progs = [translate(f.model, vid=v) for v in range(V)]
+
+        packed = eng.empty()
+        _block(packed)
+        t0 = time.perf_counter()
+        for prog in progs:                      # fill every slot
+            packed = eng.install(packed, prog)
+        _block(packed)
+        install_ms = (time.perf_counter() - t0) / V * 1e3
+
+        t0 = time.perf_counter()
+        for prog in progs:                      # overwrite every slot (swap)
+            packed = eng.install(packed, prog)
+        _block(packed)
+        swap_ms = (time.perf_counter() - t0) / V * 1e3
+
+        vids = rng.integers(0, V, B)
+        pb = PacketBatch.make_request(
+            X, mid=progs[0].mid, vid=vids, max_features=36,
+            n_trees=prof.max_trees, n_hyperplanes=prof.max_hyperplanes,
+            max_versions=V)
+        eng.classify(packed, pb).rslt.block_until_ready()   # warm the trace
+        t0 = time.perf_counter()
+        reps = 5
+        for _ in range(reps):
+            eng.classify(packed, pb).rslt.block_until_ready()
+        classify_us = (time.perf_counter() - t0) / reps / B * 1e6
+
+        want = f.model.predict(X)
+        got = np.asarray(eng.classify(packed, pb).rslt)
+        assert (got == want).all(), "zoo answers must match the model"
+        out.append(f"zoo,{V},{install_ms:.2f},{swap_ms:.2f},"
+                   f"{classify_us:.2f},{B},{eng.cache_size()}")
+    return out
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

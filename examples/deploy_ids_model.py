@@ -26,7 +26,7 @@ Xtrq, Xteq = q.transform(Xtr)[:, :36], q.transform(Xte)[:, :36]
 
 prof = PlaneProfile(max_features=36, max_trees=8, max_layers=12,
                     max_entries_per_layer=256, max_leaves=256,
-                    max_classes=8, max_hyperplanes=8)
+                    max_classes=8, max_hyperplanes=8, max_versions=4)
 eng = SwitchEngine(prof)
 state = eng.empty()
 
@@ -37,26 +37,30 @@ svm = LinearSVM(epochs=150).fit(Xtrq, ytr)
 state = eng.install(state, translate(rf_v1, vid=1))
 state = eng.install(state, translate(svm, vid=1))
 
-mk = lambda mid: PacketBatch.make_request(Xteq, mid=mid, max_features=36,
-                                          n_trees=8, n_hyperplanes=8)
-acc_rf = accuracy(yte, np.asarray(eng.classify(state, mk(1)).rslt))
-acc_svm = accuracy(yte, np.asarray(eng.classify(state, mk(2)).rslt))
+mk = lambda mid, vid: PacketBatch.make_request(
+    Xteq, mid=mid, vid=vid, max_features=36, n_trees=8, n_hyperplanes=8,
+    max_versions=prof.max_versions)
+acc_rf = accuracy(yte, np.asarray(eng.classify(state, mk(1, 1)).rslt))
+acc_svm = accuracy(yte, np.asarray(eng.classify(state, mk(2, 1)).rslt))
 print(f"v1 forest acc={acc_rf:.3f} | svm tenant acc={acc_svm:.3f} "
       f"(one plane, two pipelines)")
 
-# hot-swap to a stronger v2 forest — no recompilation
+# deploy a stronger v2 forest into its own zoo slot — no recompilation, and
+# v1 stays resident: requests pick their version by VID
 rf_v2 = RandomForest(n_estimators=8, max_depth=8, max_leaf_nodes=100,
                      random_state=2).fit(Xtrq, ytr)
 state = eng.install(state, translate(rf_v2, vid=2))
-acc_v2 = accuracy(yte, np.asarray(eng.classify(state, mk(1)).rslt))
-print(f"v2 forest acc={acc_v2:.3f} after runtime swap; "
+acc_v2 = accuracy(yte, np.asarray(eng.classify(state, mk(1, 2)).rslt))
+acc_v1_still = accuracy(yte, np.asarray(eng.classify(state, mk(1, 1)).rslt))
+print(f"v2 forest acc={acc_v2:.3f} after runtime install "
+      f"(v1 still serving: acc={acc_v1_still:.3f}); "
       f"engine traces = {eng.cache_size()} (no recompile)")
 
 # distributed deployment + failure recovery
 net = fat_tree(4)
 h = net.hosts()
 dev = DeviceModel(n_stages=10)
-prog = translate(rf_v2)
+prog = translate(rf_v2, vid=2)
 plan = plan_program(prog, net, h[0], h[-1], default_device=dev, solver="dp")
 print(f"deployed across {plan.breakdown['devices_used']}")
 dead = plan.breakdown["devices_used"][-1]
@@ -64,6 +68,6 @@ plan2 = replan(prog, net, h[0], h[-1], {dead}, default_device=dev, solver="dp")
 print(f"switch {dead} died -> replanned onto {plan2.breakdown['devices_used']} "
       f"in {plan2.solve_time*1e3:.1f}ms")
 _, dps = build_device_programs(prog, plan2, prof)
-out = run_sequential(dps, mk(1), n_classes=prof.max_classes)
+out = run_sequential(dps, mk(1, 2), n_classes=prof.max_classes)
 assert (np.asarray(out.rslt) == rf_v2.predict(Xteq)).all()
 print("post-failure answers identical — service uninterrupted.")

@@ -32,7 +32,26 @@ from repro.core.plane import PackedProgram, PlaneProfile, _classify_impl, empty_
 from repro.core.planner import DeploymentPlan
 from repro.core.translator import TableProgram
 
-__all__ = ["build_device_programs", "run_sequential", "PipelinedPlane"]
+__all__ = [
+    "build_device_programs",
+    "build_zoo_device_programs",
+    "run_sequential",
+    "PipelinedPlane",
+]
+
+
+def _shard_map(fn, *, mesh, in_specs, out_specs):
+    """``jax.shard_map`` moved over jax versions: new jax exposes it at the
+    top level (with ``check_vma``), jax<=0.4.x only under
+    ``jax.experimental.shard_map`` (with ``check_rep``).  Support both."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=False)
+    from jax.experimental.shard_map import shard_map as sm_exp
+
+    return sm_exp(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=False)
 
 
 def build_device_programs(
@@ -48,6 +67,47 @@ def build_device_programs(
     for d in devices:
         packed = empty_program(profile)
         packed = install_program(packed, program, profile, stages=per_dev[d])
+        progs.append(packed)
+    return devices, progs
+
+
+def build_zoo_device_programs(
+    programs: list[TableProgram],
+    plans: list[DeploymentPlan],
+    profile: PlaneProfile,
+) -> tuple[list[str], list[PackedProgram]]:
+    """Merge per-version deployment plans into per-device *partial zoos*.
+
+    Each version's plan may place its stages on different devices of the path
+    (``plan_zoo`` carries capacity over between versions), so a device ends up
+    hosting only the slots of the versions whose stages landed on it.  All
+    plans must share one path — the packet still visits devices in one wire
+    order, and its intermediates ride the same ppermute ring regardless of
+    which versions each hop serves.
+    """
+    if len(programs) != len(plans):
+        raise ValueError("one plan per program version required")
+    if not plans:
+        return [], []
+    path = plans[0].path
+    for p in plans[1:]:
+        if p.path != path:
+            raise ValueError(
+                "zoo plans must share a path (plan them with plan_zoo, which "
+                "pins later versions to the first version's path)"
+            )
+    devices = [
+        d for d in path
+        if any(d in p.device_stages() for p in plans)
+    ]
+    progs = []
+    for d in devices:
+        packed = empty_program(profile)
+        for program, plan in zip(programs, plans):
+            stages = plan.device_stages().get(d)
+            if stages:
+                packed = install_program(packed, program, profile,
+                                         stages=stages, vid=program.vid)
         progs.append(packed)
     return devices, progs
 
@@ -95,11 +155,10 @@ class PipelinedPlane:
         perm = [(i, (i + 1) % n_dev) for i in range(n_dev)]
 
         @functools.partial(
-            jax.shard_map,
+            _shard_map,
             mesh=self.mesh,
             in_specs=(P("switch"), P(None)),
             out_specs=P(None, "switch"),
-            check_vma=False,
         )
         def pipeline(packed_stack, micro):
             packed = jax.tree.map(lambda x: x[0], packed_stack)

@@ -49,24 +49,39 @@ class PacketBatch:
         cls,
         features: np.ndarray,
         *,
-        mid: int = 0,
-        vid: int = 0,
+        mid: int | np.ndarray = 0,
+        vid: int | np.ndarray = 0,
         max_features: int | None = None,
         n_trees: int = 1,
         n_hyperplanes: int = 1,
+        max_versions: int | None = None,
     ) -> "PacketBatch":
+        """Build a REQUEST batch.  ``mid`` and ``vid`` may each be a scalar
+        or a per-packet array — together the model-zoo dispatch key; when the
+        caller knows the target plane's version capacity, pass
+        ``max_versions`` to validate VIDs at the install/classify boundary
+        instead of shipping packets that can only ever yield ``rslt == -1``."""
         features = np.asarray(features, dtype=np.int32)
         B, F = features.shape
         Fmax = max_features or F
         if F > Fmax:
             raise ValueError(f"{F} features > plane max {Fmax}")
+        mids = np.broadcast_to(np.asarray(mid, np.int32), (B,))
+        vids = np.broadcast_to(np.asarray(vid, np.int32), (B,))
+        if max_versions is not None and vids.size and (
+            vids.min() < 0 or vids.max() >= max_versions
+        ):
+            raise ValueError(
+                f"vid range [{vids.min()}, {vids.max()}] outside the plane's "
+                f"{max_versions} model-zoo versions"
+            )
         feats = np.zeros((B, Fmax), dtype=np.int32)
         feats[:, :F] = features
         return cls(
             packet_id=jnp.arange(B, dtype=jnp.uint32),
             ptype=jnp.full((B,), PacketType.REQUEST, jnp.int32),
-            mid=jnp.full((B,), mid, jnp.int32),
-            vid=jnp.full((B,), vid, jnp.int32),
+            mid=jnp.asarray(mids),
+            vid=jnp.asarray(vids),
             rslt=jnp.full((B,), -1, jnp.int32),
             rid=jnp.zeros((B,), jnp.int32),
             features=jnp.asarray(feats),

@@ -13,6 +13,16 @@ multitree_voting) and an SVM pipeline (svm_mul partials → native adds →
 svm_predict) — and each packet selects its result by MID.  Non-request
 packets pass through untouched (forwarding is unaffected).
 
+Model zoo (the VID axis, paper Appendix A): every table array carries a
+leading version axis ``V = profile.max_versions``, so one engine hosts ``V``
+tree-pipeline programs and ``V`` SVM programs *simultaneously*, and each
+packet selects its tables by ``(MID, VID)`` at classify time.
+``install_program(..., vid=k)`` writes one version slot and preserves the
+rest; ``evict_program`` empties a slot.  Install, swap, and evict are all
+array updates against the same compiled trace.  A packet addressing an empty
+or out-of-range version slot gets ``rslt == -1`` (no match) — it never reads
+another version's tables.
+
 Distribution hooks: a ``PackedProgram`` can be *partial* — only the tables of
 the program stages assigned to this device are installed; status codes and
 SVM partial sums travel in the ``PacketBatch`` intermediates, so a packet
@@ -32,7 +42,14 @@ from repro.core.packets import PacketBatch, PacketType
 from repro.core.translator import MID_SVM, TableProgram
 from repro.kernels import ops
 
-__all__ = ["PlaneProfile", "PackedProgram", "SwitchEngine", "empty_program", "install_program"]
+__all__ = [
+    "PlaneProfile",
+    "PackedProgram",
+    "SwitchEngine",
+    "empty_program",
+    "install_program",
+    "evict_program",
+]
 
 _SENTINEL = np.uint32(0xFFFFFFFF)
 
@@ -52,12 +69,18 @@ class PlaneProfile:
     max_classes: int = 32
     max_hyperplanes: int = 12    # svm_predict direct table = 2^H entries
     levels: int = 256
+    # Model-zoo slots per pipeline (the VID range).  An operator knob like the
+    # rest: table memory and the Pallas version-grid both scale with V, so the
+    # default is a single-slot plane and zoos opt in explicitly.
+    max_versions: int = 1
 
     def __post_init__(self):
         if self.max_hyperplanes > 16:
             raise ValueError("svm_predict direct table capped at 2^16 entries")
         if self.max_layers > 32:
             raise ValueError("status code is 32-bit (paper: 16-32 bit bitstring)")
+        if self.max_versions < 1:
+            raise ValueError("need at least one model-zoo version slot")
 
 
 @jax.tree_util.register_dataclass
@@ -65,54 +88,70 @@ class PlaneProfile:
 class PackedProgram:
     """Entry arrays for one engine — the runtime-swappable 'flow table' state.
 
-    Layouts use leading layer axis [L, T, E] so the engine scans over layers.
+    All table arrays carry a leading version axis V (the model zoo); a
+    packet's VID selects its slot at classify time.  Tree layouts then use a
+    layer axis [V, L, T, E] so the engine scans over layers.
     """
 
     # tree pipeline
-    dt_cv: jax.Array       # uint32 [L, T, E]
-    dt_cm: jax.Array       # uint32 [L, T, E]
-    dt_fid: jax.Array      # int32 [L, T, E]
-    dt_flo: jax.Array      # int32 [L, T, E]
-    dt_fhi: jax.Array      # int32 [L, T, E]
-    dt_bit: jax.Array      # uint32 [L, T, E]
-    dt_valid: jax.Array    # bool [L, T, E]
-    layer_shift: jax.Array  # int32 [L] status-code bit per scan step
-    pred_codes: jax.Array  # uint32 [T, P] sorted
-    pred_labels: jax.Array  # int32 [T, P]
-    pred_valid: jax.Array  # bool [T, P]
-    pred_enable: jax.Array  # bool scalar — this device owns dt_predict/voting
-    vote_weights: jax.Array  # float32 [T]
+    dt_cv: jax.Array       # uint32 [V, L, T, E]
+    dt_cm: jax.Array       # uint32 [V, L, T, E]
+    dt_fid: jax.Array      # int32 [V, L, T, E]
+    dt_flo: jax.Array      # int32 [V, L, T, E]
+    dt_fhi: jax.Array      # int32 [V, L, T, E]
+    dt_bit: jax.Array      # uint32 [V, L, T, E]
+    dt_valid: jax.Array    # bool [V, L, T, E]
+    layer_shift: jax.Array  # int32 [L] status-code bit per scan step (shared)
+    pred_codes: jax.Array  # uint32 [V, T, P] sorted per (v, t)
+    pred_labels: jax.Array  # int32 [V, T, P]
+    pred_valid: jax.Array  # bool [V, T, P]
+    pred_enable: jax.Array  # bool [V] — this device owns v's dt_predict/voting
+    vote_weights: jax.Array  # float32 [V, T]
     # svm pipeline
-    svm_lut: jax.Array     # int32 [H, F, levels]
-    svm_bias: jax.Array    # int32 [H]
-    svm_hvalid: jax.Array  # bool [H] — which hyperplanes the model defines
-    svm_pred_table: jax.Array  # int32 [2^H]
-    svm_pred_enable: jax.Array  # bool scalar
+    svm_lut: jax.Array     # int32 [V, H, F, levels]
+    svm_bias: jax.Array    # int32 [V, H]
+    svm_hvalid: jax.Array  # bool [V, H] — which hyperplanes each version defines
+    svm_pred_table: jax.Array  # int32 [V, 2^H]
+    svm_pred_enable: jax.Array  # bool [V]
+
+    @property
+    def n_versions(self) -> int:
+        return self.pred_enable.shape[0]
 
 
 def empty_program(profile: PlaneProfile) -> PackedProgram:
+    V = profile.max_versions
     L, T, E = profile.max_layers, profile.max_trees, profile.max_entries_per_layer
     P, H, F = profile.max_leaves, profile.max_hyperplanes, profile.max_features
     return PackedProgram(
-        dt_cv=jnp.zeros((L, T, E), jnp.uint32),
-        dt_cm=jnp.full((L, T, E), _SENTINEL, jnp.uint32),
-        dt_fid=jnp.zeros((L, T, E), jnp.int32),
-        dt_flo=jnp.ones((L, T, E), jnp.int32),
-        dt_fhi=jnp.zeros((L, T, E), jnp.int32),
-        dt_bit=jnp.zeros((L, T, E), jnp.uint32),
-        dt_valid=jnp.zeros((L, T, E), bool),
+        dt_cv=jnp.zeros((V, L, T, E), jnp.uint32),
+        dt_cm=jnp.full((V, L, T, E), _SENTINEL, jnp.uint32),
+        dt_fid=jnp.zeros((V, L, T, E), jnp.int32),
+        dt_flo=jnp.ones((V, L, T, E), jnp.int32),
+        dt_fhi=jnp.zeros((V, L, T, E), jnp.int32),
+        dt_bit=jnp.zeros((V, L, T, E), jnp.uint32),
+        dt_valid=jnp.zeros((V, L, T, E), bool),
         layer_shift=jnp.arange(L, dtype=jnp.int32),
-        pred_codes=jnp.full((T, P), _SENTINEL, jnp.uint32),
-        pred_labels=jnp.zeros((T, P), jnp.int32),
-        pred_valid=jnp.zeros((T, P), bool),
-        pred_enable=jnp.asarray(False),
-        vote_weights=jnp.zeros((T,), jnp.float32),
-        svm_lut=jnp.zeros((H, F, profile.levels), jnp.int32),
-        svm_bias=jnp.zeros((H,), jnp.int32),
-        svm_hvalid=jnp.zeros((H,), bool),
-        svm_pred_table=jnp.zeros((2**H,), jnp.int32),
-        svm_pred_enable=jnp.asarray(False),
+        pred_codes=jnp.full((V, T, P), _SENTINEL, jnp.uint32),
+        pred_labels=jnp.zeros((V, T, P), jnp.int32),
+        pred_valid=jnp.zeros((V, T, P), bool),
+        pred_enable=jnp.zeros((V,), bool),
+        vote_weights=jnp.zeros((V, T), jnp.float32),
+        svm_lut=jnp.zeros((V, H, F, profile.levels), jnp.int32),
+        svm_bias=jnp.zeros((V, H), jnp.int32),
+        svm_hvalid=jnp.zeros((V, H), bool),
+        svm_pred_table=jnp.zeros((V, 2**H), jnp.int32),
+        svm_pred_enable=jnp.zeros((V,), bool),
     )
+
+
+def _check_vid(vid: int, profile: PlaneProfile) -> int:
+    if not 0 <= vid < profile.max_versions:
+        raise ValueError(
+            f"vid {vid} out of range: profile hosts {profile.max_versions} "
+            f"model-zoo versions (0..{profile.max_versions - 1})"
+        )
+    return vid
 
 
 def install_program(
@@ -121,15 +160,18 @@ def install_program(
     profile: PlaneProfile,
     *,
     stages: set[int] | None = None,
+    vid: int | None = None,
 ) -> PackedProgram:
-    """Write a TableProgram's entries into the engine state (control plane's
-    'update the entries in predefined tables', paper §6.2).
+    """Write a TableProgram's entries into one model-zoo version slot (the
+    control plane's 'update the entries in predefined tables', paper §6.2).
 
+    ``vid`` selects the slot (default: the program's own ``vid``); every other
+    slot — and the *other* pipeline's state in ``packed`` — is preserved, so
+    V tree models and V SVMs can coexist (paper Fig. 5 + Appendix A VID).
     ``stages`` restricts installation to a subset of program stages (the
-    planner's per-device assignment); ``None`` installs everything.  The
-    *other* pipeline's state in ``packed`` is preserved, so a tree model and
-    an SVM can coexist (paper Fig. 5).
+    planner's per-device assignment); ``None`` installs everything.
     """
+    vid = _check_vid(program.vid if vid is None else vid, profile)
     specs = program.stages()
     if stages is None:
         stages = set(range(len(specs)))
@@ -185,12 +227,18 @@ def install_program(
                 w[0] = 1.0
         return dataclasses.replace(
             packed,
-            dt_cv=jnp.asarray(cv), dt_cm=jnp.asarray(cm), dt_fid=jnp.asarray(fid),
-            dt_flo=jnp.asarray(flo), dt_fhi=jnp.asarray(fhi), dt_bit=jnp.asarray(bit),
-            dt_valid=jnp.asarray(valid),
-            pred_codes=jnp.asarray(pc), pred_labels=jnp.asarray(pl_),
-            pred_valid=jnp.asarray(pv), pred_enable=jnp.asarray(own_predict),
-            vote_weights=jnp.asarray(w),
+            dt_cv=packed.dt_cv.at[vid].set(jnp.asarray(cv)),
+            dt_cm=packed.dt_cm.at[vid].set(jnp.asarray(cm)),
+            dt_fid=packed.dt_fid.at[vid].set(jnp.asarray(fid)),
+            dt_flo=packed.dt_flo.at[vid].set(jnp.asarray(flo)),
+            dt_fhi=packed.dt_fhi.at[vid].set(jnp.asarray(fhi)),
+            dt_bit=packed.dt_bit.at[vid].set(jnp.asarray(bit)),
+            dt_valid=packed.dt_valid.at[vid].set(jnp.asarray(valid)),
+            pred_codes=packed.pred_codes.at[vid].set(jnp.asarray(pc)),
+            pred_labels=packed.pred_labels.at[vid].set(jnp.asarray(pl_)),
+            pred_valid=packed.pred_valid.at[vid].set(jnp.asarray(pv)),
+            pred_enable=packed.pred_enable.at[vid].set(own_predict),
+            vote_weights=packed.vote_weights.at[vid].set(jnp.asarray(w)),
         )
 
     if program.kind == "svm":
@@ -222,14 +270,46 @@ def install_program(
         hvalid[: program.n_hyperplanes] = True
         return dataclasses.replace(
             packed,
-            svm_lut=jnp.asarray(lut),
-            svm_bias=jnp.asarray(bias),
-            svm_hvalid=jnp.asarray(hvalid),
-            svm_pred_table=jnp.asarray(tbl),
-            svm_pred_enable=jnp.asarray(own_pred),
+            svm_lut=packed.svm_lut.at[vid].set(jnp.asarray(lut)),
+            svm_bias=packed.svm_bias.at[vid].set(jnp.asarray(bias)),
+            svm_hvalid=packed.svm_hvalid.at[vid].set(jnp.asarray(hvalid)),
+            svm_pred_table=packed.svm_pred_table.at[vid].set(jnp.asarray(tbl)),
+            svm_pred_enable=packed.svm_pred_enable.at[vid].set(own_pred),
         )
 
     raise ValueError(f"unknown program kind {program.kind}")
+
+
+def evict_program(
+    packed: PackedProgram,
+    profile: PlaneProfile,
+    *,
+    vid: int,
+    kind: str = "all",
+) -> PackedProgram:
+    """Empty one model-zoo version slot (``kind``: "tree" | "svm" | "all").
+
+    Packets addressing an evicted slot get ``rslt == -1`` — same as a slot
+    that was never installed.  Eviction is an array update, zero retrace.
+    """
+    vid = _check_vid(vid, profile)
+    if kind not in ("tree", "svm", "all"):
+        raise ValueError(f"unknown evict kind {kind!r}")
+    # One-slot blank (V=1) so the empty fills live only in empty_program,
+    # without materializing a full V-slot zoo per eviction.
+    blank = empty_program(dataclasses.replace(profile, max_versions=1))
+    upd = {}
+    tree_fields = ("dt_cv", "dt_cm", "dt_fid", "dt_flo", "dt_fhi", "dt_bit",
+                   "dt_valid", "pred_codes", "pred_labels", "pred_valid",
+                   "pred_enable", "vote_weights")
+    svm_fields = ("svm_lut", "svm_bias", "svm_hvalid", "svm_pred_table",
+                  "svm_pred_enable")
+    fields = (tree_fields if kind == "tree"
+              else svm_fields if kind == "svm"
+              else tree_fields + svm_fields)
+    for f in fields:
+        upd[f] = getattr(packed, f).at[vid].set(getattr(blank, f)[0])
+    return dataclasses.replace(packed, **upd)
 
 
 # --------------------------------------------------------------------------
@@ -238,41 +318,55 @@ def install_program(
 def _classify_impl(packed: PackedProgram, pb: PacketBatch, *, n_classes: int,
                    mode: str | None) -> PacketBatch:
     feats = pb.features
+    V = packed.n_versions
+    # Classify-boundary VID validation: out-of-range packets are processed
+    # against slot 0's tables (shape-stable) but their result is forced to -1.
+    vid_ok = (pb.vid >= 0) & (pb.vid < V)
+    vid = jnp.where(vid_ok, pb.vid, 0)
 
     # ---- tree pipeline: scan the dt_layer tables over layers ----
     def layer_step(codes, xs):
         cv, cm, fid, flo, fhi, bit, valid, shift = xs
-        new = ops.tcam_match(codes, feats, cv, cm, fid, flo, fhi, bit, valid,
-                             shift, mode=mode)
+        new = ops.tcam_match_v(codes, feats, vid, cv, cm, fid, flo, fhi, bit,
+                               valid, shift, mode=mode)
         return new, None
 
-    xs = (packed.dt_cv, packed.dt_cm, packed.dt_fid, packed.dt_flo,
-          packed.dt_fhi, packed.dt_bit, packed.dt_valid, packed.layer_shift)
+    per_layer = lambda a: jnp.moveaxis(a, 1, 0)  # [V, L, ...] -> [L, V, ...]
+    xs = (per_layer(packed.dt_cv), per_layer(packed.dt_cm),
+          per_layer(packed.dt_fid), per_layer(packed.dt_flo),
+          per_layer(packed.dt_fhi), per_layer(packed.dt_bit),
+          per_layer(packed.dt_valid), packed.layer_shift)
     codes, _ = jax.lax.scan(layer_step, pb.codes, xs)
 
-    tree_label, _per_tree = ops.forest_predict_vote(
-        codes, packed.pred_codes, packed.pred_labels, packed.pred_valid,
+    tree_label, _per_tree = ops.forest_predict_vote_v(
+        codes, vid, packed.pred_codes, packed.pred_labels, packed.pred_valid,
         packed.vote_weights, n_classes, mode=mode)
-    tree_result = jnp.where(packed.pred_enable, tree_label, -1)
+    tree_result = jnp.where(packed.pred_enable[vid], tree_label, -1)
 
     # ---- svm pipeline: LUT partials + native adds ----
-    partial = ops.svm_lookup(feats, packed.svm_lut, jnp.zeros_like(packed.svm_bias),
-                             mode=mode)
+    partial = ops.svm_lookup_v(feats, vid, packed.svm_lut,
+                               jnp.zeros_like(packed.svm_bias), mode=mode)
     acc = pb.svm_acc + partial
-    sums = acc + packed.svm_bias[None, :]
-    signs = ((sums >= 0) & packed.svm_hvalid[None, :]).astype(jnp.int32)
+    sums = acc + packed.svm_bias[vid]
+    signs = ((sums >= 0) & packed.svm_hvalid[vid]).astype(jnp.int32)
     sign_code = (signs << jnp.arange(signs.shape[1])[None, :]).sum(axis=1)
-    svm_result = jnp.where(packed.svm_pred_enable, packed.svm_pred_table[sign_code], -1)
+    svm_label = packed.svm_pred_table[vid, sign_code]
+    svm_result = jnp.where(packed.svm_pred_enable[vid], svm_label, -1)
 
     # ---- result select + forwarding passthrough ----
     is_req = pb.ptype == PacketType.REQUEST
     result = jnp.where(pb.mid == MID_SVM, svm_result, tree_result)
+    result = jnp.where(vid_ok, result, -1)
     rslt = jnp.where(is_req & (result >= 0), result, pb.rslt)
     return dataclasses.replace(pb, codes=codes, svm_acc=acc, rslt=rslt)
 
 
 class SwitchEngine:
-    """One programmable data plane: jit-compiled once per (profile, batch shape)."""
+    """One programmable data plane: jit-compiled once per (profile, batch shape).
+
+    Hosts a model zoo: ``profile.max_versions`` tree programs and as many
+    SVMs, resident simultaneously, dispatched per packet by (MID, VID).
+    """
 
     def __init__(self, profile: PlaneProfile, *, mode: str | None = None) -> None:
         self.profile = profile
@@ -294,5 +388,11 @@ class SwitchEngine:
         return empty_program(self.profile)
 
     def install(self, packed: PackedProgram, program: TableProgram,
-                stages: set[int] | None = None) -> PackedProgram:
-        return install_program(packed, program, self.profile, stages=stages)
+                stages: set[int] | None = None, *,
+                vid: int | None = None) -> PackedProgram:
+        return install_program(packed, program, self.profile, stages=stages,
+                               vid=vid)
+
+    def evict(self, packed: PackedProgram, *, vid: int,
+              kind: str = "all") -> PackedProgram:
+        return evict_program(packed, self.profile, vid=vid, kind=kind)

@@ -53,6 +53,7 @@ __all__ = [
     "DeploymentPlan",
     "solve_path",
     "plan_program",
+    "plan_zoo",
     "replan",
 ]
 
@@ -500,18 +501,28 @@ def plan_program(
     solver: str = "dp",
     n_candidate_paths: int = 4,
     exclude: set[str] | None = None,
+    reserved_slots: dict[str, int] | None = None,
+    candidate_paths: list[list[str]] | None = None,
 ) -> DeploymentPlan:
-    """Full ACORN planning: candidate paths × per-unit placement."""
+    """Full ACORN planning: candidate paths × per-unit placement.
+
+    ``reserved_slots`` carries capacity already consumed by previously planned
+    programs (the model-zoo per-version assignment: versions planned earlier
+    shrink the slots available to later ones, pushing them onto other devices
+    of the path).  ``candidate_paths`` overrides path enumeration — used by
+    ``plan_zoo`` to pin every version to one wire path.
+    """
     t0 = time.perf_counter()
     specs = program.stages()
     devices = devices or {}
     exclude = exclude or set()
+    reserved_slots = reserved_slots or {}
     req_bytes = packets.request_bytes(
         program.n_features,
         n_trees=program.n_trees,
         n_hyperplanes=program.n_hyperplanes,
     )
-    paths = network.k_shortest_paths(src, dst, n_candidate_paths)
+    paths = candidate_paths or network.k_shortest_paths(src, dst, n_candidate_paths)
     if not paths:
         raise ValueError(f"no path {src} -> {dst}")
     units = _program_units(program)
@@ -524,7 +535,10 @@ def plan_program(
             for d in path
             if network.kind.get(d) == "switch" and network.programmable.get(d, False)
         }
-        free = {d: devmap[d].n_stages for d in devmap}
+        free = {
+            d: max(0, devmap[d].n_stages - reserved_slots.get(d, 0))
+            for d in devmap
+        }
         assignment: dict[int, str] = {}
         unit_plans: list[Plan] = []
         ok = True
@@ -576,6 +590,40 @@ def plan_program(
         )
     best.solve_time = time.perf_counter() - t0
     return best
+
+
+def plan_zoo(
+    programs: list[TableProgram],
+    network: Network,
+    src: str,
+    dst: str,
+    **kw,
+) -> list[DeploymentPlan]:
+    """Per-version stage assignment for a model zoo (paper App. B extended
+    along the VID axis): plan each version's program in order with capacity
+    carry-over, so versions planned later are pushed onto devices of the path
+    that still have free slots — different versions of a model can live on
+    different devices, all serving the same wire path simultaneously.
+
+    The first version picks the path; later versions are pinned to it so the
+    merged deployment has one consistent hop order
+    (see ``distributed_plane.build_zoo_device_programs``).
+    """
+    reserved: dict[str, int] = {}
+    plans: list[DeploymentPlan] = []
+    pinned: list[list[str]] | None = None
+    for program in programs:
+        plan = plan_program(
+            program, network, src, dst,
+            reserved_slots=dict(reserved),
+            candidate_paths=pinned,
+            **kw,
+        )
+        pinned = [plan.path]
+        for dev in plan.assignment.values():
+            reserved[dev] = reserved.get(dev, 0) + 1
+        plans.append(plan)
+    return plans
 
 
 def replan(

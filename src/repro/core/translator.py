@@ -82,7 +82,7 @@ class StageSpec:
 class TableProgram:
     kind: str  # "dt" | "rf" | "svm"
     mid: int
-    vid: int
+    vid: int   # model-zoo version slot this program targets (Appendix A VID)
     n_features: int
     n_classes: int
     feature_width: int
@@ -98,6 +98,13 @@ class TableProgram:
     frac_bits: int = 12
     muls_per_stage: int = 8
     trees_per_block: int = 2
+
+    def __post_init__(self):
+        if self.vid < 0:
+            raise ValueError(
+                f"vid {self.vid} invalid: the ACORN VID header field is "
+                "unsigned (version slots are 0-indexed)"
+            )
 
     # ------------------------------------------------------------ structure
     @property

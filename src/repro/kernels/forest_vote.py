@@ -11,8 +11,14 @@ followed by weighted one-hot voting and an argmax with smaller-class-id tie
 break (matches ``RandomForest.vote``).  Everything is VPU elementwise +
 reductions over VMEM-resident blocks; no gathers.
 
-Grid: (batch blocks,).  Entry tables [T, P] are fully VMEM-resident
-(T<=8, P<=1024 → 32 KiB).
+Model-zoo dispatch: leaf tables carry a leading version axis ``[V, T, P]``
+and the grid gains an innermost version dimension.  Each step's table block
+is selected by the step's vid scalar (``pl.program_id(1)``) — one version's
+``[T, P]`` tables VMEM-resident at a time — and the outputs of packets whose
+``vid`` matches are merged into the revisited output block.
+
+Grid: (batch blocks, versions).  Per-step entry tables [T, P] stay fully
+VMEM-resident (T<=8, P<=1024 → 32 KiB) independent of V.
 """
 from __future__ import annotations
 
@@ -22,19 +28,25 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["forest_predict_vote_pallas"]
+__all__ = ["forest_predict_vote_pallas", "forest_predict_vote_pallas_v"]
 
 
-def _kernel(codes_ref, pc_ref, plab_ref, pvalid_ref, w_ref, out_label_ref,
-            out_per_tree_ref, *, n_classes: int):
+def _kernel(codes_ref, vid_ref, pc_ref, plab_ref, pvalid_ref, w_ref,
+            out_label_ref, out_per_tree_ref, *, n_classes: int):
+    v = pl.program_id(1)
+
+    @pl.when(v == 0)
+    def _init():
+        out_label_ref[...] = jnp.zeros_like(out_label_ref)
+        out_per_tree_ref[...] = jnp.zeros_like(out_per_tree_ref)
+
     codes = codes_ref[...]                       # [Bb, T] uint32
-    pc = pc_ref[...]                             # [T, P] uint32
-    plab = plab_ref[...]                         # [T, P] int32
-    pvalid = pvalid_ref[...]                     # [T, P] int32
+    pc = pc_ref[0]                               # [T, P] uint32 (this version)
+    plab = plab_ref[0]                           # [T, P] int32
+    pvalid = pvalid_ref[0]                       # [T, P] int32
     eq = (codes[:, :, None] == pc[None]) & (pvalid[None] != 0)   # [Bb, T, P]
     per_tree = jnp.sum(jnp.where(eq, plab[None], 0), axis=2)     # [Bb, T]
-    out_per_tree_ref[...] = per_tree.astype(jnp.int32)
-    w = w_ref[...]                               # [1, T] f32
+    w = w_ref[0]                                 # [1, T] f32
     classes = jax.lax.iota(jnp.int32, n_classes)
     onehot = (per_tree[:, :, None] == classes[None, None, :]).astype(jnp.float32)
     scores = jnp.sum(onehot * w[0][None, :, None], axis=1)       # [Bb, C]
@@ -42,12 +54,61 @@ def _kernel(codes_ref, pc_ref, plab_ref, pvalid_ref, w_ref, out_label_ref,
     best = jnp.max(scores, axis=1, keepdims=True)
     is_best = scores >= best
     first_best = is_best & (jnp.cumsum(is_best.astype(jnp.int32), axis=1) == 1)
-    out_label_ref[...] = jnp.sum(
+    label = jnp.sum(
         jnp.where(first_best, classes[None, :], 0), axis=1, keepdims=True
     ).astype(jnp.int32)
+    mine = vid_ref[...] == v                     # [Bb, 1]
+    out_label_ref[...] = jnp.where(mine, label, out_label_ref[...])
+    out_per_tree_ref[...] = jnp.where(mine, per_tree.astype(jnp.int32),
+                                      out_per_tree_ref[...])
 
 
 @functools.partial(jax.jit, static_argnames=("n_classes", "block_b", "interpret"))
+def forest_predict_vote_pallas_v(
+    codes: jax.Array,        # uint32 [B, T]
+    vid: jax.Array,          # int32 [B] model version per packet, in [0, V)
+    pred_codes: jax.Array,   # uint32 [V, T, P]
+    pred_labels: jax.Array,  # int32 [V, T, P]
+    pred_valid: jax.Array,   # bool [V, T, P]
+    weights: jax.Array,      # float32 [V, T]
+    n_classes: int,
+    *,
+    block_b: int = 256,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    B, T = codes.shape
+    V, _, P = pred_codes.shape
+    pad_b = (-B) % block_b
+    codes_p = jnp.pad(codes, ((0, pad_b), (0, 0)))
+    vid_p = jnp.pad(vid.astype(jnp.int32).reshape(-1, 1), ((0, pad_b), (0, 0)),
+                    constant_values=-1)
+    B_pad = codes_p.shape[0]
+
+    label, per_tree = pl.pallas_call(
+        functools.partial(_kernel, n_classes=n_classes),
+        grid=(B_pad // block_b, V),
+        in_specs=[
+            pl.BlockSpec((block_b, T), lambda i, v: (i, 0)),
+            pl.BlockSpec((block_b, 1), lambda i, v: (i, 0)),
+            pl.BlockSpec((1, T, P), lambda i, v: (v, 0, 0)),
+            pl.BlockSpec((1, T, P), lambda i, v: (v, 0, 0)),
+            pl.BlockSpec((1, T, P), lambda i, v: (v, 0, 0)),
+            pl.BlockSpec((1, 1, T), lambda i, v: (v, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, 1), lambda i, v: (i, 0)),
+            pl.BlockSpec((block_b, T), lambda i, v: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B_pad, 1), jnp.int32),
+            jax.ShapeDtypeStruct((B_pad, T), jnp.int32),
+        ],
+        interpret=interpret,
+    )(codes_p, vid_p, pred_codes, pred_labels, pred_valid.astype(jnp.int32),
+      weights.reshape(V, 1, T).astype(jnp.float32))
+    return label[:B, 0], per_tree[:B]
+
+
 def forest_predict_vote_pallas(
     codes: jax.Array,        # uint32 [B, T]
     pred_codes: jax.Array,   # uint32 [T, P]
@@ -59,31 +120,8 @@ def forest_predict_vote_pallas(
     block_b: int = 256,
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
-    B, T = codes.shape
-    P = pred_codes.shape[1]
-    pad_b = (-B) % block_b
-    codes_p = jnp.pad(codes, ((0, pad_b), (0, 0)))
-    B_pad = codes_p.shape[0]
-
-    label, per_tree = pl.pallas_call(
-        functools.partial(_kernel, n_classes=n_classes),
-        grid=(B_pad // block_b,),
-        in_specs=[
-            pl.BlockSpec((block_b, T), lambda i: (i, 0)),
-            pl.BlockSpec((T, P), lambda i: (0, 0)),
-            pl.BlockSpec((T, P), lambda i: (0, 0)),
-            pl.BlockSpec((T, P), lambda i: (0, 0)),
-            pl.BlockSpec((1, T), lambda i: (0, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
-            pl.BlockSpec((block_b, T), lambda i: (i, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((B_pad, 1), jnp.int32),
-            jax.ShapeDtypeStruct((B_pad, T), jnp.int32),
-        ],
-        interpret=interpret,
-    )(codes_p, pred_codes, pred_labels, pred_valid.astype(jnp.int32),
-      weights.reshape(1, -1).astype(jnp.float32))
-    return label[:B, 0], per_tree[:B]
+    """Single-version API: V=1 slice of the zoo kernel, every packet on vid 0."""
+    vid = jnp.zeros((codes.shape[0],), jnp.int32)
+    return forest_predict_vote_pallas_v(
+        codes, vid, pred_codes[None], pred_labels[None], pred_valid[None],
+        weights.reshape(1, -1), n_classes, block_b=block_b, interpret=interpret)

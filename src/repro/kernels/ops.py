@@ -11,11 +11,17 @@ import jax
 
 from repro.kernels import ref
 from repro.kernels.decode_attn import decode_attn_pallas
-from repro.kernels.forest_vote import forest_predict_vote_pallas
-from repro.kernels.svm_lookup import svm_lookup_pallas
-from repro.kernels.tcam_match import tcam_match_pallas
+from repro.kernels.forest_vote import (
+    forest_predict_vote_pallas,
+    forest_predict_vote_pallas_v,
+)
+from repro.kernels.svm_lookup import svm_lookup_pallas, svm_lookup_pallas_v
+from repro.kernels.tcam_match import tcam_match_pallas, tcam_match_pallas_v
 
-__all__ = ["tcam_match", "svm_lookup", "forest_predict_vote", "decode_attn"]
+__all__ = [
+    "tcam_match", "svm_lookup", "forest_predict_vote", "decode_attn",
+    "tcam_match_v", "svm_lookup_v", "forest_predict_vote_v",
+]
 
 
 def _resolve(mode: str | None) -> str:
@@ -51,6 +57,39 @@ def forest_predict_vote(codes, pred_codes, pred_labels, pred_valid, weights,
     return forest_predict_vote_pallas(codes, pred_codes, pred_labels,
                                       pred_valid, weights, n_classes,
                                       interpret=(m == "interpret"))
+
+
+def tcam_match_v(codes, features, vid, code_value, code_mask, fid, f_lo, f_hi,
+                 set_bit, valid, shift, *, mode: str | None = None):
+    """Version-indexed tcam_match: tables are [V, T, E], packet b uses vid[b]."""
+    m = _resolve(mode)
+    if m == "ref":
+        return ref.tcam_match_v(codes, features, vid, code_value, code_mask,
+                                fid, f_lo, f_hi, set_bit, valid, shift)
+    return tcam_match_pallas_v(codes, features, vid, code_value, code_mask,
+                               fid, f_lo, f_hi, set_bit, valid, shift,
+                               interpret=(m == "interpret"))
+
+
+def svm_lookup_v(features, vid, lut, bias, *, mode: str | None = None):
+    """Version-indexed svm_lookup: lut is [V, H, F, L], packet b uses vid[b]."""
+    m = _resolve(mode)
+    if m == "ref":
+        return ref.svm_lookup_v(features, vid, lut, bias)
+    return svm_lookup_pallas_v(features, vid, lut, bias,
+                               interpret=(m == "interpret"))
+
+
+def forest_predict_vote_v(codes, vid, pred_codes, pred_labels, pred_valid,
+                          weights, n_classes, *, mode: str | None = None):
+    """Version-indexed dt_predict + voting: tables are [V, T, P]."""
+    m = _resolve(mode)
+    if m == "ref":
+        return ref.forest_predict_vote_v(codes, vid, pred_codes, pred_labels,
+                                         pred_valid, weights, n_classes)
+    return forest_predict_vote_pallas_v(codes, vid, pred_codes, pred_labels,
+                                        pred_valid, weights, n_classes,
+                                        interpret=(m == "interpret"))
 
 
 def decode_attn(q, k, v, kv_len, *, mode: str | None = None):

@@ -10,7 +10,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["tcam_match", "svm_lookup", "forest_predict_vote", "decode_attn"]
+__all__ = [
+    "tcam_match", "svm_lookup", "forest_predict_vote", "decode_attn",
+    "tcam_match_v", "svm_lookup_v", "forest_predict_vote_v",
+]
 
 
 def tcam_match(
@@ -43,6 +46,40 @@ def tcam_match(
     return jnp.where(hit, new, codes)
 
 
+def tcam_match_v(
+    codes: jax.Array,      # uint32 [B, T]
+    features: jax.Array,   # int32 [B, F]
+    vid: jax.Array,        # int32 [B] model version per packet, in [0, V)
+    code_value: jax.Array,  # uint32 [V, T, E]
+    code_mask: jax.Array,   # uint32 [V, T, E]
+    fid: jax.Array,         # int32 [V, T, E]
+    f_lo: jax.Array,        # int32 [V, T, E]
+    f_hi: jax.Array,        # int32 [V, T, E]
+    set_bit: jax.Array,     # uint32 [V, T, E]
+    valid: jax.Array,       # bool [V, T, E]
+    shift: jax.Array,       # int32 scalar
+) -> jax.Array:
+    """Version-indexed ``tcam_match``: packet b matches against the entry
+    tables of version ``vid[b]`` (the model-zoo per-packet dispatch).
+
+    Same asymptotic cost as the single-version oracle — the per-packet table
+    gather produces the [B, T, E] working set the V=1 path broadcasts anyway.
+    """
+    cv = code_value[vid]                                   # [B, T, E]
+    cm = code_mask[vid]
+    fidv = fid[vid]                                        # [B, T, E]
+    f = jax.vmap(lambda ft, ix: ft[ix])(features, fidv)    # [B, T, E]
+    code_ok = (codes[:, :, None] & cm) == cv
+    ok = code_ok & (f >= f_lo[vid]) & (f <= f_hi[vid]) & valid[vid]
+    hit = ok.any(axis=-1)
+    first = jnp.argmax(ok, axis=-1)                        # [B, T]
+    bit = jnp.take_along_axis(set_bit[vid], first[..., None], axis=-1)[
+        ..., 0
+    ].astype(jnp.uint32)
+    new = codes | (bit << shift.astype(jnp.uint32))
+    return jnp.where(hit, new, codes)
+
+
 def svm_lookup(
     features: jax.Array,  # int32 [B, F]
     lut: jax.Array,       # int32 [H, F, L]  precomputed products
@@ -61,6 +98,25 @@ def svm_lookup(
         axis=2,
     )[:, :, 0, :]                                      # [B, F, H]
     return per_f.sum(axis=1).astype(jnp.int32) + bias[None, :]
+
+
+def svm_lookup_v(
+    features: jax.Array,  # int32 [B, F]
+    vid: jax.Array,       # int32 [B] model version per packet, in [0, V)
+    lut: jax.Array,       # int32 [V, H, F, L]
+    bias: jax.Array,      # int32 [V, H]
+) -> jax.Array:
+    """Version-indexed ``svm_lookup``: packet b sums the product LUTs of
+    version ``vid[b]``."""
+    H = lut.shape[1]
+    F = lut.shape[2]
+
+    def one(feat, v):
+        idx = jnp.broadcast_to(feat[None, :, None], (H, F, 1)).astype(jnp.int32)
+        per_f = jnp.take_along_axis(lut[v], idx, axis=2)[:, :, 0]   # [H, F]
+        return per_f.sum(axis=1).astype(jnp.int32)
+
+    return jax.vmap(one)(features, vid) + bias[vid]
 
 
 def forest_predict_vote(
@@ -86,6 +142,33 @@ def forest_predict_vote(
     )  # [B, T]
     onehot = (per_tree[:, :, None] == jnp.arange(n_classes)[None, None, :])
     scores = (onehot * weights[None, :, None]).sum(axis=1)  # [B, C]
+    return jnp.argmax(scores, axis=-1).astype(jnp.int32), per_tree.astype(jnp.int32)
+
+
+def forest_predict_vote_v(
+    codes: jax.Array,        # uint32 [B, T]
+    vid: jax.Array,          # int32 [B] model version per packet, in [0, V)
+    pred_codes: jax.Array,   # uint32 [V, T, P] sorted ascending per (v, t)
+    pred_labels: jax.Array,  # int32 [V, T, P]
+    pred_valid: jax.Array,   # bool [V, T, P]
+    weights: jax.Array,      # float32 [V, T]
+    n_classes: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Version-indexed ``dt_predict`` + ``multitree_voting``: packet b uses
+    the leaf tables and voting weights of version ``vid[b]``."""
+
+    def one_packet(c, v):
+        def one_tree(ct, pct, plt, pvt):
+            pos = jnp.clip(jnp.searchsorted(pct, ct), 0, pct.shape[0] - 1)
+            found = (pct[pos] == ct) & pvt[pos]
+            return jnp.where(found, plt[pos], 0)
+
+        return jax.vmap(one_tree)(c, pred_codes[v], pred_labels[v], pred_valid[v])
+
+    per_tree = jax.vmap(one_packet)(codes, vid)            # [B, T]
+    w = weights[vid]                                       # [B, T]
+    onehot = per_tree[:, :, None] == jnp.arange(n_classes)[None, None, :]
+    scores = (onehot * w[:, :, None]).sum(axis=1)          # [B, C]
     return jnp.argmax(scores, axis=-1).astype(jnp.int32), per_tree.astype(jnp.int32)
 
 

@@ -8,12 +8,19 @@ features so the one-hot block stays in VMEM.
 Exactness: each per-chunk partial sum is a sum of ``chunk_f`` products, each
 ``|p| < 2**(frac_bits + 7)``; with the default chunk_f=8 and frac_bits<=16 the
 f32 partial is integer-exact (< 2**24); partials are then accumulated in f32
-across chunks by the sequential grid dimension and rounded once at the end —
+across chunks by the sequential grid dimensions and rounded once at the end —
 across-chunk totals stay well under 2**31 and each chunk total under 2**24,
 so the final int32 equals the reference integer sum.
 
-Grid: (batch blocks, feature chunks) — the feature-chunk axis is the
-sequential reduction axis; the output block is revisited and accumulated.
+Model-zoo dispatch: LUTs carry a leading version axis ``[V, H, F, L]`` and
+the grid gains a version dimension (between batch and chunk).  Each step
+streams one (version, chunk) LUT slice into VMEM — selected by the step's vid
+scalar ``pl.program_id(1)`` — and accumulates masked partials only into the
+packets whose ``vid`` matches; version masks are disjoint, so the revisited
+accumulator ends up holding exactly one version's sum per packet.
+
+Grid: (batch blocks, versions, feature chunks) — versions and chunks are the
+sequential reduction axes; the output block is revisited and accumulated.
 """
 from __future__ import annotations
 
@@ -23,20 +30,25 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["svm_lookup_pallas"]
+__all__ = ["svm_lookup_pallas", "svm_lookup_pallas_v"]
 
 
-def _kernel(feats_ref, lut_ref, bias_ref, out_ref, *, levels: int, n_chunks: int):
-    c = pl.program_id(1)
+def _kernel(feats_ref, vid_ref, lut_ref, bias_ref, out_ref, *, levels: int):
+    v = pl.program_id(1)
+    c = pl.program_id(2)
+
+    @pl.when((v == 0) & (c == 0))
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    mine = (vid_ref[...] == v).astype(jnp.float32)   # [Bb, 1]
 
     @pl.when(c == 0)
-    def _init():
-        out_ref[...] = jnp.broadcast_to(
-            bias_ref[...].astype(jnp.float32), out_ref.shape
-        )
+    def _bias():
+        out_ref[...] += mine * bias_ref[0].astype(jnp.float32)
 
     feats = feats_ref[...]                      # [Bb, Fc] int32
-    lut = lut_ref[0]                            # [Fc*L, H] f32 (chunk slice)
+    lut = lut_ref[0, 0]                         # [Fc*L, H] f32 (this v, chunk)
     onehot = (
         feats[:, :, None] == jax.lax.iota(jnp.int32, levels)[None, None, :]
     ).astype(jnp.float32)                       # [Bb, Fc, L]
@@ -44,10 +56,59 @@ def _kernel(feats_ref, lut_ref, bias_ref, out_ref, *, levels: int, n_chunks: int
     partial = jnp.dot(
         onehot.reshape(Bb, Fc * L), lut, preferred_element_type=jnp.float32
     )                                           # [Bb, H]
-    out_ref[...] += partial
+    out_ref[...] += mine * partial
 
 
 @functools.partial(jax.jit, static_argnames=("block_b", "chunk_f", "interpret"))
+def svm_lookup_pallas_v(
+    features: jax.Array,  # int32 [B, F]
+    vid: jax.Array,       # int32 [B] model version per packet, in [0, V)
+    lut: jax.Array,       # int32 [V, H, F, L]
+    bias: jax.Array,      # int32 [V, H]
+    *,
+    block_b: int = 128,
+    chunk_f: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    B, F = features.shape
+    V, H, _, L = lut.shape
+
+    pad_b = (-B) % block_b
+    pad_f = (-F) % chunk_f
+    pad_h = (-H) % 8
+    feats = jnp.pad(features, ((0, pad_b), (0, pad_f)), constant_values=-1)
+    vid_p = jnp.pad(vid.astype(jnp.int32).reshape(-1, 1), ((0, pad_b), (0, 0)),
+                    constant_values=-1)
+    # padded feature columns match no level => contribute 0
+    lut_p = jnp.pad(lut, ((0, 0), (0, pad_h), (0, pad_f), (0, 0)))
+    bias_p = jnp.pad(bias, ((0, 0), (0, pad_h)))
+    B_pad, F_pad = feats.shape
+    H_pad = lut_p.shape[1]
+    n_chunks = F_pad // chunk_f
+    # [V, n_chunks, Fc*L, H] so each grid step streams one chunk of one
+    # version's LUT.
+    lut_r = (
+        lut_p.transpose(0, 2, 3, 1)
+        .reshape(V, n_chunks, chunk_f * L, H_pad)
+        .astype(jnp.float32)
+    )
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, levels=L),
+        grid=(B_pad // block_b, V, n_chunks),
+        in_specs=[
+            pl.BlockSpec((block_b, chunk_f), lambda i, v, c: (i, c)),
+            pl.BlockSpec((block_b, 1), lambda i, v, c: (i, 0)),
+            pl.BlockSpec((1, 1, chunk_f * L, H_pad), lambda i, v, c: (v, c, 0, 0)),
+            pl.BlockSpec((1, H_pad), lambda i, v, c: (v, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, H_pad), lambda i, v, c: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B_pad, H_pad), jnp.float32),
+        interpret=interpret,
+    )(feats, vid_p, lut_r, bias_p)
+    return jnp.round(out[:B, :H]).astype(jnp.int32)
+
+
 def svm_lookup_pallas(
     features: jax.Array,  # int32 [B, F]
     lut: jax.Array,       # int32 [H, F, L]
@@ -57,36 +118,8 @@ def svm_lookup_pallas(
     chunk_f: int = 8,
     interpret: bool = False,
 ) -> jax.Array:
-    B, F = features.shape
-    H, _, L = lut.shape
-
-    pad_b = (-B) % block_b
-    pad_f = (-F) % chunk_f
-    pad_h = (-H) % 8
-    feats = jnp.pad(features, ((0, pad_b), (0, pad_f)), constant_values=-1)
-    # padded feature columns match no level => contribute 0
-    lut_p = jnp.pad(lut, ((0, pad_h), (0, pad_f), (0, 0)))
-    bias_p = jnp.pad(bias, (0, pad_h))
-    B_pad, F_pad = feats.shape
-    H_pad = lut_p.shape[0]
-    n_chunks = F_pad // chunk_f
-    # [n_chunks, Fc*L, H] so each grid step streams one chunk of the LUT.
-    lut_r = (
-        lut_p.transpose(1, 2, 0)
-        .reshape(n_chunks, chunk_f * L, H_pad)
-        .astype(jnp.float32)
-    )
-
-    out = pl.pallas_call(
-        functools.partial(_kernel, levels=L, n_chunks=n_chunks),
-        grid=(B_pad // block_b, n_chunks),
-        in_specs=[
-            pl.BlockSpec((block_b, chunk_f), lambda i, c: (i, c)),
-            pl.BlockSpec((1, chunk_f * L, H_pad), lambda i, c: (c, 0, 0)),
-            pl.BlockSpec((1, H_pad), lambda i, c: (0, 0)),
-        ],
-        out_specs=pl.BlockSpec((block_b, H_pad), lambda i, c: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((B_pad, H_pad), jnp.float32),
-        interpret=interpret,
-    )(feats, lut_r, bias_p.reshape(1, -1))
-    return jnp.round(out[:B, :H]).astype(jnp.int32)
+    """Single-version API: V=1 slice of the zoo kernel, every packet on vid 0."""
+    vid = jnp.zeros((features.shape[0],), jnp.int32)
+    return svm_lookup_pallas_v(
+        features, vid, lut[None], bias[None],
+        block_b=block_b, chunk_f=chunk_f, interpret=interpret)

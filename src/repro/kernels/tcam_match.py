@@ -12,13 +12,21 @@ ternary keys in one cycle; the TPU has no CAM, so we re-express the lookup as
      first match is isolated with an exclusive-cumsum trick
      (``ok & (cumsum(ok) == 1)``), avoiding argmax+gather.
 
-Grid: (batch blocks, trees).  Block shapes are MXU-aligned: the batch tile is
-``block_b`` (multiple of 8, lane-dim padded feature count F_pad and entry
-count E_pad are multiples of 128).
+Model-zoo dispatch: entry tables carry a leading version axis ``[V, T, E]``
+and the grid gains an innermost version dimension.  Each grid step indexes
+its table block by the step's vid scalar (``pl.program_id(2)``) — so only one
+version's entries are VMEM-resident at a time — and merges results for the
+packets whose ``vid`` matches that version (masked select on the revisited
+output block).  Packets with no hit, or whose version differs, keep their
+incoming status code.
+
+Grid: (batch blocks, trees, versions).  Block shapes are MXU-aligned: the
+batch tile is ``block_b`` (multiple of 8, lane-dim padded feature count F_pad
+and entry count E_pad are multiples of 128).
 
 VMEM budget per step (block_b=256, F_pad=128, E_pad=128):
   feats 256*128*4 = 128 KiB, f_sel 128*128*4 = 64 KiB, fv 256*128*4 = 128 KiB,
-  entry arrays 6*128*4 ≈ 3 KiB  → well under 16 MiB.
+  entry arrays 6*128*4 ≈ 3 KiB  → well under 16 MiB, independent of V.
 """
 from __future__ import annotations
 
@@ -29,30 +37,38 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-__all__ = ["tcam_match_pallas"]
+__all__ = ["tcam_match_pallas", "tcam_match_pallas_v"]
 
 
-def _kernel(codes_ref, feats_ref, fsel_ref, cv_ref, cm_ref, flo_ref, fhi_ref,
-            bit_ref, valid_ref, shift_ref, out_ref):
+def _kernel(codes_ref, vid_ref, feats_ref, fsel_ref, cv_ref, cm_ref, flo_ref,
+            fhi_ref, bit_ref, valid_ref, shift_ref, out_ref):
+    v = pl.program_id(2)
+    codes = codes_ref[...]                      # [Bb, 1] uint32
+
+    @pl.when(v == 0)
+    def _passthrough():
+        out_ref[...] = codes
+
     feats = feats_ref[...]                      # [Bb, F_pad] f32
-    fsel = fsel_ref[0]                          # [E_pad, F_pad] f32 (this tree)
+    fsel = fsel_ref[0, 0]                       # [E_pad, F_pad] f32 (this v, tree)
     # MXU: select the tested feature value for every entry.
     fv = jnp.dot(feats, fsel.T, preferred_element_type=jnp.float32)  # [Bb, E]
-    codes = codes_ref[...]                      # [Bb, 1] uint32
-    cv = cv_ref[0][None, :]                     # [1, E] uint32
-    cm = cm_ref[0][None, :]
-    flo = flo_ref[0][None, :]                   # [1, E] f32
-    fhi = fhi_ref[0][None, :]
-    valid = valid_ref[0][None, :]
+    cv = cv_ref[0, 0][None, :]                  # [1, E] uint32
+    cm = cm_ref[0, 0][None, :]
+    flo = flo_ref[0, 0][None, :]                # [1, E] f32
+    fhi = fhi_ref[0, 0][None, :]
+    valid = valid_ref[0, 0][None, :]
     code_ok = (codes & cm) == cv                # [Bb, E]
     ok = code_ok & (fv >= flo) & (fv <= fhi) & (valid != 0)
     # Priority encode: first (== highest-priority) match only.
     first = ok & (jnp.cumsum(ok.astype(jnp.int32), axis=1) == 1)
-    bit = jnp.sum(jnp.where(first, bit_ref[0][None, :], 0), axis=1, keepdims=True)
+    bit = jnp.sum(jnp.where(first, bit_ref[0, 0][None, :], 0), axis=1,
+                  keepdims=True)
     hit = ok.any(axis=1, keepdims=True)
     shift = shift_ref[0, 0].astype(jnp.uint32)
     new = codes | (bit.astype(jnp.uint32) << shift)
-    out_ref[...] = jnp.where(hit, new, codes)
+    mine = vid_ref[...] == v                    # [Bb, 1]
+    out_ref[...] = jnp.where(mine & hit, new, out_ref[...])
 
 
 def _pad_to(x: jax.Array, axis: int, mult: int, fill=0) -> jax.Array:
@@ -66,6 +82,69 @@ def _pad_to(x: jax.Array, axis: int, mult: int, fill=0) -> jax.Array:
 
 
 @functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def tcam_match_pallas_v(
+    codes: jax.Array,      # uint32 [B, T]
+    features: jax.Array,   # int32 [B, F]
+    vid: jax.Array,        # int32 [B] model version per packet, in [0, V)
+    code_value: jax.Array,  # uint32 [V, T, E]
+    code_mask: jax.Array,
+    fid: jax.Array,         # int32 [V, T, E]
+    f_lo: jax.Array,
+    f_hi: jax.Array,
+    set_bit: jax.Array,     # uint32 [V, T, E]
+    valid: jax.Array,       # bool [V, T, E]
+    shift: jax.Array,       # int32 scalar
+    *,
+    block_b: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    B, T = codes.shape
+    V, _, E = code_value.shape
+
+    feats = _pad_to(features.astype(jnp.float32), 1, 128)
+    F_pad = feats.shape[1]
+    # One-hot feature selector; invalid entries select nothing (all-zero row).
+    fsel = jax.nn.one_hot(fid, F_pad, dtype=jnp.float32) * valid[..., None]
+    pad_e = lambda a, fill=0: _pad_to(a, 2, 128, fill)
+    cv = pad_e(code_value)
+    cm = pad_e(code_mask, fill=np.uint32(0xFFFFFFFF))  # padded: mask all, value 0
+    flo = pad_e(f_lo.astype(jnp.float32), fill=1.0)
+    fhi = pad_e(f_hi.astype(jnp.float32), fill=0.0)  # empty range => no match
+    bit = pad_e(set_bit.astype(jnp.uint32))
+    vld = pad_e(valid.astype(jnp.int32))
+    fsel = _pad_to(fsel, 2, 128)
+    E_pad = cv.shape[2]
+
+    codes_p = _pad_to(codes, 0, block_b)
+    feats_p = _pad_to(feats, 0, block_b)
+    vid_p = _pad_to(vid.astype(jnp.int32).reshape(-1, 1), 0, block_b, fill=-1)
+    B_pad = codes_p.shape[0]
+    grid = (B_pad // block_b, T, V)
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, 1), lambda i, t, v: (i, t)),       # codes
+            pl.BlockSpec((block_b, 1), lambda i, t, v: (i, 0)),       # vid
+            pl.BlockSpec((block_b, F_pad), lambda i, t, v: (i, 0)),   # feats
+            pl.BlockSpec((1, 1, E_pad, F_pad), lambda i, t, v: (v, t, 0, 0)),
+            pl.BlockSpec((1, 1, E_pad), lambda i, t, v: (v, t, 0)),   # cv
+            pl.BlockSpec((1, 1, E_pad), lambda i, t, v: (v, t, 0)),   # cm
+            pl.BlockSpec((1, 1, E_pad), lambda i, t, v: (v, t, 0)),   # flo
+            pl.BlockSpec((1, 1, E_pad), lambda i, t, v: (v, t, 0)),   # fhi
+            pl.BlockSpec((1, 1, E_pad), lambda i, t, v: (v, t, 0)),   # bit
+            pl.BlockSpec((1, 1, E_pad), lambda i, t, v: (v, t, 0)),   # valid
+            pl.BlockSpec((1, 1), lambda i, t, v: (0, 0)),             # shift
+        ],
+        out_specs=pl.BlockSpec((block_b, 1), lambda i, t, v: (i, t)),
+        out_shape=jax.ShapeDtypeStruct((B_pad, T), codes.dtype),
+        interpret=interpret,
+    )(codes_p, vid_p, feats_p, fsel, cv, cm, flo, fhi, bit, vld,
+      shift.reshape(1, 1).astype(jnp.int32))
+    return out[:B]
+
+
 def tcam_match_pallas(
     codes: jax.Array,      # uint32 [B, T]
     features: jax.Array,   # int32 [B, F]
@@ -81,47 +160,9 @@ def tcam_match_pallas(
     block_b: int = 256,
     interpret: bool = False,
 ) -> jax.Array:
-    B, T = codes.shape
-    F = features.shape[1]
-    E = code_value.shape[1]
-
-    feats = _pad_to(features.astype(jnp.float32), 1, 128)
-    F_pad = feats.shape[1]
-    # One-hot feature selector; invalid entries select nothing (all-zero row).
-    fsel = jax.nn.one_hot(fid, F_pad, dtype=jnp.float32) * valid[..., None]
-    pad_e = lambda a, fill=0: _pad_to(a, 1, 128, fill)
-    cv = pad_e(code_value)
-    cm = pad_e(code_mask, fill=np.uint32(0xFFFFFFFF))  # padded: mask all, value 0
-    flo = pad_e(f_lo.astype(jnp.float32), fill=1.0)
-    fhi = pad_e(f_hi.astype(jnp.float32), fill=0.0)  # empty range => no match
-    bit = pad_e(set_bit.astype(jnp.uint32))
-    vld = pad_e(valid.astype(jnp.int32))
-    fsel = _pad_to(fsel, 1, 128)
-    E_pad = cv.shape[1]
-
-    codes_p = _pad_to(codes, 0, block_b)
-    feats_p = _pad_to(feats, 0, block_b)
-    B_pad = codes_p.shape[0]
-    grid = (B_pad // block_b, T)
-
-    out = pl.pallas_call(
-        _kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_b, 1), lambda i, t: (i, t)),       # codes
-            pl.BlockSpec((block_b, F_pad), lambda i, t: (i, 0)),   # feats
-            pl.BlockSpec((1, E_pad, F_pad), lambda i, t: (t, 0, 0)),  # fsel
-            pl.BlockSpec((1, E_pad), lambda i, t: (t, 0)),         # cv
-            pl.BlockSpec((1, E_pad), lambda i, t: (t, 0)),         # cm
-            pl.BlockSpec((1, E_pad), lambda i, t: (t, 0)),         # flo
-            pl.BlockSpec((1, E_pad), lambda i, t: (t, 0)),         # fhi
-            pl.BlockSpec((1, E_pad), lambda i, t: (t, 0)),         # bit
-            pl.BlockSpec((1, E_pad), lambda i, t: (t, 0)),         # valid
-            pl.BlockSpec((1, 1), lambda i, t: (0, 0)),             # shift
-        ],
-        out_specs=pl.BlockSpec((block_b, 1), lambda i, t: (i, t)),
-        out_shape=jax.ShapeDtypeStruct((B_pad, T), codes.dtype),
-        interpret=interpret,
-    )(codes_p, feats_p, fsel, cv, cm, flo, fhi, bit, vld,
-      shift.reshape(1, 1).astype(jnp.int32))
-    return out[:B]
+    """Single-version API: V=1 slice of the zoo kernel, every packet on vid 0."""
+    vid = jnp.zeros((codes.shape[0],), jnp.int32)
+    return tcam_match_pallas_v(
+        codes, features, vid, code_value[None], code_mask[None], fid[None],
+        f_lo[None], f_hi[None], set_bit[None], valid[None], shift,
+        block_b=block_b, interpret=interpret)

@@ -1,3 +1,3 @@
-from repro.serving.serve import make_decode_step, make_prefill_step
+from repro.serving.serve import ZooServer, make_decode_step, make_prefill_step
 
-__all__ = ["make_decode_step", "make_prefill_step"]
+__all__ = ["ZooServer", "make_decode_step", "make_prefill_step"]

@@ -1,18 +1,25 @@
-"""Serving steps: fixed-shape prefill + one-token decode.
+"""Serving fronts: LM prefill/decode steps + the in-network classifier zoo.
 
-Same runtime-programmability discipline as the ACORN plane: the decode step
-compiles once per (arch, batch, cache_len); swapping model *weights* (new
-checkpoint, new tenant) is an array update, zero retrace.
+Same runtime-programmability discipline throughout: each step compiles once
+per fixed shape; swapping model *weights* or *table entries* (new checkpoint,
+new tenant, new model version) is an array update, zero retrace.
+``ZooServer`` is the classifier-side serving front — a ``SwitchEngine``
+hosting ``profile.max_versions`` resident versions per pipeline, with
+install / evict / A-B traffic-split rollout as control-plane operations.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core.packets import PacketBatch
+from repro.core.plane import PackedProgram, PlaneProfile, SwitchEngine
+from repro.core.translator import TableProgram, translate
 from repro.models.common import ArchConfig
 from repro.models.transformer import decode_step, forward
 
-__all__ = ["make_prefill_step", "make_decode_step"]
+__all__ = ["make_prefill_step", "make_decode_step", "ZooServer"]
 
 
 def make_prefill_step(cfg: ArchConfig, *, q_chunk: int = 1024, unroll: bool = False):
@@ -34,6 +41,85 @@ def make_decode_step(cfg: ArchConfig, *, unroll: bool = False):
         return decode_step(params, state, tokens, pos, cfg, unroll=unroll)
 
     return step
+
+
+class ZooServer:
+    """Stateful serving front over one ``SwitchEngine`` model zoo.
+
+    The data plane compiles once at construction (per batch shape, lazily);
+    every subsequent ``install`` / ``evict`` / traffic shift is an entry-array
+    update — the paper's §6 runtime reprogrammability, extended along the
+    Appendix A VID axis.  ``classify_split`` implements A/B rollout: the
+    *request writer* shifts a traffic fraction to a new version by rewriting
+    ``vid`` in the requests; the plane is untouched.
+    """
+
+    def __init__(self, profile: PlaneProfile, *, mode: str | None = None) -> None:
+        self.engine = SwitchEngine(profile, mode=mode)
+        self.packed: PackedProgram = self.engine.empty()
+        self.versions: dict[tuple[str, int], str] = {}  # (pipeline, vid) -> tag
+
+    @property
+    def profile(self) -> PlaneProfile:
+        return self.engine.profile
+
+    def install(self, model_or_program, *, vid: int, tag: str = "") -> int:
+        """Install a trained model (or pre-translated program) into slot
+        ``vid`` of its pipeline.  Returns the vid for chaining."""
+        if isinstance(model_or_program, TableProgram):
+            prog = model_or_program
+            if prog.vid != vid:
+                raise ValueError(
+                    f"program targets vid {prog.vid} but install asked for "
+                    f"slot {vid} — requests built from the program's metadata "
+                    "would dispatch to the wrong slot"
+                )
+        else:
+            prog = translate(model_or_program, vid=vid)
+        self.packed = self.engine.install(self.packed, prog, vid=vid)
+        pipeline = "svm" if prog.kind == "svm" else "tree"
+        self.versions[(pipeline, vid)] = tag or f"{prog.kind}-v{vid}"
+        return vid
+
+    def evict(self, *, vid: int, kind: str = "all") -> None:
+        self.packed = self.engine.evict(self.packed, vid=vid, kind=kind)
+        for pipeline in ("tree", "svm"):
+            if kind in (pipeline, "all"):
+                self.versions.pop((pipeline, vid), None)
+
+    def _request(self, features, mid: int, vid) -> PacketBatch:
+        prof = self.profile
+        return PacketBatch.make_request(
+            features, mid=mid, vid=vid, max_features=prof.max_features,
+            n_trees=prof.max_trees, n_hyperplanes=prof.max_hyperplanes,
+            max_versions=prof.max_versions)
+
+    def classify(self, features, *, mid: int, vid: int | np.ndarray) -> np.ndarray:
+        out = self.engine.classify(self.packed, self._request(features, mid, vid))
+        return np.asarray(out.rslt)
+
+    def classify_split(self, features, *, mid: int,
+                       split: dict[int, float]) -> tuple[np.ndarray, np.ndarray]:
+        """A/B rollout step: route a deterministic fraction of requests to
+        each version in ``split`` (vid -> fraction, summing to ~1).  Returns
+        (results, per-packet vid) so callers can track cohort metrics."""
+        if not split:
+            raise ValueError("split needs at least one vid -> fraction entry")
+        B = np.asarray(features).shape[0]
+        vids_sorted = sorted(split)
+        bounds = np.cumsum([split[v] for v in vids_sorted])
+        if not np.isclose(bounds[-1], 1.0, atol=1e-6):
+            raise ValueError(f"traffic fractions sum to {bounds[-1]}, not 1")
+        # deterministic low-discrepancy assignment by packet index; clip so
+        # a fraction sum of 1-eps (within isclose tolerance) can't index past
+        # the last version
+        u = (np.arange(B) + 0.5) / B
+        idx = np.minimum(np.searchsorted(bounds, u), len(vids_sorted) - 1)
+        vids = np.asarray(vids_sorted, np.int32)[idx]
+        return self.classify(features, mid=mid, vid=vids), vids
+
+    def cache_size(self) -> int:
+        return self.engine.cache_size()
 
 
 def greedy_decode(params, state, first_token, pos0, cfg: ArchConfig, n_steps: int):

@@ -1,11 +1,25 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
 see 1 device; only launch/dryrun.py (and explicit subprocess tests) set the
-512-device emulation."""
+512-device emulation.
+
+The plane engines are session-scoped: ``SwitchEngine`` jit-compiles one trace
+per (profile, batch shape), so sharing one engine across tests avoids
+re-jitting the classification step per test (the dominant cost of the plane
+test modules).  Tests that assert trace counts take deltas against
+``cache_size()`` rather than absolute values, or build a private engine.
+"""
 import numpy as np
 import pytest
 
 from repro.core.mlmodels import Quantizer
+from repro.core.plane import PlaneProfile, SwitchEngine
 from repro.data import load_dataset
+
+# One profile for every single-engine plane test (test_plane, test_system,
+# test_zoo) — must stay identical across modules so they share the jit cache.
+PLANE_PROFILE = PlaneProfile(max_features=36, max_trees=5, max_layers=10,
+                             max_entries_per_layer=256, max_leaves=256,
+                             max_classes=8, max_hyperplanes=8, max_versions=4)
 
 
 @pytest.fixture(scope="session")
@@ -25,3 +39,13 @@ def iris():
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def plane_profile():
+    return PLANE_PROFILE
+
+
+@pytest.fixture(scope="session")
+def plane_engine():
+    return SwitchEngine(PLANE_PROFILE)

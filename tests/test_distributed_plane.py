@@ -7,6 +7,7 @@ import sys
 import textwrap
 
 import numpy as np
+import pytest
 
 from repro.core.distributed_plane import build_device_programs, run_sequential
 from repro.core.mlmodels import RandomForest
@@ -98,6 +99,7 @@ PIPELINE_SCRIPT = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_pipelined_plane_subprocess():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")

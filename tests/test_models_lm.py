@@ -8,6 +8,8 @@ from repro.configs import ARCH_IDS, SHAPES, applicable, get_config, smoke_config
 from repro.models import decode_step, forward, init_decode_state, init_params
 from repro.models.transformer import encode_kv
 
+pytestmark = pytest.mark.slow  # per-arch LM-stack sweeps dominate suite time
+
 
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_smoke_forward_and_train_step(arch):

@@ -1,35 +1,40 @@
-"""SwitchEngine: jit-once runtime programmability + equivalence to CPU models."""
+"""SwitchEngine: jit-once runtime programmability + equivalence to CPU models.
+
+Uses the session-scoped ``plane_engine`` fixture (one jit trace shared by the
+whole module); trace-count assertions are therefore *deltas* — installs and
+swaps must never add a trace for an already-seen batch shape.
+"""
 import numpy as np
 import jax.numpy as jnp
 
 from repro.core.mlmodels import DecisionTree, LinearSVM, RandomForest
 from repro.core.packets import PacketBatch, PacketType
-from repro.core.plane import PlaneProfile, SwitchEngine
 from repro.core.translator import translate
 
-PROF = PlaneProfile(max_features=36, max_trees=5, max_layers=10,
-                    max_entries_per_layer=256, max_leaves=256,
-                    max_classes=8, max_hyperplanes=8)
 
-
-def _req(X, prog):
+def _req(X, prog, eng):
+    prof = eng.profile
     return PacketBatch.make_request(
-        X, mid=prog.mid, max_features=PROF.max_features,
-        n_trees=PROF.max_trees, n_hyperplanes=PROF.max_hyperplanes)
+        X, mid=prog.mid, vid=prog.vid, max_features=prof.max_features,
+        n_trees=prof.max_trees, n_hyperplanes=prof.max_hyperplanes,
+        max_versions=prof.max_versions)
 
 
-def test_plane_equals_cpu_and_never_retraces(satdap):
+def test_plane_equals_cpu_and_never_retraces(satdap, plane_engine):
     Xtr, ytr, Xte, _ = satdap
-    eng = SwitchEngine(PROF)
+    eng = plane_engine
     packed = eng.empty()
 
     dt = DecisionTree(max_depth=8, max_leaf_nodes=100).fit(Xtr, ytr)
     rf = RandomForest(n_estimators=5, max_depth=6, max_leaf_nodes=50).fit(Xtr, ytr)
     svm = LinearSVM(epochs=100).fit(Xtr, ytr)
+    # warm the (single) trace for this batch shape, then count deltas
+    eng.classify(packed, _req(Xte, translate(dt), eng))
+    before = eng.cache_size()
     for model in (dt, rf, svm):
         prog = translate(model)
         packed = eng.install(packed, prog)
-        out = eng.classify(packed, _req(Xte, prog))
+        out = eng.classify(packed, _req(Xte, prog, eng))
         got = np.asarray(out.rslt)
         want = model.predict(Xte)
         agree = (got == want).mean()
@@ -37,48 +42,57 @@ def test_plane_equals_cpu_and_never_retraces(satdap):
             assert agree > 0.97  # fixed-point quantization slack
         else:
             assert agree == 1.0
-    # runtime programmability: three installs, two pipelines, ONE trace
-    assert eng.cache_size() == 1
+    # runtime programmability: three installs, two pipelines, ZERO new traces
+    assert eng.cache_size() == before
 
 
-def test_both_pipelines_coexist(satdap):
+def test_both_pipelines_coexist(satdap, plane_engine):
     """Paper Fig. 5: a tree model and an SVM live in one data plane."""
     Xtr, ytr, Xte, _ = satdap
-    eng = SwitchEngine(PROF)
+    eng = plane_engine
     rf = RandomForest(n_estimators=3, max_depth=5, max_leaf_nodes=40).fit(Xtr, ytr)
     svm = LinearSVM(epochs=100).fit(Xtr, ytr)
     prog_rf, prog_svm = translate(rf), translate(svm)
     packed = eng.install(eng.install(eng.empty(), prog_rf), prog_svm)
-    out_rf = eng.classify(packed, _req(Xte, prog_rf))
-    out_svm = eng.classify(packed, _req(Xte, prog_svm))
+    out_rf = eng.classify(packed, _req(Xte, prog_rf, eng))
+    out_svm = eng.classify(packed, _req(Xte, prog_svm, eng))
     assert (np.asarray(out_rf.rslt) == rf.predict(Xte)).all()
     assert (np.asarray(out_svm.rslt) == svm.predict(Xte)).mean() > 0.97
 
 
-def test_forwarding_passthrough(satdap):
+def test_forwarding_passthrough(satdap, plane_engine):
     """Non-request packets are untouched (classification never breaks
     forwarding — paper §6.1)."""
     Xtr, ytr, Xte, _ = satdap
-    eng = SwitchEngine(PROF)
+    eng = plane_engine
     dt = DecisionTree(max_depth=6, max_leaf_nodes=40).fit(Xtr, ytr)
-    packed = eng.install(eng.empty(), translate(dt))
-    pb = _req(Xte[:16], translate(dt))
+    prog = translate(dt)
+    packed = eng.install(eng.empty(), prog)
+    pb = _req(Xte[:16], prog, eng)
     pb = pb.__class__(**{**pb.__dict__,
                          "ptype": jnp.full((16,), PacketType.FORWARD, jnp.int32)})
     out = eng.classify(packed, pb)
     assert (np.asarray(out.rslt) == -1).all()
 
 
-def test_model_version_swap_changes_predictions(satdap):
+def test_model_version_swap_changes_predictions(satdap, plane_engine):
+    """Two versions of a DT live in the zoo simultaneously; requests pick
+    their version by VID, and installing v2 never disturbs v1 (the paper's
+    runtime reprogrammability along the Appendix A VID axis)."""
     Xtr, ytr, Xte, _ = satdap
-    eng = SwitchEngine(PROF)
+    eng = plane_engine
     d1 = DecisionTree(max_depth=3, max_leaf_nodes=8).fit(Xtr, ytr)
     d2 = DecisionTree(max_depth=8, max_leaf_nodes=100).fit(Xtr, ytr)
     p1, p2 = translate(d1, vid=1), translate(d2, vid=2)
+    eng.classify(eng.empty(), _req(Xte, p1, eng))  # warm this batch shape
+    before = eng.cache_size()
     packed = eng.install(eng.empty(), p1)
-    out1 = eng.classify(packed, _req(Xte, p1))
-    packed = eng.install(packed, p2)  # runtime swap
-    out2 = eng.classify(packed, _req(Xte, p2))
+    out1 = eng.classify(packed, _req(Xte, p1, eng))
+    packed = eng.install(packed, p2)  # runtime install of a second version
+    out2 = eng.classify(packed, _req(Xte, p2, eng))
     assert (np.asarray(out1.rslt) == d1.predict(Xte)).all()
     assert (np.asarray(out2.rslt) == d2.predict(Xte)).all()
-    assert eng.cache_size() == 1
+    # v1 is still resident and still answers v1 requests
+    out1_again = eng.classify(packed, _req(Xte, p1, eng))
+    assert (np.asarray(out1_again.rslt) == d1.predict(Xte)).all()
+    assert eng.cache_size() == before

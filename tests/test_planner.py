@@ -27,6 +27,7 @@ def _ends(net):
     return h[0], h[-1]
 
 
+@pytest.mark.slow
 def test_dp_matches_milp_optimum(models, net):
     src, dst = _ends(net)
     for prog in models:

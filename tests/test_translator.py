@@ -3,10 +3,11 @@
 The central invariant: walking the generated dt_layer tables layer by layer
 with the numpy oracle, then exact-matching dt_predict, reproduces
 ``DecisionTree.predict`` bit-for-bit — including early-leaf fall-through
-(prefix-freeness, see tables.py docstring).  Hypothesis drives random trees.
+(prefix-freeness, see tables.py docstring).  Seeded-numpy parametrization
+drives random trees (no hypothesis dependency in this container).
 """
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
 
 from repro.core.mlmodels import DecisionTree, LinearSVM, RandomForest
 from repro.core.translator import translate
@@ -20,8 +21,18 @@ def _run_tree_tables(prog, tree_idx, Xq):
     return prog.dt_predicts[tree_idx].lookup(codes), codes
 
 
-@settings(max_examples=25, deadline=None)
-@given(st.integers(0, 10_000), st.integers(2, 5), st.integers(2, 8))
+_DT_CASES = [
+    # (seed, n_classes, depth) — seeded sweep over the hypothesis ranges
+    (int(s), int(c), int(d))
+    for s, c, d in zip(
+        np.random.default_rng(7).integers(0, 10_000, 25),
+        np.random.default_rng(8).integers(2, 6, 25),
+        np.random.default_rng(9).integers(2, 9, 25),
+    )
+]
+
+
+@pytest.mark.parametrize("seed,n_classes,depth", _DT_CASES)
 def test_dt_tables_equal_model(seed, n_classes, depth):
     X, y = make_classification(300, 6, n_classes, seed=seed)
     Xq = np.clip((X * 16 + 128).astype(np.int64), 0, 255)
@@ -78,6 +89,5 @@ def test_stage_accounting(satdap):
 
 
 def test_translate_rejects_unknown():
-    import pytest
     with pytest.raises(TypeError):
         translate(object())

@@ -1,0 +1,261 @@
+"""Model zoo: per-packet (MID, VID) dispatch over a multi-version data plane.
+
+Covers the Appendix A VID axis end to end: ≥4 concurrent versions on one
+engine, mixed batches bit-identical to single-model references, compile-once
+across install/swap/evict cycles, empty-slot and out-of-range VID semantics,
+version-indexed kernel parity (Pallas interpret vs ref), and the distributed
+per-version deployment (plan_zoo + merged per-device zoos).
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.distributed_plane import build_zoo_device_programs, run_sequential
+from repro.core.mlmodels import DecisionTree, LinearSVM, RandomForest
+from repro.core.packets import PacketBatch
+from repro.core.plane import PlaneProfile, SwitchEngine
+from repro.core.planner import DeviceModel, plan_zoo
+from repro.core.topology import fat_tree
+from repro.core.translator import MID_SVM, translate
+from repro.kernels import ops, ref
+
+
+def _req(eng, X, *, mid=0, vid=0, validate=True):
+    prof = eng.profile
+    return PacketBatch.make_request(
+        X, mid=mid, vid=vid, max_features=prof.max_features,
+        n_trees=prof.max_trees, n_hyperplanes=prof.max_hyperplanes,
+        max_versions=prof.max_versions if validate else None)
+
+
+# ------------------------------------------------------------------ dispatch
+def test_four_versions_mixed_batch_matches_references(satdap, plane_engine):
+    """One engine, four resident tree versions + two SVM versions; a single
+    mixed batch dispatches per packet by (MID, VID) and every packet's answer
+    equals its own model's CPU prediction."""
+    Xtr, ytr, Xte, _ = satdap
+    eng = plane_engine
+    trees = [
+        DecisionTree(max_depth=3, max_leaf_nodes=8).fit(Xtr, ytr),
+        DecisionTree(max_depth=8, max_leaf_nodes=100).fit(Xtr, ytr),
+        RandomForest(n_estimators=5, max_depth=5, max_leaf_nodes=40,
+                     random_state=0).fit(Xtr, ytr),
+        RandomForest(n_estimators=3, max_depth=6, max_leaf_nodes=50,
+                     random_state=1).fit(Xtr, ytr),
+    ]
+    svms = [LinearSVM(epochs=100).fit(Xtr, ytr),
+            LinearSVM(epochs=30).fit(Xtr, ytr)]
+    packed = eng.empty()
+    for v, m in enumerate(trees):
+        packed = eng.install(packed, translate(m, vid=v))
+    for v, m in enumerate(svms):
+        packed = eng.install(packed, translate(m, vid=v))
+
+    B = Xte.shape[0]
+    rng = np.random.default_rng(3)
+    vids = rng.integers(0, 4, B)
+    is_svm = rng.random(B) < 0.3
+    vids = np.where(is_svm, vids % 2, vids)
+    mids = np.where(is_svm, MID_SVM, np.array([translate(m).mid for m in trees])[vids])
+    pb = _req(eng, Xte, mid=mids, vid=vids)
+    got = np.asarray(eng.classify(packed, pb).rslt)
+
+    tree_preds = np.stack([m.predict(Xte) for m in trees])
+    svm_preds = np.stack([m.predict(Xte) for m in svms])
+    want = tree_preds[vids, np.arange(B)]
+    svm_vids = np.where(is_svm, vids, 0)
+    got_svm, want_svm = got[is_svm], svm_preds[svm_vids, np.arange(B)][is_svm]
+    # trees are bit-exact; SVM has fixed-point quantization slack
+    assert (got[~is_svm] == want[~is_svm]).all()
+    assert (got_svm == want_svm).mean() > 0.97
+    # and each version individually, pure batches, bit-identical to the
+    # single-model reference output
+    for v, m in enumerate(trees):
+        out = eng.classify(packed, _req(eng, Xte, mid=translate(m).mid, vid=v))
+        assert (np.asarray(out.rslt) == m.predict(Xte)).all(), f"vid {v}"
+
+
+def test_install_swap_evict_cycles_zero_retrace(satdap):
+    """cache_size() == 1 across three full install → swap → evict cycles
+    (the paper's §6 compile-once property along the VID axis)."""
+    Xtr, ytr, Xte, _ = satdap
+    prof = PlaneProfile(max_features=36, max_trees=2, max_layers=6,
+                        max_entries_per_layer=64, max_leaves=64,
+                        max_classes=8, max_hyperplanes=8, max_versions=4)
+    eng = SwitchEngine(prof)
+    X = Xte[:128]
+    d_a = DecisionTree(max_depth=4, max_leaf_nodes=16).fit(Xtr, ytr)
+    d_b = DecisionTree(max_depth=5, max_leaf_nodes=30).fit(Xtr, ytr)
+    packed = eng.empty()
+    for cycle in range(3):
+        vid = cycle % prof.max_versions
+        packed = eng.install(packed, translate(d_a), vid=vid)        # install
+        out = eng.classify(packed, _req(eng, X, vid=vid))
+        assert (np.asarray(out.rslt) == d_a.predict(X)).all()
+        packed = eng.install(packed, translate(d_b), vid=vid)        # swap
+        out = eng.classify(packed, _req(eng, X, vid=vid))
+        assert (np.asarray(out.rslt) == d_b.predict(X)).all()
+        packed = eng.evict(packed, vid=vid)                          # evict
+        out = eng.classify(packed, _req(eng, X, vid=vid))
+        assert (np.asarray(out.rslt) == -1).all()
+    assert eng.cache_size() == 1
+
+
+# ------------------------------------------------------- empty / invalid VID
+def test_empty_slot_returns_no_match(satdap, plane_engine):
+    Xtr, ytr, Xte, _ = satdap
+    eng = plane_engine
+    dt = DecisionTree(max_depth=4, max_leaf_nodes=16).fit(Xtr, ytr)
+    packed = eng.install(eng.empty(), translate(dt), vid=0)
+    # tree slot 3 never installed; SVM slot 0 never installed either
+    assert (np.asarray(eng.classify(packed, _req(eng, Xte, vid=3)).rslt) == -1).all()
+    assert (np.asarray(
+        eng.classify(packed, _req(eng, Xte, mid=MID_SVM, vid=0)).rslt) == -1).all()
+
+
+def test_out_of_range_vid_rejected_or_no_match(satdap, plane_engine):
+    Xtr, ytr, Xte, _ = satdap
+    eng = plane_engine
+    V = eng.profile.max_versions
+    dt = DecisionTree(max_depth=4, max_leaf_nodes=16).fit(Xtr, ytr)
+    packed = eng.install(eng.empty(), translate(dt), vid=0)
+    # install boundary: slot index must exist
+    with pytest.raises(ValueError):
+        eng.install(packed, translate(dt), vid=V)
+    with pytest.raises(ValueError):
+        eng.evict(packed, vid=-1)
+    # request boundary: make_request validates when capacity is known
+    with pytest.raises(ValueError):
+        _req(eng, Xte, vid=V)
+    # classify boundary: a hand-built batch with a rogue VID gets -1, not
+    # another version's tables
+    pb = _req(eng, Xte, vid=0, validate=False)
+    pb = dataclasses.replace(pb, vid=jnp.full((Xte.shape[0],), V + 3, jnp.int32))
+    assert (np.asarray(eng.classify(packed, pb).rslt) == -1).all()
+
+
+# ------------------------------------------------------------ kernel parity
+@pytest.mark.parametrize("B,T,E,F,V", [(33, 2, 17, 13, 1), (64, 4, 33, 20, 3),
+                                       (129, 5, 64, 36, 8)])
+def test_tcam_match_v_interpret_matches_ref(rng, B, T, E, F, V):
+    codes = jnp.asarray(rng.integers(0, 2**12, (B, T)), jnp.uint32)
+    feats = jnp.asarray(rng.integers(0, 256, (B, F)), jnp.int32)
+    vid = jnp.asarray(rng.integers(0, V, (B,)), jnp.int32)
+    cv = jnp.asarray(rng.integers(0, 2**6, (V, T, E)), jnp.uint32)
+    cm = jnp.asarray(rng.integers(0, 2**6, (V, T, E)), jnp.uint32)
+    fid = jnp.asarray(rng.integers(0, F, (V, T, E)), jnp.int32)
+    flo = jnp.asarray(rng.integers(0, 200, (V, T, E)), jnp.int32)
+    fhi = flo + jnp.asarray(rng.integers(0, 100, (V, T, E)), jnp.int32)
+    bit = jnp.asarray(rng.integers(0, 2, (V, T, E)), jnp.uint32)
+    valid = jnp.asarray(rng.random((V, T, E)) < 0.9)
+    shift = jnp.int32(rng.integers(0, 20))
+    args = (codes, feats, vid, cv, cm, fid, flo, fhi, bit, valid, shift)
+    r = ref.tcam_match_v(*args)
+    p = ops.tcam_match_v(*args, mode="interpret")
+    np.testing.assert_array_equal(np.asarray(r), np.asarray(p))
+    # per-version slices equal the single-version oracle (the V=1 contract)
+    for v in range(V):
+        rv = ref.tcam_match(codes, feats, cv[v], cm[v], fid[v], flo[v],
+                            fhi[v], bit[v], valid[v], shift)
+        sel = np.asarray(vid) == v
+        np.testing.assert_array_equal(np.asarray(r)[sel], np.asarray(rv)[sel])
+
+
+@pytest.mark.parametrize("B,H,F,L,V", [(16, 3, 7, 32, 1), (65, 8, 14, 64, 4)])
+def test_svm_lookup_v_interpret_matches_ref(rng, B, H, F, L, V):
+    feats = jnp.asarray(rng.integers(0, L, (B, F)), jnp.int32)
+    vid = jnp.asarray(rng.integers(0, V, (B,)), jnp.int32)
+    lut = jnp.asarray(rng.integers(-60_000, 60_000, (V, H, F, L)), jnp.int32)
+    bias = jnp.asarray(rng.integers(-10_000, 10_000, (V, H)), jnp.int32)
+    r = ref.svm_lookup_v(feats, vid, lut, bias)
+    p = ops.svm_lookup_v(feats, vid, lut, bias, mode="interpret")
+    np.testing.assert_array_equal(np.asarray(r), np.asarray(p))
+    for v in range(V):
+        rv = ref.svm_lookup(feats, lut[v], bias[v])
+        sel = np.asarray(vid) == v
+        np.testing.assert_array_equal(np.asarray(r)[sel], np.asarray(rv)[sel])
+
+
+@pytest.mark.parametrize("B,T,P,C,V", [(40, 2, 16, 4, 1), (70, 4, 32, 5, 4)])
+def test_forest_vote_v_interpret_matches_ref(rng, B, T, P, C, V):
+    pc = np.sort(rng.choice(2**16, size=(V * T * P,), replace=False)
+                 .astype(np.uint32).reshape(V, T, P), axis=2)
+    plab = rng.integers(0, C, (V, T, P)).astype(np.int32)
+    pv = np.ones((V, T, P), bool)
+    pv[:, :, -1] = False
+    vid = rng.integers(0, V, (B,))
+    hit = rng.integers(0, P - 1, (B, T))
+    codes = pc[vid[:, None], np.arange(T)[None, :], hit]
+    codes[: B // 4] = 0xFFFFFFFE  # some misses
+    w = rng.random((V, T)).astype(np.float32)
+    args = (jnp.asarray(codes), jnp.asarray(vid, jnp.int32), jnp.asarray(pc),
+            jnp.asarray(plab), jnp.asarray(pv), jnp.asarray(w))
+    r = ref.forest_predict_vote_v(*args, C)
+    p = ops.forest_predict_vote_v(*args, C, mode="interpret")
+    np.testing.assert_array_equal(np.asarray(r[0]), np.asarray(p[0]))
+    np.testing.assert_array_equal(np.asarray(r[1]), np.asarray(p[1]))
+
+
+def test_engine_interpret_mode_matches_ref_mode(satdap):
+    """Whole-plane parity: the Pallas kernel bodies (interpreter) drive the
+    same multi-version dispatch as the XLA ref path."""
+    Xtr, ytr, Xte, _ = satdap
+    prof = PlaneProfile(max_features=36, max_trees=2, max_layers=5,
+                        max_entries_per_layer=64, max_leaves=32,
+                        max_classes=8, max_hyperplanes=8, max_versions=2)
+    d0 = DecisionTree(max_depth=3, max_leaf_nodes=8).fit(Xtr, ytr)
+    d1 = DecisionTree(max_depth=4, max_leaf_nodes=16).fit(Xtr, ytr)
+    svm = LinearSVM(epochs=30).fit(Xtr, ytr)
+    X = Xte[:32]
+    outs = {}
+    for mode in ("ref", "interpret"):
+        eng = SwitchEngine(prof, mode=mode)
+        packed = eng.empty()
+        packed = eng.install(packed, translate(d0, vid=0))
+        packed = eng.install(packed, translate(d1, vid=1))
+        packed = eng.install(packed, translate(svm, vid=1))
+        vids = np.arange(X.shape[0]) % 2
+        mids = np.where(np.arange(X.shape[0]) % 3 == 0, MID_SVM, 0)
+        vids = np.where(mids == MID_SVM, 1, vids)
+        pb = _req(eng, X, mid=mids, vid=vids)
+        outs[mode] = np.asarray(eng.classify(packed, pb).rslt)
+    np.testing.assert_array_equal(outs["ref"], outs["interpret"])
+
+
+# ------------------------------------------------------------- distributed
+@pytest.mark.slow
+def test_distributed_zoo_versions_on_different_devices(satdap):
+    """plan_zoo assigns each version's stages under capacity carry-over, so
+    versions land on *different* devices of one path; the merged per-device
+    zoos classify a mixed-VID batch identically to the CPU models."""
+    Xtr, ytr, Xte, _ = satdap
+    prof = PlaneProfile(max_features=36, max_trees=4, max_layers=8,
+                        max_entries_per_layer=64, max_leaves=64,
+                        max_classes=8, max_hyperplanes=8, max_versions=3)
+    rf0 = RandomForest(n_estimators=4, max_depth=5, max_leaf_nodes=30,
+                       random_state=0).fit(Xtr, ytr)
+    rf1 = RandomForest(n_estimators=4, max_depth=5, max_leaf_nodes=30,
+                       random_state=1).fit(Xtr, ytr)
+    d2 = DecisionTree(max_depth=6, max_leaf_nodes=40).fit(Xtr, ytr)
+    progs = [translate(rf0, vid=0), translate(rf1, vid=1), translate(d2, vid=2)]
+    net = fat_tree(4)
+    h = net.hosts()
+    plans = plan_zoo(progs, net, h[0], h[-1],
+                     default_device=DeviceModel(n_stages=12), solver="dp")
+    assert all(p.path == plans[0].path for p in plans)
+    # capacity carry-over forced the versions apart
+    owners = [frozenset(p.device_stages()) for p in plans]
+    assert len(set(owners)) > 1
+    devs, dps = build_zoo_device_programs(progs, plans, prof)
+    B = Xte.shape[0]
+    vids = np.arange(B) % 3
+    mids = np.where(vids == 2, 0, 1)
+    pb = PacketBatch.make_request(Xte, mid=mids, vid=vids, max_features=36,
+                                  n_trees=4, n_hyperplanes=8, max_versions=3)
+    out = run_sequential(dps, pb, n_classes=8)
+    got = np.asarray(out.rslt)
+    want = np.where(vids == 0, rf0.predict(Xte),
+                    np.where(vids == 1, rf1.predict(Xte), d2.predict(Xte)))
+    assert (got == want).all()
