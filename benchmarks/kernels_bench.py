@@ -64,4 +64,46 @@ def run() -> list[str]:
     us = _time(lambda *a: ops.decode_attn(*a, mode="ref"), q, k, v, kvl)
     out.append(f"kernels,decode_attn,{us:.1f},B={Bq} Hq={Hq} Hkv={Hkv} S={S} "
                f"(Pallas: flash-decode, block_s=512, VMEM scratch accum)")
+
+    out.extend(run_tree_walk(rng))
+    return out
+
+
+def run_tree_walk(rng) -> list[str]:
+    """Fused single-launch tree walk vs the pre-fusion per-layer scan.
+
+    Reports, per (L, V): Pallas launch count per classify (counted in the
+    traced jaxpr — 1 fused vs L layerwise) and wall-clock / packets-per-sec
+    for the *actual kernel paths* in interpret mode, where the per-launch
+    overhead the fusion removes is real.  (The XLA `mode="ref"` paths of the
+    two walks are the identical scan computation on CPU, so timing them would
+    report measurement noise as a delta; on TPU rerun with `mode="pallas"` /
+    `"layerwise-pallas"` to time the compiled kernels.)
+    """
+    out = ["tree_walk,name,L,V,launches,us_per_batch,pkts_per_sec,config"]
+    B, T, E, F = 512, 8, 128, 46
+    for L in (8, 16, 32):
+        for V in (1, 4):
+            codes = jnp.asarray(rng.integers(0, 2**12, (B, T)), jnp.uint32)
+            feats = jnp.asarray(rng.integers(0, 256, (B, F)), jnp.int32)
+            vid = jnp.asarray(rng.integers(0, V, (B,)), jnp.int32)
+            cv = jnp.asarray(rng.integers(0, 64, (V, L, T, E)), jnp.uint32)
+            cm = jnp.asarray(rng.integers(0, 64, (V, L, T, E)), jnp.uint32)
+            fid = jnp.asarray(rng.integers(0, F, (V, L, T, E)), jnp.int32)
+            flo = jnp.zeros((V, L, T, E), jnp.int32)
+            fhi = jnp.full((V, L, T, E), 128, jnp.int32)
+            bit = jnp.asarray(rng.integers(0, 2, (V, L, T, E)), jnp.uint32)
+            valid = jnp.ones((V, L, T, E), bool)
+            shift = jnp.arange(L, dtype=jnp.int32)
+            args = (codes, feats, vid, cv, cm, fid, flo, fhi, bit, valid, shift)
+            for name, mode in (("fused", "interpret"),
+                               ("layerwise", "layerwise-interpret")):
+                launches = ops.count_pallas_launches(
+                    lambda *a, m=mode: ops.tree_walk_v(*a, mode=m), *args)
+                fn = jax.jit(lambda *a, m=mode: ops.tree_walk_v(*a, mode=m))
+                us = _time(fn, *args, n=3)
+                pps = B / (us * 1e-6)
+                out.append(
+                    f"tree_walk,{name},{L},{V},{launches},{us:.1f},{pps:.0f},"
+                    f"B={B} T={T} E={E} F={F} (interpret-mode kernel paths)")
     return out

@@ -29,6 +29,13 @@ def main() -> None:
     ap.add_argument("--only", default="")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
+    if only:
+        valid = {name for name, _ in MODULES}
+        unknown = only - valid
+        if unknown:
+            print(f"error: unknown --only module(s) {sorted(unknown)}; "
+                  f"valid names: {sorted(valid)}", file=sys.stderr)
+            sys.exit(2)
     failures = 0
     for name, mod in MODULES:
         if only and name not in only:

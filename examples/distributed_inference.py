@@ -55,7 +55,8 @@ t0 = time.perf_counter()
 out = plane.run(mbs)
 jax.block_until_ready(out.rslt)
 dt = time.perf_counter() - t0
-got = np.asarray(out.rslt).reshape(-1)
+got = np.asarray(out.rslt)  # run() returns the flat [n_micro * B] batch
+assert got.shape == (n_micro * B,)
 assert (got == rf.predict(Xm)).all()
 print(f"pipelined {n_micro}x{B} packets across {n_dev} 'switches' in "
       f"{dt*1e3:.1f} ms — answers match the forest exactly")
@@ -66,5 +67,5 @@ rf2 = RandomForest(n_estimators=4, max_depth=5, max_leaf_nodes=30,
 _, dps2 = build_device_programs(translate(rf2), plan, prof)
 plane.swap_model(dps2[:n_dev])
 out2 = plane.run(mbs)
-assert (np.asarray(out2.rslt).reshape(-1) == rf2.predict(Xm)).all()
+assert (np.asarray(out2.rslt) == rf2.predict(Xm)).all()
 print("hot-swapped the model on every switch — same compiled pipeline.")

@@ -188,7 +188,8 @@ class PipelinedPlane:
 
     def run(self, microbatches: PacketBatch) -> PacketBatch:
         """``microbatches`` has leading axis [n_micro, B_mb]. Returns the
-        classified microbatches, re-concatenated in order."""
+        classified packets re-concatenated in microbatch order: one flat
+        [n_micro * B_mb] batch, matching the input packet order."""
         n_micro = microbatches.packet_id.shape[0]
         if self._run is None or self._n_micro != n_micro:
             self._run = self._build(n_micro)
@@ -199,7 +200,7 @@ class PipelinedPlane:
         sel = jax.tree.map(
             lambda x: x[n_dev - 1 :, n_dev - 1], outs
         )  # [n_micro, B_mb, ...]
-        return sel
+        return jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]), sel)
 
     def swap_model(self, device_programs: list[PackedProgram]) -> None:
         """Runtime reprogram: new entry arrays, same compiled pipeline."""

@@ -8,10 +8,12 @@ swapping a model is an array update — zero retrace (asserted by tests via
 ``cache_size() == 1``).
 
 Like the paper's Fig. 5 data plane, one engine hosts *both* pipelines
-simultaneously — a tree pipeline (dt_layer scan → dt_predict →
-multitree_voting) and an SVM pipeline (svm_mul partials → native adds →
-svm_predict) — and each packet selects its result by MID.  Non-request
-packets pass through untouched (forwarding is unaffected).
+simultaneously — a tree pipeline (fused single-launch dt_layer walk →
+dt_predict → multitree_voting; ``mode="layerwise[-*]"`` selects the
+pre-fusion per-layer kernel scan) and an SVM pipeline (svm_mul partials →
+native adds → svm_predict) — and each packet selects its result by MID.
+Non-request packets pass through untouched (forwarding is unaffected):
+their rslt *and* their codes/svm_acc intermediates come out bit-identical.
 
 Model zoo (the VID axis, paper Appendix A): every table array carries a
 leading version axis ``V = profile.max_versions``, so one engine hosts ``V``
@@ -323,29 +325,23 @@ def _classify_impl(packed: PackedProgram, pb: PacketBatch, *, n_classes: int,
     # against slot 0's tables (shape-stable) but their result is forced to -1.
     vid_ok = (pb.vid >= 0) & (pb.vid < V)
     vid = jnp.where(vid_ok, pb.vid, 0)
+    kmode = ops.base_mode(mode)
 
-    # ---- tree pipeline: scan the dt_layer tables over layers ----
-    def layer_step(codes, xs):
-        cv, cm, fid, flo, fhi, bit, valid, shift = xs
-        new = ops.tcam_match_v(codes, feats, vid, cv, cm, fid, flo, fhi, bit,
-                               valid, shift, mode=mode)
-        return new, None
-
-    per_layer = lambda a: jnp.moveaxis(a, 1, 0)  # [V, L, ...] -> [L, V, ...]
-    xs = (per_layer(packed.dt_cv), per_layer(packed.dt_cm),
-          per_layer(packed.dt_fid), per_layer(packed.dt_flo),
-          per_layer(packed.dt_fhi), per_layer(packed.dt_bit),
-          per_layer(packed.dt_valid), packed.layer_shift)
-    codes, _ = jax.lax.scan(layer_step, pb.codes, xs)
+    # ---- tree pipeline: fused single-launch walk over all dt_layer tables
+    # (mode="layerwise[-*]" selects the pre-fusion scan of per-layer kernels)
+    codes = ops.tree_walk_v(
+        pb.codes, feats, vid, packed.dt_cv, packed.dt_cm, packed.dt_fid,
+        packed.dt_flo, packed.dt_fhi, packed.dt_bit, packed.dt_valid,
+        packed.layer_shift, mode=mode)
 
     tree_label, _per_tree = ops.forest_predict_vote_v(
         codes, vid, packed.pred_codes, packed.pred_labels, packed.pred_valid,
-        packed.vote_weights, n_classes, mode=mode)
+        packed.vote_weights, n_classes, mode=kmode)
     tree_result = jnp.where(packed.pred_enable[vid], tree_label, -1)
 
     # ---- svm pipeline: LUT partials + native adds ----
     partial = ops.svm_lookup_v(feats, vid, packed.svm_lut,
-                               jnp.zeros_like(packed.svm_bias), mode=mode)
+                               jnp.zeros_like(packed.svm_bias), mode=kmode)
     acc = pb.svm_acc + partial
     sums = acc + packed.svm_bias[vid]
     signs = ((sums >= 0) & packed.svm_hvalid[vid]).astype(jnp.int32)
@@ -354,7 +350,12 @@ def _classify_impl(packed: PackedProgram, pb: PacketBatch, *, n_classes: int,
     svm_result = jnp.where(packed.svm_pred_enable[vid], svm_label, -1)
 
     # ---- result select + forwarding passthrough ----
+    # Non-REQUEST packets come out bit-identical: their codes / svm_acc
+    # intermediates and rslt are never overwritten (classification must not
+    # disturb forwarded traffic, paper §6.1).
     is_req = pb.ptype == PacketType.REQUEST
+    codes = jnp.where(is_req[:, None], codes, pb.codes)
+    acc = jnp.where(is_req[:, None], acc, pb.svm_acc)
     result = jnp.where(pb.mid == MID_SVM, svm_result, tree_result)
     result = jnp.where(vid_ok, result, -1)
     rslt = jnp.where(is_req & (result >= 0), result, pb.rslt)
@@ -369,6 +370,10 @@ class SwitchEngine:
     """
 
     def __init__(self, profile: PlaneProfile, *, mode: str | None = None) -> None:
+        """``mode`` picks the kernel path: ``None`` auto-selects (pallas on
+        TPU, ref elsewhere); ``"ref"`` / ``"interpret"`` / ``"pallas"`` force
+        one; a ``"layerwise[-<kernel mode>]"`` prefix swaps the fused tree
+        walk for the per-layer kernel scan (L launches instead of 1)."""
         self.profile = profile
         self.mode = mode
         self._fn = jax.jit(

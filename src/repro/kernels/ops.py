@@ -8,6 +8,7 @@ tests do exactly that and ``assert_allclose`` against ``ref``).
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.decode_attn import decode_attn_pallas
@@ -17,10 +18,12 @@ from repro.kernels.forest_vote import (
 )
 from repro.kernels.svm_lookup import svm_lookup_pallas, svm_lookup_pallas_v
 from repro.kernels.tcam_match import tcam_match_pallas, tcam_match_pallas_v
+from repro.kernels.tree_walk import tree_walk_pallas_v
 
 __all__ = [
     "tcam_match", "svm_lookup", "forest_predict_vote", "decode_attn",
-    "tcam_match_v", "svm_lookup_v", "forest_predict_vote_v",
+    "tcam_match_v", "svm_lookup_v", "forest_predict_vote_v", "tree_walk_v",
+    "base_mode", "count_pallas_launches",
 ]
 
 
@@ -28,6 +31,49 @@ def _resolve(mode: str | None) -> str:
     if mode is not None:
         return mode
     return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def base_mode(mode: str | None) -> str | None:
+    """Strip a ``layerwise`` walk-prefix down to the underlying kernel mode.
+
+    ``"layerwise"`` selects the scan-of-``tcam_match_v`` tree-walk fallback;
+    an optional suffix pins the per-layer kernel mode (``"layerwise-ref"``,
+    ``"layerwise-interpret"``, ``"layerwise-pallas"``).  Non-walk kernels only
+    understand the base mode, so the engine routes them through this.
+    """
+    if mode is not None and mode.startswith("layerwise"):
+        return mode[len("layerwise"):].lstrip("-") or None
+    return mode
+
+
+def count_pallas_launches(fn, *args, **kwargs) -> int:
+    """Number of ``pallas_call`` launches one invocation of ``fn`` issues.
+
+    Traces ``fn`` and walks the jaxpr; a kernel under ``lax.scan`` counts
+    once per iteration (a scanned kernel *launches* every step — exactly the
+    per-layer overhead the fused tree walk removes).  Benchmarks and the
+    single-launch acceptance test both use this.
+    """
+    closed = jax.make_jaxpr(fn)(*args, **kwargs)
+
+    def walk(jaxpr) -> int:
+        n = 0
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "pallas_call":
+                n += 1
+                continue
+            mult = eqn.params.get("length", 1) if eqn.primitive.name == "scan" else 1
+            for p in eqn.params.values():
+                for sub in jax.tree_util.tree_leaves(
+                    p, is_leaf=lambda x: hasattr(x, "jaxpr") or hasattr(x, "eqns")
+                ):
+                    if hasattr(sub, "jaxpr"):
+                        sub = sub.jaxpr
+                    if hasattr(sub, "eqns"):
+                        n += mult * walk(sub)
+        return n
+
+    return walk(closed.jaxpr)
 
 
 def tcam_match(codes, features, code_value, code_mask, fid, f_lo, f_hi,
@@ -69,6 +115,39 @@ def tcam_match_v(codes, features, vid, code_value, code_mask, fid, f_lo, f_hi,
     return tcam_match_pallas_v(codes, features, vid, code_value, code_mask,
                                fid, f_lo, f_hi, set_bit, valid, shift,
                                interpret=(m == "interpret"))
+
+
+def tree_walk_v(codes, features, vid, code_value, code_mask, fid, f_lo, f_hi,
+                set_bit, valid, layer_shift, *, mode: str | None = None):
+    """Fused multi-layer tree walk: tables are [V, L, T, E], packet b walks
+    all L layers of version ``vid[b]`` in one kernel launch.
+
+    ``mode="layerwise[-<kernel mode>]"`` selects the pre-fusion fallback — a
+    ``lax.scan`` of ``tcam_match_v`` over the layer axis (L launches) — for
+    deployments where per-layer staging still matters (e.g. partial
+    per-layer device placements that want layer-granular kernels).
+    """
+    m = _resolve(mode)
+    if m.startswith("layerwise"):
+        sub = base_mode(m)
+
+        def step(c, x):
+            cv, cm, fd, lo, hi, bit, vld, shift = x
+            return tcam_match_v(c, features, vid, cv, cm, fd, lo, hi, bit,
+                                vld, shift, mode=sub), None
+
+        per_layer = lambda a: jnp.moveaxis(a, 1, 0)
+        xs = (per_layer(code_value), per_layer(code_mask), per_layer(fid),
+              per_layer(f_lo), per_layer(f_hi), per_layer(set_bit),
+              per_layer(valid), layer_shift)
+        out, _ = jax.lax.scan(step, codes, xs)
+        return out
+    if m == "ref":
+        return ref.tree_walk_v(codes, features, vid, code_value, code_mask,
+                               fid, f_lo, f_hi, set_bit, valid, layer_shift)
+    return tree_walk_pallas_v(codes, features, vid, code_value, code_mask,
+                              fid, f_lo, f_hi, set_bit, valid, layer_shift,
+                              interpret=(m == "interpret"))
 
 
 def svm_lookup_v(features, vid, lut, bias, *, mode: str | None = None):

@@ -12,7 +12,7 @@ import jax.numpy as jnp
 
 __all__ = [
     "tcam_match", "svm_lookup", "forest_predict_vote", "decode_attn",
-    "tcam_match_v", "svm_lookup_v", "forest_predict_vote_v",
+    "tcam_match_v", "svm_lookup_v", "forest_predict_vote_v", "tree_walk_v",
 ]
 
 
@@ -78,6 +78,40 @@ def tcam_match_v(
     ].astype(jnp.uint32)
     new = codes | (bit << shift.astype(jnp.uint32))
     return jnp.where(hit, new, codes)
+
+
+def tree_walk_v(
+    codes: jax.Array,      # uint32 [B, T]
+    features: jax.Array,   # int32 [B, F]
+    vid: jax.Array,        # int32 [B] model version per packet, in [0, V)
+    code_value: jax.Array,  # uint32 [V, L, T, E]
+    code_mask: jax.Array,   # uint32 [V, L, T, E]
+    fid: jax.Array,         # int32 [V, L, T, E]
+    f_lo: jax.Array,        # int32 [V, L, T, E]
+    f_hi: jax.Array,        # int32 [V, L, T, E]
+    set_bit: jax.Array,     # uint32 [V, L, T, E]
+    valid: jax.Array,       # bool [V, L, T, E]
+    layer_shift: jax.Array,  # int32 [L] status-code bit per layer
+) -> jax.Array:
+    """Fused multi-layer tree walk: apply all L ``dt_layer`` ternary lookups
+    in sequence (layer l writes status-code bit ``layer_shift[l]``).
+
+    Semantic ground truth for the single-launch walk kernel — by construction
+    identical to scanning ``tcam_match_v`` over the layer axis, which is the
+    layerwise fallback path in ``ops.tree_walk_v``.
+    """
+    per_layer = lambda a: jnp.moveaxis(a, 1, 0)  # [V, L, ...] -> [L, V, ...]
+    xs = (per_layer(code_value), per_layer(code_mask), per_layer(fid),
+          per_layer(f_lo), per_layer(f_hi), per_layer(set_bit),
+          per_layer(valid), layer_shift)
+
+    def step(c, x):
+        cv, cm, fd, lo, hi, bit, vld, shift = x
+        return tcam_match_v(c, features, vid, cv, cm, fd, lo, hi, bit, vld,
+                            shift), None
+
+    out, _ = jax.lax.scan(step, codes, xs)
+    return out
 
 
 def svm_lookup(

@@ -34,8 +34,9 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
+
+from repro.kernels.tiling import feature_select_matrix, pad_entry_tables, pad_to
 
 __all__ = ["tcam_match_pallas", "tcam_match_pallas_v"]
 
@@ -71,16 +72,6 @@ def _kernel(codes_ref, vid_ref, feats_ref, fsel_ref, cv_ref, cm_ref, flo_ref,
     out_ref[...] = jnp.where(mine & hit, new, out_ref[...])
 
 
-def _pad_to(x: jax.Array, axis: int, mult: int, fill=0) -> jax.Array:
-    size = x.shape[axis]
-    pad = (-size) % mult
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths, constant_values=fill)
-
-
 @functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
 def tcam_match_pallas_v(
     codes: jax.Array,      # uint32 [B, T]
@@ -101,23 +92,16 @@ def tcam_match_pallas_v(
     B, T = codes.shape
     V, _, E = code_value.shape
 
-    feats = _pad_to(features.astype(jnp.float32), 1, 128)
+    feats = pad_to(features.astype(jnp.float32), 1, 128)
     F_pad = feats.shape[1]
-    # One-hot feature selector; invalid entries select nothing (all-zero row).
-    fsel = jax.nn.one_hot(fid, F_pad, dtype=jnp.float32) * valid[..., None]
-    pad_e = lambda a, fill=0: _pad_to(a, 2, 128, fill)
-    cv = pad_e(code_value)
-    cm = pad_e(code_mask, fill=np.uint32(0xFFFFFFFF))  # padded: mask all, value 0
-    flo = pad_e(f_lo.astype(jnp.float32), fill=1.0)
-    fhi = pad_e(f_hi.astype(jnp.float32), fill=0.0)  # empty range => no match
-    bit = pad_e(set_bit.astype(jnp.uint32))
-    vld = pad_e(valid.astype(jnp.int32))
-    fsel = _pad_to(fsel, 2, 128)
+    fsel = feature_select_matrix(fid, valid, F_pad)
+    cv, cm, flo, fhi, bit, vld = pad_entry_tables(
+        2, code_value, code_mask, f_lo, f_hi, set_bit, valid)
     E_pad = cv.shape[2]
 
-    codes_p = _pad_to(codes, 0, block_b)
-    feats_p = _pad_to(feats, 0, block_b)
-    vid_p = _pad_to(vid.astype(jnp.int32).reshape(-1, 1), 0, block_b, fill=-1)
+    codes_p = pad_to(codes, 0, block_b)
+    feats_p = pad_to(feats, 0, block_b)
+    vid_p = pad_to(vid.astype(jnp.int32).reshape(-1, 1), 0, block_b, fill=-1)
     B_pad = codes_p.shape[0]
     grid = (B_pad // block_b, T, V)
 

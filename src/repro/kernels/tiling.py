@@ -1,0 +1,54 @@
+"""Shared MXU/VPU tiling helpers for the entry-table kernels.
+
+``tcam_match`` (per-layer) and ``tree_walk`` (fused multi-layer) pad their
+entry tables with one no-match convention; it lives here once so a change to
+the padding contract cannot silently diverge between the kernels:
+
+  * padded entries mask **all** code bits against value 0,
+  * and carry an empty feature range [1, 0],
+
+so a padded entry can never match any packet.  The one-hot feature-select
+matrix likewise zeroes invalid entries' rows (they select no feature).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["pad_to", "pad_entry_tables", "feature_select_matrix"]
+
+LANES = 128
+
+
+def pad_to(x: jax.Array, axis: int, mult: int, fill=0) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+def pad_entry_tables(axis: int, code_value, code_mask, f_lo, f_hi, set_bit,
+                     valid):
+    """Pad the entry axis to a 128-lane multiple with the no-match fills;
+    range tables are cast to f32 (the in-kernel compare dtype) and ``valid``
+    to int32 (Pallas block dtype)."""
+    pad_e = lambda a, fill=0: pad_to(a, axis, LANES, fill)
+    return (pad_e(code_value),
+            pad_e(code_mask, fill=np.uint32(0xFFFFFFFF)),  # mask all, value 0
+            pad_e(f_lo.astype(jnp.float32), fill=1.0),
+            pad_e(f_hi.astype(jnp.float32), fill=0.0),     # empty range
+            pad_e(set_bit.astype(jnp.uint32)),
+            pad_e(valid.astype(jnp.int32)))
+
+
+def feature_select_matrix(fid: jax.Array, valid: jax.Array,
+                          f_pad: int) -> jax.Array:
+    """One-hot feature selector for the MXU ``feats @ fsel^T`` indirection,
+    entry axis (``fid``'s last) padded to 128 lanes; invalid entries select
+    nothing (all-zero row)."""
+    fsel = jax.nn.one_hot(fid, f_pad, dtype=jnp.float32) * valid[..., None]
+    return pad_to(fsel, fid.ndim - 1, LANES)

@@ -1,0 +1,153 @@
+"""Pallas TPU kernel: fused multi-layer tree walk (``dt_layer`` × L in one
+launch).
+
+The layerwise path launches one ``tcam_match`` kernel per tree layer
+(``lax.scan`` over L ``pallas_call``s), re-streaming the packet feature block
+from HBM every layer — the per-stage partitioning overhead SpliDT
+(arXiv:2509.00397) identifies for staged tree traversal.  This kernel
+collapses the scan into **one** ``pallas_call`` that walks the layer axis
+*inside* the kernel with a ``fori_loop`` over layer-indexed table blocks:
+
+  1. *feature select, all layers at once* — the per-entry one-hot feature
+     indirection for every layer is a single MXU matmul
+     ``fv_all = feats @ fsel^T`` with ``fsel`` flattened to
+     ``[L * E_pad, F_pad]``; the product stays VMEM-resident for the whole
+     walk (one HBM read of the feature tile per classify, not per layer).
+  2. *layer walk* — a ``fori_loop`` carries the status codes; step ``l``
+     slices layer ``l``'s entries ``[E_pad]`` from the VMEM-resident table
+     blocks ``[L, E_pad]`` and applies the same ternary compare + priority
+     encode as ``tcam_match`` (masked code equality, range compare,
+     exclusive-cumsum first-match).
+  3. *version merge* — as in the layerwise kernel, the grid's innermost
+     dimension sweeps versions; each step walks *all* L layers with version
+     ``v``'s tables and merges the final codes for packets whose ``vid``
+     matches (a no-hit walk leaves codes unchanged, preserving the TCAM
+     fall-through contract per layer).
+
+Grid: (batch blocks, trees, versions) — exactly **one** launch per classify,
+vs ``L`` for the layerwise scan.  Per-step VMEM (block_b=256, L=32,
+E_pad=128, F_pad=128): feats 128 KiB + fsel 2 MiB + fv_all 4 MiB + entry
+blocks 6·16 KiB ≈ 6.2 MiB — under the 16 MiB budget; ``block_b`` is halved
+automatically when L·E_pad would overflow it.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.tiling import feature_select_matrix, pad_entry_tables, pad_to
+
+__all__ = ["tree_walk_pallas_v"]
+
+
+def _kernel(codes_ref, vid_ref, feats_ref, fsel_ref, cv_ref, cm_ref, flo_ref,
+            fhi_ref, bit_ref, valid_ref, shift_ref, out_ref, *, n_layers: int,
+            e_pad: int):
+    v = pl.program_id(2)
+    codes0 = codes_ref[...]                     # [Bb, 1] uint32
+
+    @pl.when(v == 0)
+    def _passthrough():
+        out_ref[...] = codes0
+
+    feats = feats_ref[...]                      # [Bb, F_pad] f32
+    fsel = fsel_ref[0, 0]                       # [L*E_pad, F_pad] f32
+    # One MXU pass selects the tested feature value for every (layer, entry);
+    # the [Bb, L*E_pad] product then stays resident across the whole walk.
+    fv_all = jnp.dot(feats, fsel.T, preferred_element_type=jnp.float32)
+
+    def layer(l, codes):
+        off = pl.multiple_of(l * e_pad, e_pad)
+        fv = jax.lax.dynamic_slice_in_dim(fv_all, off, e_pad, axis=1)
+        cv = cv_ref[0, l, 0][None, :]           # [1, E_pad] uint32
+        cm = cm_ref[0, l, 0][None, :]
+        flo = flo_ref[0, l, 0][None, :]         # [1, E_pad] f32
+        fhi = fhi_ref[0, l, 0][None, :]
+        valid = valid_ref[0, l, 0][None, :]
+        code_ok = (codes & cm) == cv            # [Bb, E_pad]
+        ok = code_ok & (fv >= flo) & (fv <= fhi) & (valid != 0)
+        # Priority encode: first (== highest-priority) match only.
+        first = ok & (jnp.cumsum(ok.astype(jnp.int32), axis=1) == 1)
+        bit = jnp.sum(jnp.where(first, bit_ref[0, l, 0][None, :], 0), axis=1,
+                      keepdims=True)
+        hit = ok.any(axis=1, keepdims=True)
+        shift = shift_ref[0, l].astype(jnp.uint32)
+        new = codes | (bit.astype(jnp.uint32) << shift)
+        return jnp.where(hit, new, codes)
+
+    codes = jax.lax.fori_loop(0, n_layers, layer, codes0)
+    mine = vid_ref[...] == v                    # [Bb, 1]
+    out_ref[...] = jnp.where(mine, codes, out_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def tree_walk_pallas_v(
+    codes: jax.Array,      # uint32 [B, T]
+    features: jax.Array,   # int32 [B, F]
+    vid: jax.Array,        # int32 [B] model version per packet, in [0, V)
+    code_value: jax.Array,  # uint32 [V, L, T, E]
+    code_mask: jax.Array,
+    fid: jax.Array,         # int32 [V, L, T, E]
+    f_lo: jax.Array,
+    f_hi: jax.Array,
+    set_bit: jax.Array,     # uint32 [V, L, T, E]
+    valid: jax.Array,       # bool [V, L, T, E]
+    layer_shift: jax.Array,  # int32 [L] status-code bit per layer
+    *,
+    block_b: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    B, T = codes.shape
+    V, L, _, E = code_value.shape
+
+    feats = pad_to(features.astype(jnp.float32), 1, 128)
+    F_pad = feats.shape[1]
+    # NOTE: fsel and the padded tables are rebuilt from fid/valid on every
+    # call; they only change at install/swap, so precomputing them into
+    # PackedProgram would shave per-classify prep on TPU (ROADMAP open item).
+    fsel = feature_select_matrix(fid, valid, F_pad)
+    cv, cm, flo, fhi, bit, vld = pad_entry_tables(
+        3, code_value, code_mask, f_lo, f_hi, set_bit, valid)
+    E_pad = cv.shape[3]
+    # [V, L, T, E_pad, F_pad] -> [V, T, L*E_pad, F_pad]: one matmul operand
+    # covering every layer's entries.
+    fsel = fsel.transpose(0, 2, 1, 3, 4).reshape(V, T, L * E_pad, F_pad)
+
+    # Keep the per-step fv_all product inside VMEM: the [block_b, L*E_pad]
+    # tile is the largest resident array, so shrink the batch tile as the
+    # fused layer axis grows.
+    while block_b > 8 and block_b * L * E_pad * 4 > 4 * 1024 * 1024:
+        block_b //= 2
+
+    codes_p = pad_to(codes, 0, block_b)
+    feats_p = pad_to(feats, 0, block_b)
+    vid_p = pad_to(vid.astype(jnp.int32).reshape(-1, 1), 0, block_b, fill=-1)
+    B_pad = codes_p.shape[0]
+    grid = (B_pad // block_b, T, V)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_layers=L, e_pad=E_pad),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, 1), lambda i, t, v: (i, t)),       # codes
+            pl.BlockSpec((block_b, 1), lambda i, t, v: (i, 0)),       # vid
+            pl.BlockSpec((block_b, F_pad), lambda i, t, v: (i, 0)),   # feats
+            pl.BlockSpec((1, 1, L * E_pad, F_pad),
+                         lambda i, t, v: (v, t, 0, 0)),               # fsel
+            pl.BlockSpec((1, L, 1, E_pad), lambda i, t, v: (v, 0, t, 0)),  # cv
+            pl.BlockSpec((1, L, 1, E_pad), lambda i, t, v: (v, 0, t, 0)),  # cm
+            pl.BlockSpec((1, L, 1, E_pad), lambda i, t, v: (v, 0, t, 0)),  # flo
+            pl.BlockSpec((1, L, 1, E_pad), lambda i, t, v: (v, 0, t, 0)),  # fhi
+            pl.BlockSpec((1, L, 1, E_pad), lambda i, t, v: (v, 0, t, 0)),  # bit
+            pl.BlockSpec((1, L, 1, E_pad), lambda i, t, v: (v, 0, t, 0)),  # valid
+            pl.BlockSpec((1, L), lambda i, t, v: (0, 0)),             # shift
+        ],
+        out_specs=pl.BlockSpec((block_b, 1), lambda i, t, v: (i, t)),
+        out_shape=jax.ShapeDtypeStruct((B_pad, T), codes.dtype),
+        interpret=interpret,
+    )(codes_p, vid_p, feats_p, fsel, cv, cm, flo, fhi, bit, vld,
+      layer_shift.reshape(1, L).astype(jnp.int32))
+    return out[:B]

@@ -93,9 +93,10 @@ PIPELINE_SCRIPT = textwrap.dedent("""
         else None
     assert pp is not None, f"plan used {len(dps)} devices > 4"
     out = pp.run(mbs)
-    got = np.asarray(out.rslt).reshape(-1)
-    ok = bool((got == rf.predict(Xm)).all())
-    print(json.dumps({"ok": ok, "n_dev": len(dps)}))
+    got = np.asarray(out.rslt)
+    flat = got.shape == (n_micro * B,)  # run() re-concatenates in order
+    ok = flat and bool((got == rf.predict(Xm)).all())
+    print(json.dumps({"ok": ok, "flat": flat, "n_dev": len(dps)}))
 """)
 
 

@@ -62,6 +62,107 @@ def test_forest_vote_sweep(rng, B, T, P, C):
     np.testing.assert_array_equal(np.asarray(r[1]), np.asarray(p[1]))
 
 
+def _rand_tcam_v(rng, B, T, E, F, V, L=None, empty_slots=()):
+    """Random version-indexed tables ([V, T, E] or, with L, [V, L, T, E]);
+    ``empty_slots`` version indices get all-invalid entries (evicted zoo
+    slots)."""
+    shape = (V, T, E) if L is None else (V, L, T, E)
+    cv = jnp.asarray(rng.integers(0, 2**6, shape), jnp.uint32)
+    cm = jnp.asarray(rng.integers(0, 2**6, shape), jnp.uint32)
+    fid = jnp.asarray(rng.integers(0, F, shape), jnp.int32)
+    flo = jnp.asarray(rng.integers(0, 200, shape), jnp.int32)
+    fhi = flo + jnp.asarray(rng.integers(0, 100, shape), jnp.int32)
+    bit = jnp.asarray(rng.integers(0, 2, shape), jnp.uint32)
+    valid = np.asarray(rng.random(shape) < 0.9)
+    for v in empty_slots:
+        valid[v] = False
+    return cv, cm, fid, flo, fhi, bit, jnp.asarray(valid)
+
+
+# Edge shapes: B=300/257 not a multiple of block_b=256, E=130/150 pads past
+# 128 (E_pad=256), and a zoo where some version slots are empty (evicted).
+@pytest.mark.parametrize("B,T,E,F,V,L,empty", [
+    (7, 1, 3, 4, 1, 1, ()),
+    (64, 4, 17, 13, 3, 5, ()),
+    (300, 2, 130, 20, 2, 3, ()),       # B % block_b != 0, E pads past 128
+    (257, 3, 33, 46, 4, 8, (1, 3)),    # empty version slots in the zoo
+    (33, 5, 64, 60, 1, 32, ()),        # full-depth walk
+])
+def test_tree_walk_sweep(rng, B, T, E, F, V, L, empty):
+    """Fused walk kernel (interpret) vs fused oracle vs layerwise scan."""
+    codes = jnp.asarray(rng.integers(0, 2**12, (B, T)), jnp.uint32)
+    feats = jnp.asarray(rng.integers(0, 256, (B, F)), jnp.int32)
+    vid = jnp.asarray(rng.integers(0, V, (B,)), jnp.int32)
+    tables = _rand_tcam_v(rng, B, T, E, F, V, L=L, empty_slots=empty)
+    shift = jnp.asarray(rng.permutation(L), jnp.int32)
+    args = (codes, feats, vid, *tables, shift)
+    r = ref.tree_walk_v(*args)
+    p = ops.tree_walk_v(*args, mode="interpret")
+    np.testing.assert_array_equal(np.asarray(r), np.asarray(p))
+    lw = ops.tree_walk_v(*args, mode="layerwise-ref")
+    np.testing.assert_array_equal(np.asarray(r), np.asarray(lw))
+    # packets addressing an empty slot keep their incoming codes untouched
+    for v in empty:
+        sel = np.asarray(vid) == v
+        np.testing.assert_array_equal(np.asarray(p)[sel], np.asarray(codes)[sel])
+
+
+def test_tree_walk_single_launch(rng):
+    """The fused path issues exactly ONE tree-walk pallas_call per classify;
+    the layerwise fallback issues L (one per scanned layer)."""
+    B, T, E, F, V, L = 16, 2, 8, 6, 2, 7
+    codes = jnp.asarray(rng.integers(0, 2**8, (B, T)), jnp.uint32)
+    feats = jnp.asarray(rng.integers(0, 256, (B, F)), jnp.int32)
+    vid = jnp.asarray(rng.integers(0, V, (B,)), jnp.int32)
+    tables = _rand_tcam_v(rng, B, T, E, F, V, L=L)
+    shift = jnp.arange(L, dtype=jnp.int32)
+    args = (codes, feats, vid, *tables, shift)
+    fused = ops.count_pallas_launches(
+        lambda *a: ops.tree_walk_v(*a, mode="interpret"), *args)
+    layerwise = ops.count_pallas_launches(
+        lambda *a: ops.tree_walk_v(*a, mode="layerwise-interpret"), *args)
+    assert fused == 1
+    assert layerwise == L
+
+
+@pytest.mark.parametrize("B,T,E,F,V", [(300, 2, 130, 20, 2),   # pads past 128
+                                       (257, 3, 150, 13, 3)])  # B off-block
+def test_tcam_match_v_edge_shapes(rng, B, T, E, F, V):
+    """Per-layer kernel parity on the same edge shapes (entry counts padding
+    past one 128-lane tile, batches off the block_b grid, empty slot v=0)."""
+    codes = jnp.asarray(rng.integers(0, 2**12, (B, T)), jnp.uint32)
+    feats = jnp.asarray(rng.integers(0, 256, (B, F)), jnp.int32)
+    vid = jnp.asarray(rng.integers(0, V, (B,)), jnp.int32)
+    tables = _rand_tcam_v(rng, B, T, E, F, V, empty_slots=(0,))
+    shift = jnp.int32(rng.integers(0, 20))
+    args = (codes, feats, vid, *tables, shift)
+    r = ref.tcam_match_v(*args)
+    p = ops.tcam_match_v(*args, mode="interpret")
+    np.testing.assert_array_equal(np.asarray(r), np.asarray(p))
+
+
+def test_forest_vote_v_empty_slot(rng):
+    """A zoo with an evicted leaf-table slot: its packets vote label 0 with
+    no valid leaves, identically in interpret and ref modes."""
+    B, T, P, C, V = 70, 3, 32, 5, 3
+    pc = np.sort(rng.choice(2**16, size=(V * T * P,), replace=False)
+                 .astype(np.uint32).reshape(V, T, P), axis=2)
+    plab = rng.integers(0, C, (V, T, P)).astype(np.int32)
+    pv = np.ones((V, T, P), bool)
+    pv[1] = False  # evicted slot
+    vid = rng.integers(0, V, (B,))
+    hit = rng.integers(0, P, (B, T))
+    codes = pc[vid[:, None], np.arange(T)[None, :], hit]
+    w = rng.random((V, T)).astype(np.float32)
+    args = (jnp.asarray(codes), jnp.asarray(vid, jnp.int32), jnp.asarray(pc),
+            jnp.asarray(plab), jnp.asarray(pv), jnp.asarray(w))
+    r = ref.forest_predict_vote_v(*args, C)
+    p = ops.forest_predict_vote_v(*args, C, mode="interpret")
+    np.testing.assert_array_equal(np.asarray(r[0]), np.asarray(p[0]))
+    np.testing.assert_array_equal(np.asarray(r[1]), np.asarray(p[1]))
+    assert (np.asarray(r[1])[np.asarray(vid) == 1] == 0).all()
+
+
 @pytest.mark.parametrize("B,Hq,Hkv,D,S,dtype", [
     (2, 4, 4, 16, 33, jnp.float32),
     (3, 8, 2, 32, 128, jnp.float32),

@@ -4,6 +4,8 @@ Uses the session-scoped ``plane_engine`` fixture (one jit trace shared by the
 whole module); trace-count assertions are therefore *deltas* — installs and
 swaps must never add a trace for an already-seen batch shape.
 """
+import dataclasses
+
 import numpy as np
 import jax.numpy as jnp
 
@@ -73,6 +75,88 @@ def test_forwarding_passthrough(satdap, plane_engine):
                          "ptype": jnp.full((16,), PacketType.FORWARD, jnp.int32)})
     out = eng.classify(packed, pb)
     assert (np.asarray(out.rslt) == -1).all()
+
+
+def test_mixed_batch_leaves_forward_packets_bit_identical(satdap, plane_engine):
+    """Regression: a mixed REQUEST/FORWARD batch must leave FORWARD packets'
+    codes/svm_acc intermediates AND rslt bit-identical — non-request traffic
+    passes through untouched even when it shares a batch with requests."""
+    Xtr, ytr, Xte, _ = satdap
+    eng = plane_engine
+    dt = DecisionTree(max_depth=6, max_leaf_nodes=40).fit(Xtr, ytr)
+    prog = translate(dt)
+    packed = eng.install(eng.empty(), prog)
+    B = 64
+    pb = _req(Xte[:B], prog, eng)
+    rng = np.random.default_rng(7)
+    fwd = rng.random(B) < 0.5
+    # give the forwarded packets nonzero in-flight intermediates + rslt so an
+    # overwrite (even with recomputed values) is detectable
+    fwd_col = jnp.asarray(fwd)[:, None]
+    pb = dataclasses.replace(
+        pb,
+        ptype=jnp.where(jnp.asarray(fwd), PacketType.FORWARD, PacketType.REQUEST),
+        codes=jnp.where(fwd_col, jnp.asarray(
+            rng.integers(0, 2**10, pb.codes.shape), jnp.uint32), pb.codes),
+        svm_acc=jnp.where(fwd_col, jnp.asarray(
+            rng.integers(-99, 99, pb.svm_acc.shape), jnp.int32), pb.svm_acc),
+        rslt=jnp.where(jnp.asarray(fwd),
+                       jnp.asarray(rng.integers(-1, 5, (B,)), jnp.int32),
+                       pb.rslt),
+    )
+    out = eng.classify(packed, pb)
+    np.testing.assert_array_equal(np.asarray(out.codes)[fwd],
+                                  np.asarray(pb.codes)[fwd])
+    np.testing.assert_array_equal(np.asarray(out.svm_acc)[fwd],
+                                  np.asarray(pb.svm_acc)[fwd])
+    np.testing.assert_array_equal(np.asarray(out.rslt)[fwd],
+                                  np.asarray(pb.rslt)[fwd])
+    # the REQUEST packets in the same batch still classify
+    req = ~fwd
+    assert (np.asarray(out.rslt)[req] == dt.predict(Xte[:B])[req]).all()
+
+
+def test_layerwise_fallback_matches_fused(satdap):
+    """mode="layerwise-ref" (pre-fusion per-layer scan) and the fused walk
+    produce identical plane outputs."""
+    from repro.core.plane import PlaneProfile, SwitchEngine
+
+    Xtr, ytr, Xte, _ = satdap
+    prof = PlaneProfile(max_features=36, max_trees=3, max_layers=6,
+                        max_entries_per_layer=64, max_leaves=64,
+                        max_classes=8, max_hyperplanes=8, max_versions=2)
+    dt = DecisionTree(max_depth=5, max_leaf_nodes=30).fit(Xtr, ytr)
+    prog = translate(dt)
+    outs = {}
+    for mode in ("ref", "layerwise-ref"):
+        eng = SwitchEngine(prof, mode=mode)
+        packed = eng.install(eng.empty(), prog)
+        out = eng.classify(packed, _req(Xte, prog, eng))
+        outs[mode] = np.asarray(out.rslt)
+    np.testing.assert_array_equal(outs["ref"], outs["layerwise-ref"])
+    assert (outs["ref"] == dt.predict(Xte)).all()
+
+
+def test_classify_issues_single_tree_walk_launch(satdap, plane_engine):
+    """Acceptance: one classify = exactly one tree-walk pallas_call (the
+    fused kernel), vs max_layers launches on the layerwise fallback."""
+    from repro.core.plane import _classify_impl
+    from repro.kernels import ops
+
+    Xtr, ytr, Xte, _ = satdap
+    eng = plane_engine
+    dt = DecisionTree(max_depth=6, max_leaf_nodes=40).fit(Xtr, ytr)
+    prog = translate(dt)
+    packed = eng.install(eng.empty(), prog)
+    pb = _req(Xte[:32], prog, eng)
+    n_cls = eng.profile.max_classes
+    count = lambda mode: ops.count_pallas_launches(
+        lambda pk, b: _classify_impl(pk, b, n_classes=n_cls, mode=mode),
+        packed, pb)
+    L = eng.profile.max_layers
+    # interpret mode: tree walk + forest vote + svm lookup kernels
+    assert count("interpret") == 3
+    assert count("layerwise-interpret") == L + 2
 
 
 def test_model_version_swap_changes_predictions(satdap, plane_engine):
