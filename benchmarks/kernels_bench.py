@@ -70,17 +70,24 @@ def run() -> list[str]:
 
 
 def run_tree_walk(rng) -> list[str]:
-    """Fused single-launch tree walk vs the pre-fusion per-layer scan.
+    """Fused single-launch tree walk vs the pre-fusion per-layer scan, and
+    install-time prepped operands vs per-call prep.
 
     Reports, per (L, V): Pallas launch count per classify (counted in the
-    traced jaxpr — 1 fused vs L layerwise) and wall-clock / packets-per-sec
-    for the *actual kernel paths* in interpret mode, where the per-launch
-    overhead the fusion removes is real.  (The XLA `mode="ref"` paths of the
+    traced jaxpr — 1 fused vs L layerwise), the count of table-shaped prep
+    ops left in the trace (0 when the exec image is bound), and wall-clock /
+    packets-per-sec for the *actual kernel paths* in interpret mode, where
+    the per-launch overhead the fusion removes is real.  ``fused-prepped``
+    binds operands built once by ``tiling.prep_tree_walk`` — the engine's
+    install-time exec-image path — so its delta vs ``fused`` is the per-call
+    prep cost that moved to install time.  (The XLA `mode="ref"` paths of the
     two walks are the identical scan computation on CPU, so timing them would
     report measurement noise as a delta; on TPU rerun with `mode="pallas"` /
     `"layerwise-pallas"` to time the compiled kernels.)
     """
-    out = ["tree_walk,name,L,V,launches,us_per_batch,pkts_per_sec,config"]
+    from repro.kernels import tiling
+
+    out = ["tree_walk,name,L,V,launches,prep_ops,us_per_batch,pkts_per_sec,config"]
     B, T, E, F = 512, 8, 128, 46
     for L in (8, 16, 32):
         for V in (1, 4):
@@ -96,14 +103,26 @@ def run_tree_walk(rng) -> list[str]:
             valid = jnp.ones((V, L, T, E), bool)
             shift = jnp.arange(L, dtype=jnp.int32)
             args = (codes, feats, vid, cv, cm, fid, flo, fhi, bit, valid, shift)
-            for name, mode in (("fused", "interpret"),
-                               ("layerwise", "layerwise-interpret")):
+            prep = jax.tree.map(  # install-time compile, outside the timed fn
+                lambda x: x.block_until_ready(),
+                tiling.prep_tree_walk(cv, cm, fid, flo, fhi, bit, valid,
+                                      tiling.lane_pad(F)))
+            for name, mode, kw in (
+                    ("fused", "interpret", {}),
+                    ("fused-prepped", "interpret", {"prep": prep}),
+                    ("layerwise", "layerwise-interpret", {})):
                 launches = ops.count_pallas_launches(
-                    lambda *a, m=mode: ops.tree_walk_v(*a, mode=m), *args)
-                fn = jax.jit(lambda *a, m=mode: ops.tree_walk_v(*a, mode=m))
+                    lambda *a, m=mode, k=kw: ops.tree_walk_v(*a, mode=m, **k),
+                    *args)
+                prep_ops = ops.count_operand_prep_ops(
+                    lambda *a, m=mode, k=kw: ops.tree_walk_v(*a, mode=m, **k),
+                    *args)
+                fn = jax.jit(
+                    lambda *a, m=mode, k=kw: ops.tree_walk_v(*a, mode=m, **k))
                 us = _time(fn, *args, n=3)
                 pps = B / (us * 1e-6)
                 out.append(
-                    f"tree_walk,{name},{L},{V},{launches},{us:.1f},{pps:.0f},"
-                    f"B={B} T={T} E={E} F={F} (interpret-mode kernel paths)")
+                    f"tree_walk,{name},{L},{V},{launches},{prep_ops},{us:.1f},"
+                    f"{pps:.0f},B={B} T={T} E={E} F={F} "
+                    f"(interpret-mode kernel paths)")
     return out

@@ -1,19 +1,33 @@
-"""Model-zoo scaling: install latency + classify throughput vs V (zoo size).
+"""Model-zoo scaling: install latency + classify throughput vs V (zoo size),
+and the install-vs-classify cost split of the exec image.
 
 For V ∈ {1, 2, 4, 8} version slots, measures
 
-* ``install_ms``   — control-plane latency of writing one version slot
-                     (translate excluded: pure entry-array update + transfer);
-* ``swap_ms``      — same, overwriting an occupied slot (the hot-swap path);
-* ``classify_us``  — per-packet classify time, batch of mixed-VID requests
-                     spread uniformly over all resident versions;
-* ``traces``       — engine trace count after all installs/swaps (must be 1:
-                     the §6 compile-once property is independent of V).
-
-The classify column is the cost of the VID gather at each table lookup; on
-the XLA-CPU ref path the per-packet table gather grows the working set, so
-throughput vs V quantifies what the Pallas version-grid kernels avoid keeping
-off VMEM.
+* ``install_ms``    — control-plane latency of writing one version slot
+                      (translate excluded: entry-array update + the slot's
+                      exec-image compile + transfer);
+* ``swap_ms``       — same, overwriting an occupied slot (the hot-swap path);
+* ``classify_us``   — per-packet classify time with the exec image bound
+                      (zero per-call operand prep; XLA ref path on CPU),
+                      batch of mixed-VID requests spread uniformly over all
+                      resident versions — the **after** side of the split;
+* ``percall_prep_us`` — per-packet cost of one full operand-prep pass (the
+                      jitted source-tables -> exec-image compile, amortized
+                      over the batch): the extra work a ``use_image=False``
+                      engine re-traces into **every** classify on the kernel
+                      path (pallas/interpret — the XLA ref oracle always
+                      works from source tables), i.e. the **before** side.
+                      before ≈ classify_us + percall_prep_us; after moves
+                      that cost into ``install_ms`` (which includes the
+                      slot's image compile).  Measured directly because on
+                      the CPU interpreter the kernel-simulation cost drowns
+                      the delta; on TPU the same bytes are HBM traffic ahead
+                      of the fused launch;
+* ``image_mib``     — resident exec-image size = the operand bytes a
+                      prep-per-call classify re-materializes (and, on TPU,
+                      re-streams through HBM) every launch;
+* ``traces``        — engine trace count after all installs/swaps (must be 1:
+                      the §6 compile-once property is independent of V).
 
   PYTHONPATH=src python -m benchmarks.run --only zoo
 """
@@ -21,21 +35,31 @@ from __future__ import annotations
 
 import time
 
+import jax
 import numpy as np
 
 from benchmarks.common import fit_workload
 from repro.core.packets import PacketBatch
-from repro.core.plane import PlaneProfile, SwitchEngine
+from repro.core.plane import PlaneProfile, SwitchEngine, build_exec_image
 from repro.core.translator import translate
 
 
 def _block(packed) -> None:
-    packed.dt_cv.block_until_ready()
-    packed.svm_lut.block_until_ready()
+    for leaf in jax.tree.leaves(packed):
+        leaf.block_until_ready()
+
+
+def _time_classify(eng, packed, pb, B, reps=5) -> float:
+    eng.classify(packed, pb).rslt.block_until_ready()   # warm the trace
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        eng.classify(packed, pb).rslt.block_until_ready()
+    return (time.perf_counter() - t0) / reps / B * 1e6
 
 
 def run() -> list[str]:
-    out = ["zoo,V,install_ms,swap_ms,classify_us_per_pkt,batch,traces"]
+    out = ["zoo,V,install_ms,swap_ms,classify_us_per_pkt,"
+           "percall_prep_us_per_pkt,image_mib,batch,traces"]
     f = fit_workload("satdap", "dt", 36)
     B = 2048
     X = np.tile(f.Xte, (B // f.Xte.shape[0] + 1, 1))[:B]
@@ -62,23 +86,47 @@ def run() -> list[str]:
         _block(packed)
         swap_ms = (time.perf_counter() - t0) / V * 1e3
 
+        image_mib = sum(l.nbytes for l in jax.tree.leaves(packed.image)) / 2**20
+
         vids = rng.integers(0, V, B)
         pb = PacketBatch.make_request(
             X, mid=progs[0].mid, vid=vids, max_features=36,
             n_trees=prof.max_trees, n_hyperplanes=prof.max_hyperplanes,
             max_versions=V)
-        eng.classify(packed, pb).rslt.block_until_ready()   # warm the trace
+        classify_us = _time_classify(eng, packed, pb, B)
+
+        # the before side: one full operand-prep pass over the source tables
+        # — exactly what a use_image=False classify re-traces per call
+        prep_pass = jax.jit(lambda pk: build_exec_image(pk, prof))
+        _block(prep_pass(packed))               # warm the trace
         t0 = time.perf_counter()
         reps = 5
         for _ in range(reps):
-            eng.classify(packed, pb).rslt.block_until_ready()
-        classify_us = (time.perf_counter() - t0) / reps / B * 1e6
+            _block(prep_pass(packed))
+        percall_prep_us = (time.perf_counter() - t0) / reps / B * 1e6
 
         want = f.model.predict(X)
         got = np.asarray(eng.classify(packed, pb).rslt)
         assert (got == want).all(), "zoo answers must match the model"
-        out.append(f"zoo,{V},{install_ms:.2f},{swap_ms:.2f},"
-                   f"{classify_us:.2f},{B},{eng.cache_size()}")
+        # image-vs-prep agreement must be checked on the *kernel* path (the
+        # ref oracle ignores the image, so a ref-mode comparison would be
+        # vacuous): interpret on CPU, pallas on TPU, small sub-batch.
+        kmode = "pallas" if jax.default_backend() == "tpu" else "interpret"
+        B_k = 256
+        pb_k = PacketBatch.make_request(
+            X[:B_k], mid=progs[0].mid, vid=vids[:B_k], max_features=36,
+            n_trees=prof.max_trees, n_hyperplanes=prof.max_hyperplanes,
+            max_versions=V)
+        got_img = np.asarray(
+            SwitchEngine(prof, mode=kmode).classify(packed, pb_k).rslt)
+        got_prep = np.asarray(
+            SwitchEngine(prof, mode=kmode, use_image=False)
+            .classify(packed, pb_k).rslt)
+        assert (got_img == want[:B_k]).all(), "image path must match the model"
+        assert (got_prep == got_img).all(), "prep path must agree with the image"
+        out.append(f"zoo,{V},{install_ms:.2f},{swap_ms:.2f},{classify_us:.2f},"
+                   f"{percall_prep_us:.2f},{image_mib:.1f},{B},"
+                   f"{eng.cache_size()}")
     return out
 
 

@@ -60,7 +60,11 @@ def build_device_programs(
     profile: PlaneProfile,
 ) -> tuple[list[str], list[PackedProgram]]:
     """One partial PackedProgram per programmable device on the plan's path,
-    in path order (the control plane's per-switch entry updates, §6.2)."""
+    in path order (the control plane's per-switch entry updates, §6.2).
+
+    Each partial program carries its own exec image, compiled at this install
+    step from exactly the entries the device owns — hops do no per-call
+    operand prep, same as the single-switch plane."""
     per_dev = plan.device_stages()
     devices = [d for d in plan.path if d in per_dev]
     progs = []
@@ -84,6 +88,9 @@ def build_zoo_device_programs(
     plans must share one path — the packet still visits devices in one wire
     order, and its intermediates ride the same ppermute ring regardless of
     which versions each hop serves.
+
+    Each merged zoo carries its exec image (rebuilt per installed slot, like
+    any install), so distributed classify binds precomputed operands too.
     """
     if len(programs) != len(plans):
         raise ValueError("one plan per program version required")
@@ -203,7 +210,9 @@ class PipelinedPlane:
         return jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]), sel)
 
     def swap_model(self, device_programs: list[PackedProgram]) -> None:
-        """Runtime reprogram: new entry arrays, same compiled pipeline."""
+        """Runtime reprogram: new entry arrays + their install-time exec
+        images (stacked and resharded with the tables), same compiled
+        pipeline."""
         if len(device_programs) != self.n_dev:
             raise ValueError("device count changed — replan instead")
         stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *device_programs)

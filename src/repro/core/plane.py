@@ -25,11 +25,24 @@ array updates against the same compiled trace.  A packet addressing an empty
 or out-of-range version slot gets ``rslt == -1`` (no match) — it never reads
 another version's tables.
 
+Install-time program compilation (the exec image): the paper's control plane
+"updates the entries in predefined tables" (§6.2) and the hot path stays pure
+match-action.  Mirroring that boundary, program state splits into **source
+tables** (what ``install_program`` writes — the swappable flow-table state)
+and a derived, device-resident **``ExecImage``** — the kernel-ready operands
+(flattened one-hot ``fsel``, no-match-padded entry blocks, chunked SVM LUTs,
+Pallas-dtype predict tables) that classify binds straight into each
+``pallas_call``.  The image is recomputed once per install/evict/swap, and
+only for the written version slot; classify does **zero** per-call operand
+prep (pinned by the exec-image jaxpr test).  ``docs/ARCHITECTURE.md`` pins
+the full contract.
+
 Distribution hooks: a ``PackedProgram`` can be *partial* — only the tables of
 the program stages assigned to this device are installed; status codes and
 SVM partial sums travel in the ``PacketBatch`` intermediates, so a packet
 finishes classification after visiting every assigned device in path order
-(see ``distributed_plane.py``).
+(see ``distributed_plane.py``).  Partial programs carry their own (partial)
+exec image, built from exactly the entries this device owns.
 """
 from __future__ import annotations
 
@@ -42,12 +55,14 @@ import numpy as np
 
 from repro.core.packets import PacketBatch, PacketType
 from repro.core.translator import MID_SVM, TableProgram
-from repro.kernels import ops
+from repro.kernels import ops, tiling
 
 __all__ = [
     "PlaneProfile",
     "PackedProgram",
+    "ExecImage",
     "SwitchEngine",
+    "build_exec_image",
     "empty_program",
     "install_program",
     "evict_program",
@@ -87,12 +102,54 @@ class PlaneProfile:
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
+class ExecImage:
+    """Derived, device-resident kernel operands — the installed *executable*.
+
+    Everything here is a pure function of the ``PackedProgram`` source tables
+    (``build_exec_image``), precomputed at install/evict/swap time so
+    ``_classify_impl`` binds operands straight into each ``pallas_call`` with
+    zero per-call prep.  Field groups are the kernels' ``*Operands`` tuples
+    (see ``kernels/tiling.py`` for shapes, dtypes, and the no-match padding
+    convention):
+
+    * ``walk``   — fused tree walk: flattened one-hot ``fsel``
+      ``[V, T, L*E_pad, F_pad]`` + no-match-padded entry blocks
+      ``[V, L, T, E_pad]``.
+    * ``svm``    — chunked f32 LUT ``[V, n_chunks, chunk_f*levels, H_pad]``.
+      Its bias block is **zeros**: the plane adds ``svm_bias`` *outside* the
+      kernel so distributed partial sums compose (bias once, on the owning
+      device).
+    * ``forest`` — dt_predict validity/weights in Pallas block dtypes
+      (``pred_codes``/``pred_labels`` bind as-is from the source tables).
+
+    Residency trade-off: the image lives on the *program*, not the engine,
+    so one ``PackedProgram`` serves any engine mode — at the cost of holding
+    the image (≈ ``image_mib`` in ``benchmarks/zoo_swap.py``, linear in V)
+    even under a ``mode="ref"`` or ``use_image=False`` engine that never
+    dereferences it.  On the TPU target the image IS the working set; if
+    ref-only deployments ever matter, carry ``image=None`` and let the next
+    install heal it.
+    """
+
+    walk: tiling.TreeWalkOperands
+    svm: tiling.SvmOperands
+    forest: tiling.ForestOperands
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
 class PackedProgram:
     """Entry arrays for one engine — the runtime-swappable 'flow table' state.
 
     All table arrays carry a leading version axis V (the model zoo); a
-    packet's VID selects its slot at classify time.  Tree layouts then use a
-    layer axis [V, L, T, E] so the engine scans over layers.
+    packet's VID selects its slot at classify time.  Tree layouts use a
+    layer axis [V, L, T, E]; since the PR-2 fusion the engine walks all
+    layers inside **one** kernel launch (``kernels/tree_walk.py``), the
+    per-layer kernel scan surviving only as the ``layerwise`` fallback mode.
+
+    ``image`` is the derived exec image (kernel-ready operands) kept in sync
+    by ``install_program``/``evict_program`` — the *source tables* here are
+    the control plane's write interface, the image is what classify reads.
     """
 
     # tree pipeline
@@ -115,17 +172,45 @@ class PackedProgram:
     svm_hvalid: jax.Array  # bool [V, H] — which hyperplanes each version defines
     svm_pred_table: jax.Array  # int32 [V, 2^H]
     svm_pred_enable: jax.Array  # bool [V]
+    # derived exec image — kernel-ready operands, rebuilt per slot write
+    image: ExecImage | None = None
 
     @property
     def n_versions(self) -> int:
         return self.pred_enable.shape[0]
 
 
+def build_exec_image(packed: PackedProgram, profile: PlaneProfile) -> ExecImage:
+    """Full (all-slot) source-tables -> exec-image compile.
+
+    ``install_program``/``evict_program`` use the per-slot incremental path
+    instead; this is the from-scratch build (``empty_program``, recovery of a
+    legacy ``image=None`` program, and the image-consistency tests).
+    """
+    f_pad = tiling.lane_pad(profile.max_features)
+    walk = tiling.prep_tree_walk(
+        packed.dt_cv, packed.dt_cm, packed.dt_fid, packed.dt_flo,
+        packed.dt_fhi, packed.dt_bit, packed.dt_valid, f_pad)
+    # Zero bias by design: _classify_impl adds svm_bias outside the kernel so
+    # distributed partial sums compose (see ExecImage docstring).
+    svm = tiling.prep_svm_lookup(packed.svm_lut,
+                                 jnp.zeros_like(packed.svm_bias))
+    forest = tiling.prep_forest_vote(packed.pred_valid, packed.vote_weights)
+    return ExecImage(walk=walk, svm=svm, forest=forest)
+
+
+def _set_image_slot(image_group, slot_group, vid: int):
+    """Write one version slot of an operand group (V=1 prep) into the full
+    image group — the incremental install/evict image update."""
+    return jax.tree.map(lambda full, s: full.at[vid].set(s[0]),
+                        image_group, slot_group)
+
+
 def empty_program(profile: PlaneProfile) -> PackedProgram:
     V = profile.max_versions
     L, T, E = profile.max_layers, profile.max_trees, profile.max_entries_per_layer
     P, H, F = profile.max_leaves, profile.max_hyperplanes, profile.max_features
-    return PackedProgram(
+    packed = PackedProgram(
         dt_cv=jnp.zeros((V, L, T, E), jnp.uint32),
         dt_cm=jnp.full((V, L, T, E), _SENTINEL, jnp.uint32),
         dt_fid=jnp.zeros((V, L, T, E), jnp.int32),
@@ -145,6 +230,7 @@ def empty_program(profile: PlaneProfile) -> PackedProgram:
         svm_pred_table=jnp.zeros((V, 2**H), jnp.int32),
         svm_pred_enable=jnp.zeros((V,), bool),
     )
+    return dataclasses.replace(packed, image=build_exec_image(packed, profile))
 
 
 def _check_vid(vid: int, profile: PlaneProfile) -> int:
@@ -227,7 +313,7 @@ def install_program(
                 w[: program.n_trees] = program.voting.weights
             else:
                 w[0] = 1.0
-        return dataclasses.replace(
+        new = dataclasses.replace(
             packed,
             dt_cv=packed.dt_cv.at[vid].set(jnp.asarray(cv)),
             dt_cm=packed.dt_cm.at[vid].set(jnp.asarray(cm)),
@@ -242,6 +328,22 @@ def install_program(
             pred_enable=packed.pred_enable.at[vid].set(own_predict),
             vote_weights=packed.vote_weights.at[vid].set(jnp.asarray(w)),
         )
+        if packed.image is None:  # legacy program: recover with a full build
+            return dataclasses.replace(
+                new, image=build_exec_image(new, profile))
+        # Install-time compile of the written slot only: prep the new entries
+        # as a V=1 image slice and splice it into the resident image.
+        f_pad = tiling.lane_pad(profile.max_features)
+        walk_slot = tiling.prep_tree_walk(
+            cv[None], cm[None], fid[None], flo[None], fhi[None], bit[None],
+            valid[None], f_pad)
+        forest_slot = tiling.prep_forest_vote(pv[None], w[None])
+        image = dataclasses.replace(
+            packed.image,
+            walk=_set_image_slot(packed.image.walk, walk_slot, vid),
+            forest=_set_image_slot(packed.image.forest, forest_slot, vid),
+        )
+        return dataclasses.replace(new, image=image)
 
     if program.kind == "svm":
         H, F, Lev = profile.max_hyperplanes, profile.max_features, profile.levels
@@ -270,7 +372,7 @@ def install_program(
             tbl[: sp.table.shape[0]] = sp.table
         hvalid = np.zeros((H,), bool)
         hvalid[: program.n_hyperplanes] = True
-        return dataclasses.replace(
+        new = dataclasses.replace(
             packed,
             svm_lut=packed.svm_lut.at[vid].set(jnp.asarray(lut)),
             svm_bias=packed.svm_bias.at[vid].set(jnp.asarray(bias)),
@@ -278,8 +380,25 @@ def install_program(
             svm_pred_table=packed.svm_pred_table.at[vid].set(jnp.asarray(tbl)),
             svm_pred_enable=packed.svm_pred_enable.at[vid].set(own_pred),
         )
+        if packed.image is None:  # legacy program: recover with a full build
+            return dataclasses.replace(
+                new, image=build_exec_image(new, profile))
+        svm_slot = tiling.prep_svm_lookup(
+            lut[None], np.zeros((1, H), np.int32))  # zero bias by design
+        image = dataclasses.replace(
+            packed.image, svm=_set_image_slot(packed.image.svm, svm_slot, vid))
+        return dataclasses.replace(new, image=image)
 
     raise ValueError(f"unknown program kind {program.kind}")
+
+
+@functools.lru_cache(maxsize=8)
+def _blank_slot_program(profile: PlaneProfile) -> PackedProgram:
+    """One-slot blank (V=1) program *and* its image, memoized per profile: the
+    empty fills live only in empty_program, and eviction splices these
+    constant slices instead of re-running the (image-sized) blank build per
+    call."""
+    return empty_program(dataclasses.replace(profile, max_versions=1))
 
 
 def evict_program(
@@ -297,9 +416,7 @@ def evict_program(
     vid = _check_vid(vid, profile)
     if kind not in ("tree", "svm", "all"):
         raise ValueError(f"unknown evict kind {kind!r}")
-    # One-slot blank (V=1) so the empty fills live only in empty_program,
-    # without materializing a full V-slot zoo per eviction.
-    blank = empty_program(dataclasses.replace(profile, max_versions=1))
+    blank = _blank_slot_program(profile)
     upd = {}
     tree_fields = ("dt_cv", "dt_cm", "dt_fid", "dt_flo", "dt_fhi", "dt_bit",
                    "dt_valid", "pred_codes", "pred_labels", "pred_valid",
@@ -311,14 +428,26 @@ def evict_program(
               else tree_fields + svm_fields)
     for f in fields:
         upd[f] = getattr(packed, f).at[vid].set(getattr(blank, f)[0])
-    return dataclasses.replace(packed, **upd)
+    new = dataclasses.replace(packed, **upd)
+    if packed.image is None:  # legacy program: recover with a full build
+        return dataclasses.replace(new, image=build_exec_image(new, profile))
+    # Evicted slots get the blank slot's image slice (all-invalid operands).
+    img = {}
+    if kind in ("tree", "all"):
+        img["walk"] = _set_image_slot(packed.image.walk, blank.image.walk, vid)
+        img["forest"] = _set_image_slot(packed.image.forest,
+                                        blank.image.forest, vid)
+    if kind in ("svm", "all"):
+        img["svm"] = _set_image_slot(packed.image.svm, blank.image.svm, vid)
+    return dataclasses.replace(
+        new, image=dataclasses.replace(packed.image, **img))
 
 
 # --------------------------------------------------------------------------
 # The jitted classification step
 # --------------------------------------------------------------------------
 def _classify_impl(packed: PackedProgram, pb: PacketBatch, *, n_classes: int,
-                   mode: str | None) -> PacketBatch:
+                   mode: str | None, use_image: bool = True) -> PacketBatch:
     feats = pb.features
     V = packed.n_versions
     # Classify-boundary VID validation: out-of-range packets are processed
@@ -326,22 +455,30 @@ def _classify_impl(packed: PackedProgram, pb: PacketBatch, *, n_classes: int,
     vid_ok = (pb.vid >= 0) & (pb.vid < V)
     vid = jnp.where(vid_ok, pb.vid, 0)
     kmode = ops.base_mode(mode)
+    # Bind the install-time exec image: kernel launches read precomputed
+    # operands, zero per-call prep.  use_image=False forces the per-call prep
+    # path (the pre-image behavior, kept for the install-vs-classify split
+    # benchmark); the ref oracle and layerwise fallback always rebuild from
+    # source tables, so unused operands drop out of the trace either way.
+    img = packed.image if use_image else None
 
     # ---- tree pipeline: fused single-launch walk over all dt_layer tables
     # (mode="layerwise[-*]" selects the pre-fusion scan of per-layer kernels)
     codes = ops.tree_walk_v(
         pb.codes, feats, vid, packed.dt_cv, packed.dt_cm, packed.dt_fid,
         packed.dt_flo, packed.dt_fhi, packed.dt_bit, packed.dt_valid,
-        packed.layer_shift, mode=mode)
+        packed.layer_shift, mode=mode, prep=img.walk if img else None)
 
     tree_label, _per_tree = ops.forest_predict_vote_v(
         codes, vid, packed.pred_codes, packed.pred_labels, packed.pred_valid,
-        packed.vote_weights, n_classes, mode=kmode)
+        packed.vote_weights, n_classes, mode=kmode,
+        prep=img.forest if img else None)
     tree_result = jnp.where(packed.pred_enable[vid], tree_label, -1)
 
     # ---- svm pipeline: LUT partials + native adds ----
     partial = ops.svm_lookup_v(feats, vid, packed.svm_lut,
-                               jnp.zeros_like(packed.svm_bias), mode=kmode)
+                               jnp.zeros_like(packed.svm_bias), mode=kmode,
+                               prep=img.svm if img else None)
     acc = pb.svm_acc + partial
     sums = acc + packed.svm_bias[vid]
     signs = ((sums >= 0) & packed.svm_hvalid[vid]).astype(jnp.int32)
@@ -369,16 +506,24 @@ class SwitchEngine:
     SVMs, resident simultaneously, dispatched per packet by (MID, VID).
     """
 
-    def __init__(self, profile: PlaneProfile, *, mode: str | None = None) -> None:
+    def __init__(self, profile: PlaneProfile, *, mode: str | None = None,
+                 use_image: bool = True) -> None:
         """``mode`` picks the kernel path: ``None`` auto-selects (pallas on
         TPU, ref elsewhere); ``"ref"`` / ``"interpret"`` / ``"pallas"`` force
         one; a ``"layerwise[-<kernel mode>]"`` prefix swaps the fused tree
-        walk for the per-layer kernel scan (L launches instead of 1)."""
+        walk for the per-layer kernel scan (L launches instead of 1).
+
+        ``use_image=False`` disables exec-image binding, so every classify
+        reruns the operand prep the image precomputes — the pre-image
+        behavior, kept so ``benchmarks/zoo_swap.py`` can report the
+        install-vs-classify cost split."""
         self.profile = profile
         self.mode = mode
+        self.use_image = use_image
         self._fn = jax.jit(
             functools.partial(
-                _classify_impl, n_classes=profile.max_classes, mode=mode
+                _classify_impl, n_classes=profile.max_classes, mode=mode,
+                use_image=use_image,
             )
         )
 

@@ -28,6 +28,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.tiling import ForestOperands, prep_forest_vote
+
 __all__ = ["forest_predict_vote_pallas", "forest_predict_vote_pallas_v"]
 
 
@@ -73,11 +75,17 @@ def forest_predict_vote_pallas_v(
     weights: jax.Array,      # float32 [V, T]
     n_classes: int,
     *,
+    prep: ForestOperands | None = None,
     block_b: int = 256,
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
     B, T = codes.shape
     V, _, P = pred_codes.shape
+    if prep is None:
+        # Per-call fallback: same dtype/layout pass the plane runs once per
+        # install and binds via ``prep=`` (tiling.prep_forest_vote).
+        prep = prep_forest_vote(pred_valid, weights)
+    pv_i32, w_r = prep
     pad_b = (-B) % block_b
     codes_p = jnp.pad(codes, ((0, pad_b), (0, 0)))
     vid_p = jnp.pad(vid.astype(jnp.int32).reshape(-1, 1), ((0, pad_b), (0, 0)),
@@ -104,8 +112,7 @@ def forest_predict_vote_pallas_v(
             jax.ShapeDtypeStruct((B_pad, T), jnp.int32),
         ],
         interpret=interpret,
-    )(codes_p, vid_p, pred_codes, pred_labels, pred_valid.astype(jnp.int32),
-      weights.reshape(V, 1, T).astype(jnp.float32))
+    )(codes_p, vid_p, pred_codes, pred_labels, pv_i32, w_r)
     return label[:B, 0], per_tree[:B]
 
 

@@ -23,7 +23,7 @@ from repro.kernels.tree_walk import tree_walk_pallas_v
 __all__ = [
     "tcam_match", "svm_lookup", "forest_predict_vote", "decode_attn",
     "tcam_match_v", "svm_lookup_v", "forest_predict_vote_v", "tree_walk_v",
-    "base_mode", "count_pallas_launches",
+    "base_mode", "count_pallas_launches", "count_operand_prep_ops",
 ]
 
 
@@ -46,6 +46,37 @@ def base_mode(mode: str | None) -> str | None:
     return mode
 
 
+def _sum_jaxpr_eqns(fn, args, kwargs, visit) -> int:
+    """Trace ``fn`` and sum counts over its equations, walking nested
+    sub-jaxprs (pjit, scan bodies, ...).  ``visit(eqn, mult)`` returns
+    ``(count, descend)``; ``mult`` is the iteration multiplier accumulated
+    from enclosing ``scan``s.  Both jaxpr counters below share this traversal
+    so a fix to it (e.g. a new higher-order primitive) cannot silently reach
+    only one of them."""
+    closed = jax.make_jaxpr(fn)(*args, **kwargs)
+
+    def walk(jaxpr, mult) -> int:
+        n = 0
+        for eqn in jaxpr.eqns:
+            count, descend = visit(eqn, mult)
+            n += count
+            if not descend:
+                continue
+            sub_mult = mult * (eqn.params.get("length", 1)
+                               if eqn.primitive.name == "scan" else 1)
+            for p in eqn.params.values():
+                for sub in jax.tree_util.tree_leaves(
+                    p, is_leaf=lambda x: hasattr(x, "jaxpr") or hasattr(x, "eqns")
+                ):
+                    if hasattr(sub, "jaxpr"):
+                        sub = sub.jaxpr
+                    if hasattr(sub, "eqns"):
+                        n += walk(sub, sub_mult)
+        return n
+
+    return walk(closed.jaxpr, 1)
+
+
 def count_pallas_launches(fn, *args, **kwargs) -> int:
     """Number of ``pallas_call`` launches one invocation of ``fn`` issues.
 
@@ -54,26 +85,32 @@ def count_pallas_launches(fn, *args, **kwargs) -> int:
     per-layer overhead the fused tree walk removes).  Benchmarks and the
     single-launch acceptance test both use this.
     """
-    closed = jax.make_jaxpr(fn)(*args, **kwargs)
+    def visit(eqn, mult):
+        if eqn.primitive.name == "pallas_call":
+            return mult, False   # nothing beneath launches separately
+        return 0, True
 
-    def walk(jaxpr) -> int:
-        n = 0
-        for eqn in jaxpr.eqns:
-            if eqn.primitive.name == "pallas_call":
-                n += 1
-                continue
-            mult = eqn.params.get("length", 1) if eqn.primitive.name == "scan" else 1
-            for p in eqn.params.values():
-                for sub in jax.tree_util.tree_leaves(
-                    p, is_leaf=lambda x: hasattr(x, "jaxpr") or hasattr(x, "eqns")
-                ):
-                    if hasattr(sub, "jaxpr"):
-                        sub = sub.jaxpr
-                    if hasattr(sub, "eqns"):
-                        n += mult * walk(sub)
-        return n
+    return _sum_jaxpr_eqns(fn, args, kwargs, visit)
 
-    return walk(closed.jaxpr)
+
+def count_operand_prep_ops(fn, *args, **kwargs) -> int:
+    """Number of table-shaped (ndim >= 3) intermediate ops one invocation of
+    ``fn`` computes *outside* of ``pallas_call`` kernel bodies.
+
+    Per-packet arrays are at most 2-D (``[B, T]`` codes, ``[B, F]`` features),
+    so any >= 3-D equation in the traced jaxpr is operand prep — one-hot
+    ``fsel`` construction, no-match entry padding, LUT re-layout.  With the
+    install-time ``ExecImage`` bound, classify must trace to **zero** such
+    equations: every table operand flows from the jaxpr inputs straight into
+    the kernel launches.  The exec-image acceptance test pins this.
+    """
+    def visit(eqn, mult):
+        if eqn.primitive.name == "pallas_call":
+            return 0, False   # in-kernel math is not per-call HBM-side prep
+        return int(any(getattr(v.aval, "ndim", 0) >= 3
+                       for v in eqn.outvars)), True
+
+    return _sum_jaxpr_eqns(fn, args, kwargs, visit)
 
 
 def tcam_match(codes, features, code_value, code_mask, fid, f_lo, f_hi,
@@ -106,21 +143,31 @@ def forest_predict_vote(codes, pred_codes, pred_labels, pred_valid, weights,
 
 
 def tcam_match_v(codes, features, vid, code_value, code_mask, fid, f_lo, f_hi,
-                 set_bit, valid, shift, *, mode: str | None = None):
-    """Version-indexed tcam_match: tables are [V, T, E], packet b uses vid[b]."""
+                 set_bit, valid, shift, *, mode: str | None = None, prep=None):
+    """Version-indexed tcam_match: tables are [V, T, E], packet b uses vid[b].
+
+    ``prep`` binds install-time operands (``tiling.prep_tcam_match``); the
+    ref oracle rebuilds from the source tables and ignores it.
+    """
     m = _resolve(mode)
     if m == "ref":
         return ref.tcam_match_v(codes, features, vid, code_value, code_mask,
                                 fid, f_lo, f_hi, set_bit, valid, shift)
     return tcam_match_pallas_v(codes, features, vid, code_value, code_mask,
                                fid, f_lo, f_hi, set_bit, valid, shift,
-                               interpret=(m == "interpret"))
+                               prep=prep, interpret=(m == "interpret"))
 
 
 def tree_walk_v(codes, features, vid, code_value, code_mask, fid, f_lo, f_hi,
-                set_bit, valid, layer_shift, *, mode: str | None = None):
+                set_bit, valid, layer_shift, *, mode: str | None = None,
+                prep=None):
     """Fused multi-layer tree walk: tables are [V, L, T, E], packet b walks
     all L layers of version ``vid[b]`` in one kernel launch.
+
+    ``prep`` binds install-time operands (``tiling.prep_tree_walk``, the
+    plane's ``ExecImage``) so the launch does zero per-call operand prep.
+    The ref oracle and the layerwise fallback work from the source tables
+    and ignore ``prep``.
 
     ``mode="layerwise[-<kernel mode>]"`` selects the pre-fusion fallback — a
     ``lax.scan`` of ``tcam_match_v`` over the layer axis (L launches) — for
@@ -147,27 +194,38 @@ def tree_walk_v(codes, features, vid, code_value, code_mask, fid, f_lo, f_hi,
                                fid, f_lo, f_hi, set_bit, valid, layer_shift)
     return tree_walk_pallas_v(codes, features, vid, code_value, code_mask,
                               fid, f_lo, f_hi, set_bit, valid, layer_shift,
-                              interpret=(m == "interpret"))
+                              prep=prep, interpret=(m == "interpret"))
 
 
-def svm_lookup_v(features, vid, lut, bias, *, mode: str | None = None):
-    """Version-indexed svm_lookup: lut is [V, H, F, L], packet b uses vid[b]."""
+def svm_lookup_v(features, vid, lut, bias, *, mode: str | None = None,
+                 prep=None):
+    """Version-indexed svm_lookup: lut is [V, H, F, L], packet b uses vid[b].
+
+    ``prep`` binds the install-time chunked LUT layout
+    (``tiling.prep_svm_lookup``); the ref oracle ignores it.
+    """
     m = _resolve(mode)
     if m == "ref":
         return ref.svm_lookup_v(features, vid, lut, bias)
-    return svm_lookup_pallas_v(features, vid, lut, bias,
+    return svm_lookup_pallas_v(features, vid, lut, bias, prep=prep,
                                interpret=(m == "interpret"))
 
 
 def forest_predict_vote_v(codes, vid, pred_codes, pred_labels, pred_valid,
-                          weights, n_classes, *, mode: str | None = None):
-    """Version-indexed dt_predict + voting: tables are [V, T, P]."""
+                          weights, n_classes, *, mode: str | None = None,
+                          prep=None):
+    """Version-indexed dt_predict + voting: tables are [V, T, P].
+
+    ``prep`` binds the install-time validity/weight layouts
+    (``tiling.prep_forest_vote``); the ref oracle ignores it.
+    """
     m = _resolve(mode)
     if m == "ref":
         return ref.forest_predict_vote_v(codes, vid, pred_codes, pred_labels,
                                          pred_valid, weights, n_classes)
     return forest_predict_vote_pallas_v(codes, vid, pred_codes, pred_labels,
                                         pred_valid, weights, n_classes,
+                                        prep=prep,
                                         interpret=(m == "interpret"))
 
 

@@ -21,6 +21,12 @@ accumulator ends up holding exactly one version's sum per packet.
 
 Grid: (batch blocks, versions, feature chunks) — versions and chunks are the
 sequential reduction axes; the output block is revisited and accumulated.
+
+The chunked f32 LUT layout ``[V, n_chunks, chunk_f*levels, H_pad]`` only
+changes at install/swap; the plane precomputes it once per slot write
+(``tiling.prep_svm_lookup``, held in the ``ExecImage``) and binds it via
+``prep=``.  Without ``prep=`` the wrapper reruns the same layout pass per
+call.
 """
 from __future__ import annotations
 
@@ -29,6 +35,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.tiling import SVM_SUBLANES, SvmOperands, prep_svm_lookup
 
 __all__ = ["svm_lookup_pallas", "svm_lookup_pallas_v"]
 
@@ -66,6 +74,7 @@ def svm_lookup_pallas_v(
     lut: jax.Array,       # int32 [V, H, F, L]
     bias: jax.Array,      # int32 [V, H]
     *,
+    prep: SvmOperands | None = None,
     block_b: int = 128,
     chunk_f: int = 8,
     interpret: bool = False,
@@ -73,25 +82,28 @@ def svm_lookup_pallas_v(
     B, F = features.shape
     V, H, _, L = lut.shape
 
+    if prep is None:
+        # Per-call fallback: same prep the plane runs once per install and
+        # binds via ``prep=`` (tiling.prep_svm_lookup).
+        prep = prep_svm_lookup(lut, bias, chunk_f=chunk_f)
+    lut_r, bias_p = prep
+    # Expected layout derived from the *source* shapes, so a prep built for a
+    # different feature/hyperplane width cannot slip through.
+    n_chunks = -(-F // chunk_f)
+    H_pad = -(-H // SVM_SUBLANES) * SVM_SUBLANES
+    if lut_r.shape != (V, n_chunks, chunk_f * L, H_pad) or \
+            bias_p.shape != (V, H_pad):
+        raise ValueError(
+            f"prepped lut/bias shapes {lut_r.shape}/{bias_p.shape} do not "
+            f"match this launch (expected "
+            f"{(V, n_chunks, chunk_f * L, H_pad)}/{(V, H_pad)})")
     pad_b = (-B) % block_b
-    pad_f = (-F) % chunk_f
-    pad_h = (-H) % 8
+    pad_f = n_chunks * chunk_f - F
+    # padded feature columns match no level => contribute 0
     feats = jnp.pad(features, ((0, pad_b), (0, pad_f)), constant_values=-1)
     vid_p = jnp.pad(vid.astype(jnp.int32).reshape(-1, 1), ((0, pad_b), (0, 0)),
                     constant_values=-1)
-    # padded feature columns match no level => contribute 0
-    lut_p = jnp.pad(lut, ((0, 0), (0, pad_h), (0, pad_f), (0, 0)))
-    bias_p = jnp.pad(bias, ((0, 0), (0, pad_h)))
     B_pad, F_pad = feats.shape
-    H_pad = lut_p.shape[1]
-    n_chunks = F_pad // chunk_f
-    # [V, n_chunks, Fc*L, H] so each grid step streams one chunk of one
-    # version's LUT.
-    lut_r = (
-        lut_p.transpose(0, 2, 3, 1)
-        .reshape(V, n_chunks, chunk_f * L, H_pad)
-        .astype(jnp.float32)
-    )
 
     out = pl.pallas_call(
         functools.partial(_kernel, levels=L),

@@ -27,6 +27,11 @@ and entry count E_pad are multiples of 128).
 VMEM budget per step (block_b=256, F_pad=128, E_pad=128):
   feats 256*128*4 = 128 KiB, f_sel 128*128*4 = 64 KiB, fv 256*128*4 = 128 KiB,
   entry arrays 6*128*4 ≈ 3 KiB  → well under 16 MiB, independent of V.
+
+Operand prep (one-hot ``f_sel``, no-match-padded entry blocks) only changes
+at install/swap; callers that launch this kernel repeatedly should run
+``tiling.prep_tcam_match`` once and bind the result via ``prep=`` — without
+it, the wrapper reruns the same prep every call.
 """
 from __future__ import annotations
 
@@ -36,7 +41,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.tiling import feature_select_matrix, pad_entry_tables, pad_to
+from repro.kernels.tiling import TcamOperands, pad_to, prep_tcam_match
 
 __all__ = ["tcam_match_pallas", "tcam_match_pallas_v"]
 
@@ -86,18 +91,26 @@ def tcam_match_pallas_v(
     valid: jax.Array,       # bool [V, T, E]
     shift: jax.Array,       # int32 scalar
     *,
+    prep: TcamOperands | None = None,
     block_b: int = 256,
     interpret: bool = False,
 ) -> jax.Array:
     B, T = codes.shape
-    V, _, E = code_value.shape
+    V, _, _ = code_value.shape
 
     feats = pad_to(features.astype(jnp.float32), 1, 128)
     F_pad = feats.shape[1]
-    fsel = feature_select_matrix(fid, valid, F_pad)
-    cv, cm, flo, fhi, bit, vld = pad_entry_tables(
-        2, code_value, code_mask, f_lo, f_hi, set_bit, valid)
+    if prep is None:
+        # Per-call fallback: same prep a caller can run once at install time
+        # and bind via ``prep=`` (tiling.prep_tcam_match).
+        prep = prep_tcam_match(code_value, code_mask, fid, f_lo, f_hi,
+                               set_bit, valid, F_pad)
+    fsel, cv, cm, flo, fhi, bit, vld = prep
     E_pad = cv.shape[2]
+    if fsel.shape != (V, T, E_pad, F_pad):
+        raise ValueError(
+            f"prepped fsel shape {fsel.shape} does not match this launch "
+            f"(expected {(V, T, E_pad, F_pad)})")
 
     codes_p = pad_to(codes, 0, block_b)
     feats_p = pad_to(feats, 0, block_b)

@@ -1,4 +1,4 @@
-"""Shared MXU/VPU tiling helpers for the entry-table kernels.
+"""Shared MXU/VPU tiling helpers + the install-time operand-prep entry points.
 
 ``tcam_match`` (per-layer) and ``tree_walk`` (fused multi-layer) pad their
 entry tables with one no-match convention; it lives here once so a change to
@@ -9,16 +9,31 @@ the padding contract cannot silently diverge between the kernels:
 
 so a padded entry can never match any packet.  The one-hot feature-select
 matrix likewise zeroes invalid entries' rows (they select no feature).
+
+The ``prep_*`` functions are the **single install-time entry point** for
+turning source tables into the kernel-ready operands a ``pallas_call`` binds
+directly (the plane's ``ExecImage``, see ``docs/ARCHITECTURE.md``).  Each
+kernel wrapper accepts the matching ``*Operands`` tuple via ``prep=`` and,
+when it is absent, falls back to calling the same ``prep_*`` function per
+call — so the prepped and unprepped paths cannot diverge semantically.
 """
 from __future__ import annotations
+
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["pad_to", "pad_entry_tables", "feature_select_matrix"]
+__all__ = [
+    "LANES", "pad_to", "lane_pad", "pad_entry_tables", "feature_select_matrix",
+    "TreeWalkOperands", "TcamOperands", "SvmOperands", "ForestOperands",
+    "prep_tree_walk", "prep_tcam_match", "prep_svm_lookup", "prep_forest_vote",
+]
 
 LANES = 128
+SVM_CHUNK_F = 8     # feature chunk per svm_lookup grid step
+SVM_SUBLANES = 8    # hyperplane-axis padding multiple
 
 
 def pad_to(x: jax.Array, axis: int, mult: int, fill=0) -> jax.Array:
@@ -29,6 +44,11 @@ def pad_to(x: jax.Array, axis: int, mult: int, fill=0) -> jax.Array:
     widths = [(0, 0)] * x.ndim
     widths[axis] = (0, pad)
     return jnp.pad(x, widths, constant_values=fill)
+
+
+def lane_pad(n: int) -> int:
+    """Smallest multiple of the 128-lane dimension >= n."""
+    return ((n + LANES - 1) // LANES) * LANES
 
 
 def pad_entry_tables(axis: int, code_value, code_mask, f_lo, f_hi, set_bit,
@@ -52,3 +72,101 @@ def feature_select_matrix(fid: jax.Array, valid: jax.Array,
     nothing (all-zero row)."""
     fsel = jax.nn.one_hot(fid, f_pad, dtype=jnp.float32) * valid[..., None]
     return pad_to(fsel, fid.ndim - 1, LANES)
+
+
+# --------------------------------------------------------------------------
+# Install-time operand prep (the ExecImage building blocks)
+# --------------------------------------------------------------------------
+class TreeWalkOperands(NamedTuple):
+    """Kernel-ready operands for the fused ``tree_walk_pallas_v`` launch."""
+
+    fsel: jax.Array    # f32  [V, T, L*E_pad, F_pad] flattened one-hot selector
+    cv: jax.Array      # u32  [V, L, T, E_pad]
+    cm: jax.Array      # u32  [V, L, T, E_pad]  (pad: mask all vs value 0)
+    flo: jax.Array     # f32  [V, L, T, E_pad]  (pad: 1.0 — empty range)
+    fhi: jax.Array     # f32  [V, L, T, E_pad]  (pad: 0.0)
+    bit: jax.Array     # u32  [V, L, T, E_pad]
+    valid: jax.Array   # i32  [V, L, T, E_pad]
+
+
+class TcamOperands(NamedTuple):
+    """Kernel-ready operands for one per-layer ``tcam_match_pallas_v`` launch."""
+
+    fsel: jax.Array    # f32  [V, T, E_pad, F_pad]
+    cv: jax.Array      # u32  [V, T, E_pad]
+    cm: jax.Array      # u32  [V, T, E_pad]
+    flo: jax.Array     # f32  [V, T, E_pad]
+    fhi: jax.Array     # f32  [V, T, E_pad]
+    bit: jax.Array     # u32  [V, T, E_pad]
+    valid: jax.Array   # i32  [V, T, E_pad]
+
+
+class SvmOperands(NamedTuple):
+    """Kernel-ready operands for ``svm_lookup_pallas_v``."""
+
+    lut: jax.Array     # f32  [V, n_chunks, chunk_f*levels, H_pad]
+    bias: jax.Array    # i32  [V, H_pad]
+
+
+class ForestOperands(NamedTuple):
+    """Kernel-ready operands for ``forest_predict_vote_pallas_v`` (the
+    ``pred_codes``/``pred_labels`` tables bind as-is and need no prep)."""
+
+    valid: jax.Array    # i32 [V, T, P]
+    weights: jax.Array  # f32 [V, 1, T]
+
+
+def prep_tree_walk(code_value, code_mask, fid, f_lo, f_hi, set_bit, valid,
+                   f_pad: int) -> TreeWalkOperands:
+    """Source ``[V, L, T, E]`` dt_layer tables -> fused-walk operands.
+
+    ``f_pad`` is the lane-padded feature width the classify path will present
+    (``lane_pad(max_features)``) — the fsel matmul operand must match it.
+    """
+    V, L, T, E = fid.shape
+    fsel = feature_select_matrix(fid, valid, f_pad)   # [V, L, T, E_pad, F_pad]
+    cv, cm, flo, fhi, bit, vld = pad_entry_tables(
+        3, code_value, code_mask, f_lo, f_hi, set_bit, valid)
+    e_pad = cv.shape[3]
+    # [V, L, T, E_pad, F_pad] -> [V, T, L*E_pad, F_pad]: one matmul operand
+    # covering every layer's entries.
+    fsel = fsel.transpose(0, 2, 1, 3, 4).reshape(V, T, L * e_pad, f_pad)
+    return TreeWalkOperands(fsel, cv, cm, flo, fhi, bit, vld)
+
+
+def prep_tcam_match(code_value, code_mask, fid, f_lo, f_hi, set_bit, valid,
+                    f_pad: int) -> TcamOperands:
+    """Source ``[V, T, E]`` single-layer tables -> per-layer kernel operands."""
+    fsel = feature_select_matrix(fid, valid, f_pad)   # [V, T, E_pad, F_pad]
+    padded = pad_entry_tables(2, code_value, code_mask, f_lo, f_hi, set_bit,
+                              valid)
+    return TcamOperands(fsel, *padded)
+
+
+def prep_svm_lookup(lut, bias, *, chunk_f: int = SVM_CHUNK_F) -> SvmOperands:
+    """Source ``[V, H, F, levels]`` product LUTs -> chunked f32 MXU operand.
+
+    Feature axis padded to ``chunk_f`` (padded columns match feature value
+    -1, never a real level, so they contribute 0), hyperplane axis padded to
+    the sublane multiple, then laid out ``[V, n_chunks, chunk_f*levels,
+    H_pad]`` so each grid step streams one (version, chunk) slice.
+    """
+    V, H, F, levels = lut.shape
+    lut_p = pad_to(pad_to(lut, 1, SVM_SUBLANES), 2, chunk_f)
+    bias_p = pad_to(bias, 1, SVM_SUBLANES)
+    h_pad = lut_p.shape[1]
+    n_chunks = lut_p.shape[2] // chunk_f
+    lut_r = (
+        lut_p.transpose(0, 2, 3, 1)
+        .reshape(V, n_chunks, chunk_f * levels, h_pad)
+        .astype(jnp.float32)
+    )
+    return SvmOperands(lut_r, bias_p)
+
+
+def prep_forest_vote(pred_valid, weights) -> ForestOperands:
+    """Source ``[V, T, P]`` validity + ``[V, T]`` vote weights -> Pallas block
+    dtypes/layouts (int32 validity, ``[V, 1, T]`` f32 weights)."""
+    V, T = weights.shape
+    return ForestOperands(pred_valid.astype(jnp.int32),
+                          weights.reshape(V, 1, T).astype(jnp.float32))

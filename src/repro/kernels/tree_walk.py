@@ -24,6 +24,13 @@ collapses the scan into **one** ``pallas_call`` that walks the layer axis
      matches (a no-hit walk leaves codes unchanged, preserving the TCAM
      fall-through contract per layer).
 
+Operand prep is **install-time** work: the one-hot ``fsel`` matrix and the
+no-match-padded entry blocks only change when a model is (un)installed, so
+the plane precomputes them once per slot write (``tiling.prep_tree_walk``,
+held in the engine's ``ExecImage``) and binds them via ``prep=``.  Without
+``prep=`` this wrapper runs the same prep per call — the standalone/test
+path — streaming O(V·L·E·F) extra HBM bytes per classify.
+
 Grid: (batch blocks, trees, versions) — exactly **one** launch per classify,
 vs ``L`` for the layerwise scan.  Per-step VMEM (block_b=256, L=32,
 E_pad=128, F_pad=128): feats 128 KiB + fsel 2 MiB + fv_all 4 MiB + entry
@@ -38,7 +45,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.tiling import feature_select_matrix, pad_entry_tables, pad_to
+from repro.kernels.tiling import TreeWalkOperands, prep_tree_walk, pad_to
 
 __all__ = ["tree_walk_pallas_v"]
 
@@ -97,24 +104,27 @@ def tree_walk_pallas_v(
     valid: jax.Array,       # bool [V, L, T, E]
     layer_shift: jax.Array,  # int32 [L] status-code bit per layer
     *,
+    prep: TreeWalkOperands | None = None,
     block_b: int = 256,
     interpret: bool = False,
 ) -> jax.Array:
     B, T = codes.shape
-    V, L, _, E = code_value.shape
+    V, L, _, _ = code_value.shape
 
     feats = pad_to(features.astype(jnp.float32), 1, 128)
     F_pad = feats.shape[1]
-    # NOTE: fsel and the padded tables are rebuilt from fid/valid on every
-    # call; they only change at install/swap, so precomputing them into
-    # PackedProgram would shave per-classify prep on TPU (ROADMAP open item).
-    fsel = feature_select_matrix(fid, valid, F_pad)
-    cv, cm, flo, fhi, bit, vld = pad_entry_tables(
-        3, code_value, code_mask, f_lo, f_hi, set_bit, valid)
+    if prep is None:
+        # Per-call fallback (standalone/test path): the same prep the plane
+        # runs once per install and binds via ``prep=`` (tiling.prep_tree_walk).
+        prep = prep_tree_walk(code_value, code_mask, fid, f_lo, f_hi, set_bit,
+                              valid, F_pad)
+    fsel, cv, cm, flo, fhi, bit, vld = prep
     E_pad = cv.shape[3]
-    # [V, L, T, E_pad, F_pad] -> [V, T, L*E_pad, F_pad]: one matmul operand
-    # covering every layer's entries.
-    fsel = fsel.transpose(0, 2, 1, 3, 4).reshape(V, T, L * E_pad, F_pad)
+    if fsel.shape != (V, T, L * E_pad, F_pad):
+        raise ValueError(
+            f"prepped fsel shape {fsel.shape} does not match this launch "
+            f"(expected {(V, T, L * E_pad, F_pad)}) — the exec image was "
+            "built for a different profile or feature width")
 
     # Keep the per-step fv_all product inside VMEM: the [block_b, L*E_pad]
     # tile is the largest resident array, so shrink the batch tile as the

@@ -49,9 +49,12 @@ class ZooServer:
     The data plane compiles once at construction (per batch shape, lazily);
     every subsequent ``install`` / ``evict`` / traffic shift is an entry-array
     update — the paper's §6 runtime reprogrammability, extended along the
-    Appendix A VID axis.  ``classify_split`` implements A/B rollout: the
-    *request writer* shifts a traffic fraction to a new version by rewriting
-    ``vid`` in the requests; the plane is untouched.
+    Appendix A VID axis.  Each install/evict also recompiles the exec image
+    of *only the written slot* (``core/plane.py``), so serving classifies
+    against precomputed kernel operands while the control-plane cost stays
+    per-slot.  ``classify_split`` implements A/B rollout: the *request
+    writer* shifts a traffic fraction to a new version by rewriting ``vid``
+    in the requests; the plane — tables and image alike — is untouched.
     """
 
     def __init__(self, profile: PlaneProfile, *, mode: str | None = None) -> None:

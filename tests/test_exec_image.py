@@ -1,0 +1,156 @@
+"""Install-time program compilation (the exec image).
+
+Pins the contract from ``docs/ARCHITECTURE.md``: classify binds precomputed
+kernel operands with **zero** per-call operand prep (jaxpr-pinned, the analog
+of ``test_classify_issues_single_tree_walk_launch``), the incremental
+per-slot image updates in install/evict are bit-identical to a from-scratch
+``build_exec_image``, and install/evict/swap cycles never drift classify
+results away from a fresh engine holding the same programs — for
+V ∈ {1, 4, 8} and on both the ref and interpret kernel paths.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.mlmodels import DecisionTree, LinearSVM, RandomForest
+from repro.core.packets import PacketBatch
+from repro.core.plane import (
+    PlaneProfile,
+    SwitchEngine,
+    _classify_impl,
+    build_exec_image,
+)
+from repro.core.translator import MID_SVM, translate
+from repro.kernels import ops
+
+
+def _profile(V: int) -> PlaneProfile:
+    return PlaneProfile(max_features=36, max_trees=3, max_layers=6,
+                        max_entries_per_layer=64, max_leaves=64,
+                        max_classes=8, max_hyperplanes=8, max_versions=V)
+
+
+def _req(eng, X, *, mid=0, vid=0):
+    prof = eng.profile
+    return PacketBatch.make_request(
+        X, mid=mid, vid=vid, max_features=prof.max_features,
+        n_trees=prof.max_trees, n_hyperplanes=prof.max_hyperplanes,
+        max_versions=prof.max_versions)
+
+
+def _assert_trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ------------------------------------------------------------- jaxpr pinning
+def test_classify_binds_precomputed_operands_zero_prep_ops(satdap, plane_engine):
+    """Acceptance: with the exec image bound, the classify jaxpr contains no
+    table-shaped prep ops (one-hot fsel build, no-match padding, LUT
+    re-layout) — every table operand flows straight into a kernel launch.
+    ``use_image=False`` restores the per-call prep, which the same counter
+    must see (so a detector regression can't silently pass)."""
+    Xtr, ytr, Xte, _ = satdap
+    eng = plane_engine
+    dt = DecisionTree(max_depth=6, max_leaf_nodes=40).fit(Xtr, ytr)
+    prog = translate(dt)
+    packed = eng.install(eng.empty(), prog)
+    pb = _req(eng, Xte[:32], mid=prog.mid)
+    n_cls = eng.profile.max_classes
+    count = lambda **kw: ops.count_operand_prep_ops(
+        lambda pk, b: _classify_impl(pk, b, n_classes=n_cls,
+                                     mode="interpret", **kw),
+        packed, pb)
+    assert count() == 0
+    assert count(use_image=False) > 0
+    # and the fused-walk launch pin still holds with the image bound
+    assert ops.count_pallas_launches(
+        lambda pk, b: _classify_impl(pk, b, n_classes=n_cls, mode="interpret"),
+        packed, pb) == 3  # tree walk + forest vote + svm lookup
+
+
+# ----------------------------------------------- incremental == full rebuild
+def test_incremental_slot_updates_match_full_rebuild(satdap):
+    """install/evict touch only the written slot's image slice; after any
+    sequence, the resident image equals a from-scratch build_exec_image."""
+    Xtr, ytr, Xte, _ = satdap
+    prof = _profile(4)
+    eng = SwitchEngine(prof)
+    d0 = DecisionTree(max_depth=4, max_leaf_nodes=16).fit(Xtr, ytr)
+    d1 = DecisionTree(max_depth=6, max_leaf_nodes=40).fit(Xtr, ytr)
+    svm = LinearSVM(epochs=30).fit(Xtr, ytr)
+    packed = eng.empty()
+    for step in (lambda p: eng.install(p, translate(d0, vid=0)),
+                 lambda p: eng.install(p, translate(svm, vid=2)),
+                 lambda p: eng.install(p, translate(d1, vid=3)),
+                 lambda p: eng.evict(p, vid=0),
+                 lambda p: eng.install(p, translate(d1, vid=0)),
+                 lambda p: eng.evict(p, vid=2, kind="svm"),
+                 lambda p: eng.evict(p, vid=3, kind="tree")):
+        packed = step(packed)
+        _assert_trees_equal(packed.image, build_exec_image(packed, prof))
+
+
+def test_legacy_program_without_image_recovers_on_install(satdap):
+    """A PackedProgram with image=None (legacy pytree) gets a full image
+    rebuild on the next install/evict instead of crashing or staying stale."""
+    Xtr, ytr, Xte, _ = satdap
+    prof = _profile(2)
+    eng = SwitchEngine(prof)
+    dt = DecisionTree(max_depth=4, max_leaf_nodes=16).fit(Xtr, ytr)
+    legacy = dataclasses.replace(eng.empty(), image=None)
+    packed = eng.install(legacy, translate(dt, vid=1))
+    _assert_trees_equal(packed.image, build_exec_image(packed, prof))
+    legacy = dataclasses.replace(packed, image=None)
+    evicted = eng.evict(legacy, vid=1)
+    _assert_trees_equal(evicted.image, build_exec_image(evicted, prof))
+
+
+# ------------------------------------------- cycle stability across V and mode
+@pytest.mark.parametrize("V", [1, 4, 8])
+def test_cycles_stay_bit_identical_to_fresh_engine(satdap, V):
+    """Acceptance: three install/evict/swap cycles leave classify results
+    bit-identical to a fresh engine holding the same final programs, and
+    interpret-vs-ref parity holds throughout — for V ∈ {1, 4, 8}."""
+    Xtr, ytr, Xte, _ = satdap
+    X = Xte[:64]
+    prof = _profile(V)
+    d_a = DecisionTree(max_depth=4, max_leaf_nodes=16).fit(Xtr, ytr)
+    d_b = RandomForest(n_estimators=2, max_depth=4, max_leaf_nodes=16,
+                       random_state=0).fit(Xtr, ytr)
+    svm = LinearSVM(epochs=30).fit(Xtr, ytr)
+    final = {}   # vid -> program installed last
+    outs = {}
+    for mode in ("ref", "interpret"):
+        eng = SwitchEngine(prof, mode=mode)
+        packed = eng.empty()
+        for cycle in range(3):
+            vid = cycle % V
+            packed = eng.evict(packed, vid=vid)                     # evict
+            packed = eng.install(packed, translate(d_a, vid=vid))   # install
+            packed = eng.install(packed, translate(d_b, vid=vid))   # swap
+            packed = eng.install(packed, translate(svm, vid=vid))   # 2nd pipe
+            final[vid] = (translate(d_b, vid=vid), translate(svm, vid=vid))
+        rng = np.random.default_rng(5)
+        vids = rng.integers(0, V, X.shape[0])
+        resident = np.isin(vids, list(final))
+        mids = np.where(rng.random(X.shape[0]) < 0.4, MID_SVM,
+                        final[0][0].mid)
+        pb = _req(eng, X, mid=mids, vid=vids)
+        outs[mode] = np.asarray(eng.classify(packed, pb).rslt)
+
+        # fresh engine, same final programs, one install each — bit-identical
+        fresh = SwitchEngine(prof, mode=mode)
+        fresh_packed = fresh.empty()
+        for vid, (tree_prog, svm_prog) in final.items():
+            fresh_packed = fresh.install(fresh_packed, tree_prog)
+            fresh_packed = fresh.install(fresh_packed, svm_prog)
+        want = np.asarray(fresh.classify(fresh_packed, pb).rslt)
+        np.testing.assert_array_equal(outs[mode], want)
+        # evicted slots answer -1
+        assert (outs[mode][~resident] == -1).all()
+    np.testing.assert_array_equal(outs["ref"], outs["interpret"])

@@ -1,0 +1,81 @@
+#!/usr/bin/env python3
+"""Docs-consistency check: every ``path[:line]`` / ``path::symbol`` code
+reference in the given markdown files must resolve against the repo.
+
+Guards ``docs/ARCHITECTURE.md`` (the normative plane <-> kernel contract) and
+the READMEs against silent rot: a reference to a file that was moved, a line
+that no longer exists, or a test that was renamed fails CI.
+
+Rules, applied to every backtick-quoted token that looks like a file path:
+
+* the path must exist — resolved against the repo root, then against the
+  markdown file's own directory (so ``benchmarks/README.md`` can list its
+  sibling modules by bare name);
+* ``path:N`` — the file must have at least N lines;
+* ``path::name`` (pytest-style) — ``name`` must occur in the file's text.
+
+Usage:  python tools/check_doc_refs.py [file.md ...]
+        (default: docs/ARCHITECTURE.md README.md benchmarks/README.md)
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+DEFAULT_DOCS = ["docs/ARCHITECTURE.md", "README.md", "benchmarks/README.md"]
+
+# `token` in backticks that names a file: at least one dot-extension we track.
+EXTS = r"(?:py|md|ini|yml|yaml|json|txt|toml|cfg|sh)"
+REF = re.compile(
+    rf"`([\w./-]+\.{EXTS})"          # path.ext
+    rf"(?:::([\w\[\]., -]+))?"       # optional ::symbol (pytest node)
+    rf"(?::(\d+))?"                  # optional :line
+    rf"`"
+)
+
+
+def check_doc(doc: Path) -> list[str]:
+    errors = []
+    text = doc.read_text()
+    for m in REF.finditer(text):
+        path_s, symbol, line_s = m.group(1), m.group(2), m.group(3)
+        candidates = [REPO / path_s, doc.parent / path_s]
+        target = next((c for c in candidates if c.is_file()), None)
+        ref = m.group(0).strip("`")
+        if target is None:
+            errors.append(f"{doc}: `{ref}` — file not found "
+                          f"(tried repo root and {doc.parent})")
+            continue
+        if line_s is not None:
+            n_lines = len(target.read_text().splitlines())
+            if int(line_s) > n_lines:
+                errors.append(f"{doc}: `{ref}` — {path_s} has only "
+                              f"{n_lines} lines")
+        if symbol is not None:
+            if symbol.split("[")[0] not in target.read_text():
+                errors.append(f"{doc}: `{ref}` — symbol {symbol!r} not found "
+                              f"in {path_s}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    docs = [Path(a) for a in argv] if argv else [REPO / d for d in DEFAULT_DOCS]
+    errors, checked = [], 0
+    for doc in docs:
+        if not doc.is_file():
+            errors.append(f"{doc}: document itself is missing")
+            continue
+        checked += 1
+        errors.extend(check_doc(doc))
+    for e in errors:
+        print(f"error: {e}", file=sys.stderr)
+    print(f"check_doc_refs: {checked} docs checked, {len(errors)} stale "
+          f"reference(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
