@@ -21,6 +21,7 @@ MODULES = [
     ("perf", "benchmarks.perf_levers"),
     ("kernels", "benchmarks.kernels_bench"),
     ("zoo", "benchmarks.zoo_swap"),
+    ("runtime_scale", "benchmarks.runtime_scale"),
 ]
 
 

@@ -1,8 +1,10 @@
-"""The paper's Figure 2 on a device mesh: a forest distributed across
-"switches" (devices), packets hopping via collective-permute, GPipe-style
-pipelining so every switch processes a different in-flight microbatch.
+"""The paper's Figure 2 on a device mesh, driven through the runtime layer:
+a forest distributed across "switches" (devices), packets hopping via
+collective-permute, GPipe-style pipelining — and then the same traffic
+data-parallel across "port" lanes on a 2D (switch x port) mesh, the
+"aggregate traffic from many ingress ports" model.
 
-Needs >= 2 emulated devices:
+Needs >= 4 emulated devices:
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \
         PYTHONPATH=src python examples/distributed_inference.py
 """
@@ -16,7 +18,7 @@ import time
 import jax
 import numpy as np
 
-from repro.core.distributed_plane import PipelinedPlane, build_device_programs
+from repro.core.distributed_plane import build_device_programs
 from repro.core.mlmodels import Quantizer, RandomForest, accuracy
 from repro.core.packets import PacketBatch
 from repro.core.plane import PlaneProfile
@@ -24,6 +26,7 @@ from repro.core.planner import DeviceModel, plan_program
 from repro.core.topology import fat_tree
 from repro.core.translator import translate
 from repro.data import load_dataset
+from repro.runtime import DataplaneRuntime, PipelinedExecutor, ShardedExecutor
 
 print(f"devices: {len(jax.devices())}")
 Xtr, ytr, Xte, yte = load_dataset("satdap", scale=0.3)
@@ -43,29 +46,50 @@ prof = PlaneProfile(max_features=36, max_trees=4, max_layers=8,
                     max_classes=8, max_hyperplanes=8)
 devices, dps = build_device_programs(prog, plan, prof)
 n_dev = min(len(dps), len(jax.devices()))
-plane = PipelinedPlane(dps[:n_dev], n_classes=prof.max_classes)
 
-n_micro, B = 8, 64
-Xm = np.tile(Xteq, (4, 1))[: n_micro * B]
-mbs = PacketBatch.make_request(Xm, mid=prog.mid, max_features=36, n_trees=4,
-                               n_hyperplanes=8)
-mbs = jax.tree.map(lambda x: x.reshape((n_micro, B) + x.shape[1:]), mbs)
-out = plane.run(mbs)  # compile + run
+# ---- pipeline-parallel along the path: one executor behind the runtime ----
+runtime = DataplaneRuntime(PipelinedExecutor(dps[:n_dev], n_micro=8,
+                                             n_classes=prof.max_classes))
+B = 509  # deliberately ragged: admission pads to the power-of-two bucket
+Xm = np.tile(Xteq, (4, 1))[:B]
+pb = PacketBatch.make_request(Xm, mid=prog.mid, max_features=36, n_trees=4,
+                              n_hyperplanes=8)
+out = runtime.run(pb)  # compile + run
 t0 = time.perf_counter()
-out = plane.run(mbs)
+out = runtime.run(pb)
 jax.block_until_ready(out.rslt)
 dt = time.perf_counter() - t0
-got = np.asarray(out.rslt)  # run() returns the flat [n_micro * B] batch
-assert got.shape == (n_micro * B,)
+got = np.asarray(out.rslt)
+assert got.shape == (B,)
 assert (got == rf.predict(Xm)).all()
-print(f"pipelined {n_micro}x{B} packets across {n_dev} 'switches' in "
-      f"{dt*1e3:.1f} ms — answers match the forest exactly")
+print(f"pipelined {B} ragged packets (bucket {runtime.bucket(B)}) across "
+      f"{n_dev} 'switches' in {dt*1e3:.1f} ms — answers match the forest "
+      "exactly")
 
-# runtime reprogram the whole distributed plane
+# ---- runtime reprogram the whole distributed plane, same compiled runs ----
 rf2 = RandomForest(n_estimators=4, max_depth=5, max_leaf_nodes=30,
                    random_state=9).fit(Xtrq, ytr)
 _, dps2 = build_device_programs(translate(rf2), plan, prof)
-plane.swap_model(dps2[:n_dev])
-out2 = plane.run(mbs)
+runtime.swap(dps2[:n_dev])
+out2 = runtime.run(pb)
 assert (np.asarray(out2.rslt) == rf2.predict(Xm)).all()
-print("hot-swapped the model on every switch — same compiled pipeline.")
+print(f"hot-swapped the model on every switch — still "
+      f"{runtime.cache_size()} compiled pipeline(s).")
+
+# ---- data-parallel across port lanes: 2D (switch x port) mesh ------------
+# One switch worth of tables replicated over every port lane; the packet
+# batch itself is sharded — aggregate throughput scales with port count
+# (benchmarks/runtime_scale.py measures the curve).
+n_ports = len(jax.devices())
+from repro.core.plane import SwitchEngine
+
+eng = SwitchEngine(prof)
+full = eng.install(eng.empty(), translate(rf2))
+sharded = DataplaneRuntime(ShardedExecutor(
+    [full], n_classes=prof.max_classes, n_ports=n_ports, n_micro=1))
+out3 = sharded.run(pb)
+assert (np.asarray(out3.rslt) == rf2.predict(Xm)).all()
+ym = np.tile(yte, 4)[:B]
+print(f"same {B} packets sharded over {n_ports} port lanes "
+      f"(bucket {sharded.bucket(B)}) — bit-identical answers, "
+      f"acc={accuracy(ym, np.asarray(out3.rslt)):.3f}")

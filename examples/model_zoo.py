@@ -10,10 +10,16 @@ request writer shifting a traffic fraction to a new VID.
   3. canary: shift 10% → 50% → 100% of requests to v2 by rewriting ``vid``
      in the requests (the plane is untouched);
   4. evict v1 — its slot empties, stragglers get RSLT=-1 (no match), and the
-     engine never recompiled: trace count stays 1 throughout.
+     engine never recompiled: one trace per admission bucket, nothing more.
+
+``ZooServer`` serves through a ``DataplaneRuntime``: every classify is
+admission-bucketed (ragged batch sizes pad into power-of-two buckets of
+passthrough packets), so arbitrary traffic costs at most O(log B) compiles.
 
     PYTHONPATH=src python examples/model_zoo.py
 """
+import numpy as np
+
 from repro.core.mlmodels import DecisionTree, Quantizer, accuracy
 from repro.core.plane import PlaneProfile
 from repro.data import load_dataset
@@ -59,3 +65,22 @@ print(f"v1 evicted (stragglers get RSLT=-1) | v2 acc={accuracy(yte, final):.3f}"
 print(f"engine traces across install/rollout/evict: {zoo.cache_size()} "
       f"(compile-once — §6)")
 assert zoo.cache_size() == 1
+
+# ---- 5. ragged traffic: admission bucketing, O(log B) compiles ----
+# Real request streams don't arrive in one fixed batch size.  The runtime
+# pads each batch into its power-of-two bucket of passthrough packets, so
+# five ragged sizes share two new buckets here — and replays are free.
+buckets = {zoo.runtime.bucket(Xteq.shape[0])}
+for B in (1, 7, 63, 64, 65):
+    r = zoo.classify(Xteq[:B], mid=0, vid=1)
+    assert (r == final[:B]).all(), "padding must not change any answer"
+    buckets.add(zoo.runtime.bucket(B))
+print(f"ragged batches {{1,7,63,64,65}} + full {Xteq.shape[0]} -> "
+      f"{len(buckets)} buckets {sorted(buckets)} = {zoo.cache_size()} traces")
+assert zoo.cache_size() == len(buckets)
+
+# device-out serving: keep results on device for runtime-stacked callers
+dev = zoo.classify(Xteq, mid=0, vid=1, device_out=True)
+assert (np.asarray(dev.rslt) == final).all()
+print("device_out=True returns the on-device PacketBatch — no host "
+      "round-trip per batch")

@@ -8,6 +8,7 @@
     planner.py           MILP (paper) + exact DP deployment optimizer
     topology.py          fat-tree / DCell / BCube / Jellyfish
     netsim.py            latency/overhead model (J_L / J_D / J_O)
-    distributed_plane.py shard_map multi-switch plane, ppermute hops
+    distributed_plane.py per-device program slicing (+ deprecated shims;
+                         execution substrates live in repro.runtime)
     baselines/           SwitchTree / LEO / DINC representation models
 """

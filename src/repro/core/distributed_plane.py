@@ -1,36 +1,27 @@
-"""Distributed ACORN data plane over a device mesh (paper Fig. 2 on TPUs).
+"""Distributed ACORN plane: per-device program slicing (paper Fig. 2 on TPUs).
 
 The deployment plan assigns program stages to switches along a path; here the
 "switches" are mesh devices.  Each device holds only *its* table entries (a
 partial ``PackedProgram``); the packet batch's intermediates (status codes,
 SVM partial sums) ride along between hops — exactly the paper's in-packet
-intermediate transport — realized as ``lax.ppermute`` (collective-permute =
-the wire).
+intermediate transport.
 
-Two execution modes:
-
-* ``run_sequential``  — functional reference: apply device programs in path
-  order on one device.  Used by tests to prove the distributed decomposition
-  is semantically identical to the single-switch plane.
-* ``PipelinedPlane``  — ``shard_map`` over a ``("switch",)`` mesh axis with a
-  GPipe-style ring: microbatch m enters device 0 at step m, hops via
-  ppermute, exits device n-1 at step m+n-1.  Steady-state: every "switch"
-  processes a different in-flight microbatch each step — the data plane
-  pipeline model (TNA), not run-to-completion.
+This module owns the **install side** of that story — slicing a
+``TableProgram`` (or a whole zoo of them) into per-device partial programs.
+The **execution side** lives in the ``repro.runtime`` package: a
+``SequentialPathExecutor`` is the functional reference, a
+``PipelinedExecutor`` runs the shard_map ring pipeline, and a
+``ShardedExecutor`` adds data-parallel port lanes on a 2D mesh.
+``run_sequential`` and ``PipelinedPlane`` survive here only as thin
+deprecated shims over those executors.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-
-import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-
 from repro.core.packets import PacketBatch
-from repro.core.plane import PackedProgram, PlaneProfile, _classify_impl, empty_program, install_program
+from repro.core.plane import PackedProgram, PlaneProfile, empty_program, install_program
 from repro.core.planner import DeploymentPlan
 from repro.core.translator import TableProgram
+from repro.runtime.executors import PipelinedExecutor, SequentialPathExecutor
 
 __all__ = [
     "build_device_programs",
@@ -38,20 +29,6 @@ __all__ = [
     "run_sequential",
     "PipelinedPlane",
 ]
-
-
-def _shard_map(fn, *, mesh, in_specs, out_specs):
-    """``jax.shard_map`` moved over jax versions: new jax exposes it at the
-    top level (with ``check_vma``), jax<=0.4.x only under
-    ``jax.experimental.shard_map`` (with ``check_rep``).  Support both."""
-    sm = getattr(jax, "shard_map", None)
-    if sm is not None:
-        return sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                  check_vma=False)
-    from jax.experimental.shard_map import shard_map as sm_exp
-
-    return sm_exp(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                  check_rep=False)
 
 
 def build_device_programs(
@@ -126,14 +103,21 @@ def run_sequential(
     n_classes: int,
     mode: str | None = None,
 ) -> PacketBatch:
-    """Reference semantics: the batch visits each device in path order."""
-    for packed in device_programs:
-        batch = _classify_impl(packed, batch, n_classes=n_classes, mode=mode)
-    return batch
+    """Deprecated shim — reference semantics: the batch visits each device in
+    path order.  New code should hold a ``repro.runtime``
+    ``SequentialPathExecutor`` (jitted, swap-able) behind a
+    ``DataplaneRuntime`` instead of re-tracing this eager loop per call."""
+    return SequentialPathExecutor(
+        device_programs, n_classes=n_classes, mode=mode, jit=False
+    ).classify(batch)
 
 
 class PipelinedPlane:
-    """shard_map ring pipeline across a 'switch' mesh axis."""
+    """Deprecated shim over ``repro.runtime.PipelinedExecutor``.
+
+    Kept for source compatibility only; the executor owns the shard_map ring
+    and memoizes compiled pipelines per ``n_micro`` (the old single-slot
+    ``_run`` rebuilt whenever the microbatch count alternated)."""
 
     def __init__(
         self,
@@ -143,78 +127,26 @@ class PipelinedPlane:
         mode: str | None = None,
         devices=None,
     ) -> None:
-        self.n_dev = len(device_programs)
-        if devices is None:
-            devices = jax.devices()[: self.n_dev]
-        if len(devices) < self.n_dev:
-            raise ValueError(f"need {self.n_dev} devices, have {len(devices)}")
-        self.mesh = Mesh(devices, ("switch",))
-        self.n_classes = n_classes
-        self.mode = mode
-        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *device_programs)
-        sharding = NamedSharding(self.mesh, P("switch"))
-        self.packed = jax.tree.map(lambda x: jax.device_put(x, sharding), stacked)
-        self._run = None
+        self._executor = PipelinedExecutor(
+            device_programs, n_classes=n_classes, mode=mode, devices=devices)
+        self.n_dev = self._executor.n_switch
 
-    def _build(self, n_micro: int):
-        n_dev, n_classes, mode = self.n_dev, self.n_classes, self.mode
-        n_steps = n_micro + n_dev - 1
-        perm = [(i, (i + 1) % n_dev) for i in range(n_dev)]
+    @property
+    def mesh(self):
+        return self._executor.mesh
 
-        @functools.partial(
-            _shard_map,
-            mesh=self.mesh,
-            in_specs=(P("switch"), P(None)),
-            out_specs=P(None, "switch"),
-        )
-        def pipeline(packed_stack, micro):
-            packed = jax.tree.map(lambda x: x[0], packed_stack)
-            idx = jax.lax.axis_index("switch")
-
-            def step(state, s):
-                inj = jax.tree.map(
-                    lambda x: jnp.take(x, jnp.minimum(s, n_micro - 1), axis=0), micro
-                )
-                mb = jax.tree.map(
-                    lambda a, b: jnp.where(idx == 0, a, b), inj, state
-                )
-                out = _classify_impl(packed, mb, n_classes=n_classes, mode=mode)
-                nxt = jax.tree.map(
-                    lambda x: jax.lax.ppermute(x, "switch", perm), out
-                )
-                return nxt, out
-
-            init = jax.tree.map(
-                lambda x: jnp.zeros_like(x[0]), micro
-            )
-            _, outs = jax.lax.scan(step, init, jnp.arange(n_steps))
-            # leading axis: steps; device axis added by out_specs on axis 1
-            return jax.tree.map(lambda x: x[:, None], outs)
-
-        return jax.jit(pipeline)
+    @property
+    def packed(self):
+        return self._executor.packed
 
     def run(self, microbatches: PacketBatch) -> PacketBatch:
         """``microbatches`` has leading axis [n_micro, B_mb]. Returns the
         classified packets re-concatenated in microbatch order: one flat
         [n_micro * B_mb] batch, matching the input packet order."""
-        n_micro = microbatches.packet_id.shape[0]
-        if self._run is None or self._n_micro != n_micro:
-            self._run = self._build(n_micro)
-            self._n_micro = n_micro
-        outs = self._run(self.packed, microbatches)
-        n_dev = self.n_dev
-        # microbatch m exits the last device at step m + n_dev - 1
-        sel = jax.tree.map(
-            lambda x: x[n_dev - 1 :, n_dev - 1], outs
-        )  # [n_micro, B_mb, ...]
-        return jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]), sel)
+        return self._executor.run(microbatches)
 
     def swap_model(self, device_programs: list[PackedProgram]) -> None:
         """Runtime reprogram: new entry arrays + their install-time exec
         images (stacked and resharded with the tables), same compiled
-        pipeline."""
-        if len(device_programs) != self.n_dev:
-            raise ValueError("device count changed — replan instead")
-        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *device_programs)
-        sharding = NamedSharding(self.mesh, P("switch"))
-        self.packed = jax.tree.map(lambda x: jax.device_put(x, sharding), stacked)
+        pipelines."""
+        self._executor.swap(device_programs)

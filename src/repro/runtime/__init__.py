@@ -1,0 +1,49 @@
+"""The repro runtime layer: one front door to every classify substrate.
+
+ACORN's pipeline model serves line-rate *aggregate* traffic arriving on many
+ingress ports; scaling the reproduction therefore needs two independent axes:
+
+* **path** (pipeline-parallel)  — program stages laid across "switch" devices,
+  packets hopping via collective-permute (the wire);
+* **ports** (data-parallel)     — the packet batch itself sharded across
+  "port" devices that replicate the program, so throughput grows with port
+  count at fixed latency.
+
+``DataplaneRuntime`` (``facade.py``) is the facade: it owns *admission* —
+ragged request batches are padded into power-of-two buckets of passthrough
+packets (``admission.py``), so arbitrary traffic sizes hit at most O(log B)
+compiled shapes per executor — and delegates execution to a pluggable
+``Executor`` (``executors.py``):
+
+* ``SingleSwitchExecutor``   — one ``SwitchEngine``, the jit-once plane;
+* ``SequentialPathExecutor`` — partial programs applied in path order
+  (functional reference for every distributed decomposition);
+* ``PipelinedExecutor``      — shard_map ring over a ``("switch",)`` axis
+  (GPipe-style), compiled pipelines memoized per ``n_micro``;
+* ``ShardedExecutor``        — the 2D ``("switch", "port")`` mesh: pipeline
+  along the path, data-parallel across ports.
+
+This package is the **only** place in ``src/repro`` allowed to construct a
+``shard_map`` classify loop (pinned by ``tests/test_runtime.py``).
+"""
+from repro.runtime.admission import bucket_size, pad_to_bucket, trim
+from repro.runtime.executors import (
+    Executor,
+    PipelinedExecutor,
+    SequentialPathExecutor,
+    ShardedExecutor,
+    SingleSwitchExecutor,
+)
+from repro.runtime.facade import DataplaneRuntime
+
+__all__ = [
+    "DataplaneRuntime",
+    "Executor",
+    "SingleSwitchExecutor",
+    "SequentialPathExecutor",
+    "PipelinedExecutor",
+    "ShardedExecutor",
+    "bucket_size",
+    "pad_to_bucket",
+    "trim",
+]

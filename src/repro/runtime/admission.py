@@ -1,0 +1,63 @@
+"""Admission control: ragged traffic -> a small set of compiled batch shapes.
+
+Every executor jit-compiles per batch shape, so letting arbitrary request
+sizes through would compile once per distinct B — the compile-thrash analogue
+of the pre-zoo per-model retrace.  Admission instead rounds each batch up to
+a **power-of-two bucket** (in units of the executor's ``granularity``, the
+divisibility its mesh layout needs) and fills the tail with zeroed packets.
+
+A zero-filled packet has ``ptype == PacketType.FORWARD`` (= 0): the plane's
+passthrough gate leaves its ``rslt``/``codes``/``svm_acc`` untouched (paper
+§6.1 — classification never disturbs forwarded traffic), so padding is
+semantically invisible and ``trim`` just slices it back off.  Net effect:
+any sequence of batch sizes ≤ B costs at most ``O(log B)`` traces per
+executor (pinned in ``tests/test_runtime.py``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packets import PacketBatch
+
+__all__ = ["bucket_size", "pad_to_bucket", "trim"]
+
+
+def bucket_size(batch: int, granularity: int = 1) -> int:
+    """Smallest power-of-two multiple of ``granularity`` holding ``batch``.
+
+    ``granularity`` is the executor's batch divisibility requirement
+    (``n_micro * n_ports`` for mesh executors, 1 for single-switch), so the
+    bucket always splits evenly into microbatches and port shards.
+    """
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1 packet, got {batch}")
+    if granularity < 1:
+        raise ValueError(f"granularity must be >= 1, got {granularity}")
+    units = -(-batch // granularity)          # ceil(batch / granularity)
+    return granularity * (1 << max(units - 1, 0).bit_length())
+
+
+def pad_to_bucket(pb: PacketBatch, bucket: int) -> PacketBatch:
+    """Pad a request batch to ``bucket`` packets with passthrough tail.
+
+    The tail is zero-filled: ``ptype = FORWARD`` (0), zero features and
+    intermediates — packets the plane forwards untouched by construction.
+    """
+    B = pb.batch
+    if bucket < B:
+        raise ValueError(f"bucket {bucket} smaller than batch {B}")
+    if bucket == B:
+        return pb
+    return jax.tree.map(
+        lambda x: jnp.concatenate(
+            [jnp.asarray(x),
+             jnp.zeros((bucket - B,) + x.shape[1:], x.dtype)]),
+        pb)
+
+
+def trim(pb: PacketBatch, batch: int) -> PacketBatch:
+    """Slice the admission padding back off (device-side, no transfer)."""
+    if pb.batch == batch:
+        return pb
+    return jax.tree.map(lambda x: x[:batch], pb)

@@ -1,0 +1,88 @@
+"""``DataplaneRuntime`` — the facade every serving surface classifies through.
+
+One object, two responsibilities:
+
+* **admission** — pad each ragged request batch into its power-of-two bucket
+  of passthrough packets (``admission.py``), run the executor on the bucket
+  shape, slice the padding back off.  Arbitrary traffic sizes therefore cost
+  at most O(log B) compiled traces per executor, and every caller — the
+  ``ZooServer`` serving front, examples, benchmarks — shares the same
+  bucketed shapes.
+* **delegation** — execution goes to the pluggable ``Executor``
+  (``executors.py``); swapping substrates (single switch → pipelined path →
+  2D switch x port mesh) changes *which executor is plugged in*, never the
+  caller.
+
+Control-plane writes (``install``/``evict``) pass through to executors that
+own a plane (``SingleSwitchExecutor``); mesh executors are constructed from
+pre-built device programs and reprogrammed wholesale via ``swap``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.packets import PacketBatch
+from repro.core.plane import PlaneProfile
+from repro.runtime.admission import bucket_size, pad_to_bucket, trim
+from repro.runtime.executors import Executor, SingleSwitchExecutor
+
+__all__ = ["DataplaneRuntime"]
+
+
+class DataplaneRuntime:
+    """Admission-controlled front over one pluggable executor."""
+
+    def __init__(self, executor: Executor) -> None:
+        self.executor = executor
+
+    @classmethod
+    def for_profile(cls, profile: PlaneProfile, *,
+                    mode: str | None = None) -> "DataplaneRuntime":
+        """Single-switch runtime over a fresh engine — the quickstart path."""
+        return cls(SingleSwitchExecutor(profile, mode=mode))
+
+    # ---------------------------------------------------------- admission
+    def bucket(self, batch: int) -> int:
+        """The padded shape a batch of ``batch`` packets executes at."""
+        return bucket_size(batch, self.executor.granularity)
+
+    def run(self, batch: PacketBatch) -> PacketBatch:
+        """Classify a flat request batch of any size.
+
+        Pads to the bucket shape (passthrough tail), executes, trims — the
+        result stays on device (callers needing host values convert
+        explicitly, e.g. ``np.asarray(out.rslt)``).
+        """
+        B = batch.batch
+        out = self.executor.classify(pad_to_bucket(batch, self.bucket(B)))
+        return trim(out, B)
+
+    def results(self, batch: PacketBatch) -> np.ndarray:
+        """``run`` + the one host round-trip serving fronts usually want."""
+        return np.asarray(self.run(batch).rslt)
+
+    # ------------------------------------------------------ control plane
+    def install(self, program, *, vid: int | None = None,
+                stages: set[int] | None = None) -> None:
+        ex = self.executor
+        if not hasattr(ex, "install"):
+            raise NotImplementedError(
+                f"{type(ex).__name__} is built from pre-installed device "
+                "programs — reprogram it wholesale via swap()")
+        ex.install(program, vid=vid, stages=stages)
+
+    def evict(self, *, vid: int, kind: str = "all") -> None:
+        ex = self.executor
+        if not hasattr(ex, "evict"):
+            raise NotImplementedError(
+                f"{type(ex).__name__} is built from pre-installed device "
+                "programs — reprogram it wholesale via swap()")
+        ex.evict(vid=vid, kind=kind)
+
+    def swap(self, device_programs) -> None:
+        self.executor.swap(device_programs)
+
+    def cache_size(self) -> int:
+        """Compiled traces across the executor — with admission on, at most
+        one per (n_micro, bucket) shape."""
+        return self.executor.cache_size()

@@ -3,9 +3,11 @@
 Same runtime-programmability discipline throughout: each step compiles once
 per fixed shape; swapping model *weights* or *table entries* (new checkpoint,
 new tenant, new model version) is an array update, zero retrace.
-``ZooServer`` is the classifier-side serving front — a ``SwitchEngine``
+``ZooServer`` is the classifier-side serving front — a ``DataplaneRuntime``
 hosting ``profile.max_versions`` resident versions per pipeline, with
-install / evict / A-B traffic-split rollout as control-plane operations.
+install / evict / A-B traffic-split rollout as control-plane operations and
+admission bucketing on every classify (ragged traffic costs at most one
+trace per power-of-two bucket).
 """
 from __future__ import annotations
 
@@ -18,6 +20,7 @@ from repro.core.plane import PackedProgram, PlaneProfile, SwitchEngine
 from repro.core.translator import TableProgram, translate
 from repro.models.common import ArchConfig
 from repro.models.transformer import decode_step, forward
+from repro.runtime import DataplaneRuntime, Executor, SingleSwitchExecutor
 
 __all__ = ["make_prefill_step", "make_decode_step", "ZooServer"]
 
@@ -44,10 +47,10 @@ def make_decode_step(cfg: ArchConfig, *, unroll: bool = False):
 
 
 class ZooServer:
-    """Stateful serving front over one ``SwitchEngine`` model zoo.
+    """Stateful serving front over one ``DataplaneRuntime`` model zoo.
 
-    The data plane compiles once at construction (per batch shape, lazily);
-    every subsequent ``install`` / ``evict`` / traffic shift is an entry-array
+    The data plane compiles once per admission bucket (lazily); every
+    subsequent ``install`` / ``evict`` / traffic shift is an entry-array
     update — the paper's §6 runtime reprogrammability, extended along the
     Appendix A VID axis.  Each install/evict also recompiles the exec image
     of *only the written slot* (``core/plane.py``), so serving classifies
@@ -55,16 +58,37 @@ class ZooServer:
     per-slot.  ``classify_split`` implements A/B rollout: the *request
     writer* shifts a traffic fraction to a new version by rewriting ``vid``
     in the requests; the plane — tables and image alike — is untouched.
+
+    Execution is pluggable: the default is a ``SingleSwitchExecutor`` (one
+    engine), but any ``repro.runtime`` executor already holding this zoo's
+    programs can be passed in — the serving API is unchanged on top of a
+    pipelined path or a 2D switch x port mesh.
     """
 
-    def __init__(self, profile: PlaneProfile, *, mode: str | None = None) -> None:
-        self.engine = SwitchEngine(profile, mode=mode)
-        self.packed: PackedProgram = self.engine.empty()
+    def __init__(self, profile: PlaneProfile, *, mode: str | None = None,
+                 executor: Executor | None = None) -> None:
+        if executor is None:
+            executor = SingleSwitchExecutor(profile, mode=mode)
+        self.runtime = DataplaneRuntime(executor)
+        self._profile = profile
         self.versions: dict[tuple[str, int], str] = {}  # (pipeline, vid) -> tag
 
     @property
+    def executor(self) -> Executor:
+        return self.runtime.executor
+
+    @property
+    def engine(self) -> SwitchEngine:
+        """The owning plane (single-switch executors only) — compat accessor."""
+        return self.executor.engine
+
+    @property
+    def packed(self) -> PackedProgram:
+        return self.executor.packed
+
+    @property
     def profile(self) -> PlaneProfile:
-        return self.engine.profile
+        return self._profile
 
     def install(self, model_or_program, *, vid: int, tag: str = "") -> int:
         """Install a trained model (or pre-translated program) into slot
@@ -79,13 +103,13 @@ class ZooServer:
                 )
         else:
             prog = translate(model_or_program, vid=vid)
-        self.packed = self.engine.install(self.packed, prog, vid=vid)
+        self.runtime.install(prog, vid=vid)
         pipeline = "svm" if prog.kind == "svm" else "tree"
         self.versions[(pipeline, vid)] = tag or f"{prog.kind}-v{vid}"
         return vid
 
     def evict(self, *, vid: int, kind: str = "all") -> None:
-        self.packed = self.engine.evict(self.packed, vid=vid, kind=kind)
+        self.runtime.evict(vid=vid, kind=kind)
         for pipeline in ("tree", "svm"):
             if kind in (pipeline, "all"):
                 self.versions.pop((pipeline, vid), None)
@@ -97,8 +121,17 @@ class ZooServer:
             n_trees=prof.max_trees, n_hyperplanes=prof.max_hyperplanes,
             max_versions=prof.max_versions)
 
-    def classify(self, features, *, mid: int, vid: int | np.ndarray) -> np.ndarray:
-        out = self.engine.classify(self.packed, self._request(features, mid, vid))
+    def classify(self, features, *, mid: int, vid: int | np.ndarray,
+                 device_out: bool = False) -> np.ndarray | PacketBatch:
+        """Classify one request batch (admission-bucketed, any size).
+
+        ``device_out=True`` returns the classified on-device ``PacketBatch``
+        instead of forcing the per-batch host round-trip — runtime-stacked
+        callers (and sharded executors, whose results live across port
+        devices) keep results on device and convert only at the edge."""
+        out = self.runtime.run(self._request(features, mid, vid))
+        if device_out:
+            return out
         return np.asarray(out.rslt)
 
     def classify_split(self, features, *, mid: int,
@@ -122,7 +155,7 @@ class ZooServer:
         return self.classify(features, mid=mid, vid=vids), vids
 
     def cache_size(self) -> int:
-        return self.engine.cache_size()
+        return self.runtime.cache_size()
 
 
 def greedy_decode(params, state, first_token, pos0, cfg: ArchConfig, n_steps: int):

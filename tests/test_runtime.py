@@ -1,0 +1,394 @@
+"""Runtime subsystem: executor parity, admission bucketing, compile counts.
+
+Pins the ISSUE-4 contract:
+
+* all four executors produce bit-identical ``rslt``/``codes``/``svm_acc``
+  for the same zoo and traffic (V ∈ {1, 4}, passthrough packets included);
+* admission turns ragged batch sizes into power-of-two buckets — results
+  bit-identical to unpadded single-engine classify, at most one trace per
+  bucket;
+* ``PipelinedExecutor`` memoizes compiled pipelines per ``n_micro`` (the old
+  ``PipelinedPlane`` single-slot thrash);
+* no ``src/repro`` module outside ``runtime/`` constructs a ``shard_map``
+  classify loop;
+* the multi-device story (4-switch pipeline, 2x2 and 1x4 meshes) runs in a
+  subprocess with 8 emulated devices, per the conftest 1-device rule.
+"""
+import ast
+import dataclasses
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core.mlmodels import DecisionTree, LinearSVM, RandomForest
+from repro.core.packets import PacketBatch, PacketType
+from repro.core.plane import (
+    PlaneProfile,
+    SwitchEngine,
+    empty_program,
+    install_program,
+)
+from repro.core.translator import MID_SVM, translate
+from repro.runtime import (
+    DataplaneRuntime,
+    PipelinedExecutor,
+    SequentialPathExecutor,
+    ShardedExecutor,
+    SingleSwitchExecutor,
+    bucket_size,
+)
+from repro.serving import ZooServer
+
+
+def _profile(V: int) -> PlaneProfile:
+    return PlaneProfile(max_features=36, max_trees=4, max_layers=6,
+                        max_entries_per_layer=64, max_leaves=64,
+                        max_classes=8, max_hyperplanes=8, max_versions=V)
+
+
+def _split_stages(progs, profile, n_dev):
+    """Hand-rolled path split: each program's stages cut into n_dev
+    contiguous blocks in stage order (layers ascend along the path, predict
+    and voting land on the last owning device) — a planner-free stand-in for
+    build_device_programs."""
+    dps = []
+    for d in range(n_dev):
+        packed = empty_program(profile)
+        for prog in progs:
+            chunks = np.array_split(np.arange(len(prog.stages())), n_dev)
+            stages = set(chunks[d].tolist())
+            if stages:
+                packed = install_program(packed, prog, profile,
+                                         stages=stages, vid=prog.vid)
+        dps.append(packed)
+    return dps
+
+
+def _mixed_traffic(X, V, n_trees, n_hyperplanes, tree_mid):
+    """Mixed-version REQUEST traffic with a passthrough cohort carrying
+    nonzero intermediates (those must come out bit-identical)."""
+    B = X.shape[0]
+    rng = np.random.default_rng(7)
+    vids = rng.integers(0, V, B)
+    is_svm = rng.random(B) < 0.3
+    svm_slots = max(1, min(V, 2))
+    vids = np.where(is_svm, vids % svm_slots, vids)
+    mids = np.where(is_svm, MID_SVM, tree_mid)
+    pb = PacketBatch.make_request(X, mid=mids, vid=vids, max_features=36,
+                                  n_trees=n_trees,
+                                  n_hyperplanes=n_hyperplanes,
+                                  max_versions=V)
+    ptype = np.where(rng.random(B) < 0.2, PacketType.FORWARD,
+                     PacketType.REQUEST)
+    ptype = np.where(rng.random(B) < 0.1, PacketType.RESPONSE, ptype)
+    passthru = ptype != PacketType.REQUEST
+    codes = np.where(passthru[:, None],
+                     rng.integers(0, 2**10, (B, n_trees)), 0)
+    acc = np.where(passthru[:, None],
+                   rng.integers(-50, 50, (B, n_hyperplanes)), 0)
+    rslt = np.where(passthru, rng.integers(0, 8, B), -1)
+    return dataclasses.replace(
+        pb,
+        ptype=np.asarray(ptype, np.int32),
+        codes=np.asarray(codes, np.uint32),
+        svm_acc=np.asarray(acc, np.int32),
+        rslt=np.asarray(rslt, np.int32),
+    ), passthru
+
+
+@pytest.fixture(scope="module", params=[1, 4], ids=["V1", "V4"])
+def zoo(request, satdap):
+    """(profile, full PackedProgram, programs, traffic, expected) per V."""
+    V = request.param
+    Xtr, ytr, Xte, _ = satdap
+    prof = _profile(V)
+    trees = [DecisionTree(max_depth=3 + v % 3, max_leaf_nodes=8 + 8 * v)
+             .fit(Xtr, ytr) for v in range(V)]
+    svms = [LinearSVM(epochs=30 + 20 * v).fit(Xtr, ytr)
+            for v in range(max(1, min(V, 2)))]
+    progs = ([translate(m, vid=v) for v, m in enumerate(trees)]
+             + [translate(m, vid=v) for v, m in enumerate(svms)])
+    packed = empty_program(prof)
+    for prog in progs:
+        packed = install_program(packed, prog, prof, vid=prog.vid)
+    pb, passthru = _mixed_traffic(Xte[:96], V, prof.max_trees,
+                                  prof.max_hyperplanes, progs[0].mid)
+    eng = SwitchEngine(prof)
+    want = eng.classify(packed, pb)
+    return prof, packed, progs, pb, passthru, want
+
+
+# ---------------------------------------------------------------- parity
+def test_four_executor_parity(zoo):
+    """The acceptance pin: same zoo + same traffic -> bit-identical
+    rslt/codes/svm_acc through every executor, passthrough included."""
+    prof, packed, progs, pb, passthru, want = zoo
+    n_classes = prof.max_classes
+    executors = {
+        "single": SingleSwitchExecutor(prof, packed=packed),
+        "sequential": SequentialPathExecutor(
+            _split_stages(progs, prof, 3), n_classes=n_classes),
+        "pipelined": PipelinedExecutor([packed], n_classes=n_classes,
+                                       n_micro=4),
+        "sharded": ShardedExecutor([packed], n_classes=n_classes,
+                                   n_ports=1, n_micro=2),
+    }
+    for name, ex in executors.items():
+        out = DataplaneRuntime(ex).run(pb)
+        for field in ("rslt", "codes", "svm_acc"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(out, field)),
+                np.asarray(getattr(want, field)),
+                err_msg=f"{name}.{field} diverges from the single plane")
+        # passthrough cohort: runtime padding/trim never disturbed it either
+        np.testing.assert_array_equal(
+            np.asarray(out.rslt)[passthru],
+            np.asarray(pb.rslt)[passthru],
+            err_msg=f"{name} touched forwarded traffic")
+
+
+def test_sequential_executor_matches_eager_shim(zoo):
+    """The jitted chain and the deprecated eager run_sequential shim are the
+    same function."""
+    from repro.core.distributed_plane import run_sequential
+
+    prof, packed, progs, pb, _, _ = zoo
+    dps = _split_stages(progs, prof, 3)
+    jitted = SequentialPathExecutor(dps, n_classes=prof.max_classes)
+    eager = run_sequential(dps, pb, n_classes=prof.max_classes)
+    out = jitted.classify(pb)
+    for field in ("rslt", "codes", "svm_acc"):
+        np.testing.assert_array_equal(np.asarray(getattr(out, field)),
+                                      np.asarray(getattr(eager, field)))
+
+
+# ------------------------------------------------------------- admission
+def test_bucket_size_policy():
+    assert [bucket_size(b) for b in (1, 2, 3, 7, 63, 64, 65)] == \
+        [1, 2, 4, 8, 64, 64, 128]
+    # granularity g: buckets are g * 2^k
+    assert [bucket_size(b, 4) for b in (1, 4, 5, 96)] == [4, 4, 8, 128]
+    assert bucket_size(1, 6) == 6 and bucket_size(13, 6) == 24
+    with pytest.raises(ValueError):
+        bucket_size(0)
+    with pytest.raises(ValueError):
+        bucket_size(8, 0)
+
+
+def test_ragged_admission_bit_identical_one_trace_per_bucket(satdap):
+    """B ∈ {1, 7, 63, 64, 65}: runtime results == unpadded single-engine
+    classify bit-for-bit, and the executor compiles at most one trace per
+    power-of-two bucket (4 distinct buckets for the 5 sizes)."""
+    Xtr, ytr, Xte, _ = satdap
+    prof = _profile(1)
+    dt = DecisionTree(max_depth=4, max_leaf_nodes=16).fit(Xtr, ytr)
+    prog = translate(dt)
+    packed = install_program(empty_program(prof), prog, prof)
+
+    rt = DataplaneRuntime(SingleSwitchExecutor(prof, packed=packed))
+    ref_eng = SwitchEngine(prof)   # private: unpadded shapes trace freely
+    sizes = (1, 7, 63, 64, 65)
+    for B in sizes:
+        pb = PacketBatch.make_request(Xte[:B], mid=prog.mid, max_features=36,
+                                      n_trees=prof.max_trees,
+                                      n_hyperplanes=prof.max_hyperplanes)
+        got = rt.run(pb)
+        want = ref_eng.classify(packed, pb)
+        for field in ("rslt", "codes", "svm_acc"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(got, field)),
+                np.asarray(getattr(want, field)),
+                err_msg=f"B={B} {field} diverges from unpadded classify")
+    buckets = {rt.bucket(B) for B in sizes}
+    assert buckets == {1, 8, 64, 128}
+    assert rt.cache_size() == len(buckets), \
+        "admission must compile at most one trace per bucket"
+    # replaying every size adds zero traces
+    for B in sizes:
+        pb = PacketBatch.make_request(Xte[:B], mid=prog.mid, max_features=36,
+                                      n_trees=prof.max_trees,
+                                      n_hyperplanes=prof.max_hyperplanes)
+        rt.run(pb)
+    assert rt.cache_size() == len(buckets)
+
+
+# ----------------------------------------------- pipelined compile thrash
+def test_pipelined_memoizes_per_n_micro(satdap):
+    """Alternating microbatch counts reuses each compiled pipeline instead
+    of rebuilding (the old PipelinedPlane kept one slot and thrashed it)."""
+    Xtr, ytr, Xte, _ = satdap
+    prof = _profile(1)
+    dt = DecisionTree(max_depth=4, max_leaf_nodes=16).fit(Xtr, ytr)
+    packed = install_program(empty_program(prof), translate(dt), prof)
+    ex = PipelinedExecutor([packed], n_classes=prof.max_classes)
+
+    import jax
+    X = Xte[:32]
+    pb = PacketBatch.make_request(X, mid=0, max_features=36,
+                                  n_trees=prof.max_trees,
+                                  n_hyperplanes=prof.max_hyperplanes)
+    def mbs(n_micro):
+        return jax.tree.map(
+            lambda x: x.reshape((n_micro, X.shape[0] // n_micro)
+                                + x.shape[1:]), pb)
+
+    want = dt.predict(X)
+    for n_micro in (2, 4, 2, 4, 2):
+        out = ex.run(mbs(n_micro))
+        assert (np.asarray(out.rslt) == want).all()
+    assert set(ex._runs) == {2, 4}, "one compiled pipeline per n_micro"
+    assert ex.cache_size() == 2, \
+        "revisiting an n_micro must reuse its pipeline, not rebuild"
+
+
+# ------------------------------------------------------------ device_out
+def test_zooserver_device_out_skips_host_round_trip(satdap):
+    import jax
+
+    Xtr, ytr, Xte, _ = satdap
+    zoo = ZooServer(_profile(1))
+    zoo.install(DecisionTree(max_depth=4, max_leaf_nodes=16).fit(Xtr, ytr),
+                vid=0)
+    X = Xte[:40]
+    host = zoo.classify(X, mid=0, vid=0)
+    dev = zoo.classify(X, mid=0, vid=0, device_out=True)
+    assert isinstance(dev, PacketBatch)
+    assert isinstance(dev.rslt, jax.Array)
+    assert dev.batch == X.shape[0]
+    np.testing.assert_array_equal(host, np.asarray(dev.rslt))
+
+
+# ------------------------------------------------- shard_map containment
+def test_no_shard_map_outside_runtime():
+    """Only repro.runtime may construct a shard_map classify loop: no other
+    src/repro module may import or reference shard_map in code (docstrings
+    and comments are fine — the AST walk sees neither)."""
+    root = pathlib.Path(__file__).resolve().parent.parent / "src" / "repro"
+    offenders = []
+    for path in sorted(root.rglob("*.py")):
+        rel = path.relative_to(root)
+        if rel.parts[0] == "runtime":
+            continue
+        for node in ast.walk(ast.parse(path.read_text())):
+            hit = (
+                (isinstance(node, ast.ImportFrom)
+                 and "shard_map" in (node.module or ""))
+                or (isinstance(node, ast.Import)
+                    and any("shard_map" in a.name for a in node.names))
+                or (isinstance(node, ast.Attribute)
+                    and node.attr == "shard_map")
+                or (isinstance(node, ast.Name) and node.id == "shard_map")
+                or (isinstance(node, ast.Constant)
+                    and node.value == "shard_map")
+            )
+            if hit:
+                offenders.append(f"{rel}:{node.lineno}")
+    assert not offenders, \
+        f"shard_map classify loops must live in repro/runtime: {offenders}"
+
+
+# ------------------------------------------------------- multi-device
+MULTI_DEVICE_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import dataclasses, json
+    import numpy as np, jax
+    from repro.core.mlmodels import DecisionTree, RandomForest, Quantizer
+    from repro.core.packets import PacketBatch, PacketType
+    from repro.core.plane import (PlaneProfile, SwitchEngine, empty_program,
+                                  install_program)
+    from repro.core.translator import translate
+    from repro.data import load_dataset
+    from repro.runtime import (DataplaneRuntime, PipelinedExecutor,
+                               SequentialPathExecutor, ShardedExecutor,
+                               SingleSwitchExecutor)
+
+    assert len(jax.devices()) == 8, jax.devices()
+    Xtr, ytr, Xte, yte = load_dataset("satdap", scale=0.15)
+    q = Quantizer(8).fit(Xtr)
+    Xtrq, Xteq = q.transform(Xtr), q.transform(Xte)
+    prof = PlaneProfile(max_features=36, max_trees=4, max_layers=8,
+                        max_entries_per_layer=64, max_leaves=64,
+                        max_classes=8, max_hyperplanes=8, max_versions=2)
+    rf = RandomForest(n_estimators=4, max_depth=5, max_leaf_nodes=30,
+                      random_state=0).fit(Xtrq, ytr)
+    d1 = DecisionTree(max_depth=6, max_leaf_nodes=40).fit(Xtrq, ytr)
+    progs = [translate(rf, vid=0), translate(d1, vid=1)]
+
+    def split(n_dev):
+        dps = []
+        for d in range(n_dev):
+            packed = empty_program(prof)
+            for prog in progs:
+                chunks = np.array_split(np.arange(len(prog.stages())), n_dev)
+                st = set(chunks[d].tolist())
+                if st:
+                    packed = install_program(packed, prog, prof,
+                                             stages=st, vid=prog.vid)
+            dps.append(packed)
+        return dps
+
+    full = empty_program(prof)
+    for prog in progs:
+        full = install_program(full, prog, prof, vid=prog.vid)
+
+    B = 192
+    X = np.tile(Xteq, (B // Xteq.shape[0] + 1, 1))[:B]
+    rng = np.random.default_rng(5)
+    vids = rng.integers(0, 2, B)
+    mids = np.where(vids == 0, progs[0].mid, progs[1].mid)
+    pb = PacketBatch.make_request(X, mid=mids, vid=vids,
+                                  max_features=36, n_trees=4,
+                                  n_hyperplanes=8, max_versions=2)
+    ptype = np.where(rng.random(B) < 0.2, PacketType.FORWARD,
+                     PacketType.REQUEST).astype(np.int32)
+    pb = dataclasses.replace(pb, ptype=ptype)
+
+    eng = SwitchEngine(prof)
+    want = eng.classify(full, pb)
+
+    runtimes = {
+        "single": DataplaneRuntime(SingleSwitchExecutor(prof, packed=full)),
+        "seq4": DataplaneRuntime(SequentialPathExecutor(
+            split(4), n_classes=8)),
+        "pipe4x1": DataplaneRuntime(PipelinedExecutor(
+            split(4), n_classes=8, n_micro=4)),
+        "shard2x2": DataplaneRuntime(ShardedExecutor(
+            split(2), n_classes=8, n_ports=2, n_micro=2)),
+        "shard1x4": DataplaneRuntime(ShardedExecutor(
+            [full], n_classes=8, n_ports=4, n_micro=1)),
+    }
+    res = {}
+    for name, rt in runtimes.items():
+        out = rt.run(pb)
+        ok = all(
+            bool((np.asarray(getattr(out, f))
+                  == np.asarray(getattr(want, f))).all())
+            for f in ("rslt", "codes", "svm_acc"))
+        # ragged re-admission on the same runtime: a second bucket at most
+        out2 = rt.run(jax.tree.map(lambda x: x[:100], pb))
+        ok2 = bool((np.asarray(out2.rslt)
+                    == np.asarray(want.rslt)[:100]).all())
+        res[name] = bool(ok and ok2)
+    print(json.dumps(res))
+""")
+
+
+@pytest.mark.slow
+def test_runtime_parity_multi_device_subprocess():
+    """Full multi-device story on 8 emulated devices (subprocess per the
+    conftest 1-device rule): 4-hop sequential path, 4x1 pipeline, 2x2 and
+    1x4 (switch x port) meshes — all bit-identical to the single plane."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, "-c", MULTI_DEVICE_SCRIPT],
+                       capture_output=True, text=True, env=env, timeout=900)
+    assert r.returncode == 0, r.stderr[-3000:]
+    res = json.loads(r.stdout.strip().splitlines()[-1])
+    assert all(res.values()), res
