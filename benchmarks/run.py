@@ -22,6 +22,7 @@ MODULES = [
     ("kernels", "benchmarks.kernels_bench"),
     ("zoo", "benchmarks.zoo_swap"),
     ("runtime_scale", "benchmarks.runtime_scale"),
+    ("serve_async", "benchmarks.serve_async"),
 ]
 
 

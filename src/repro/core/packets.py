@@ -60,7 +60,14 @@ class PacketBatch:
         or a per-packet array — together the model-zoo dispatch key; when the
         caller knows the target plane's version capacity, pass
         ``max_versions`` to validate VIDs at the install/classify boundary
-        instead of shipping packets that can only ever yield ``rslt == -1``."""
+        instead of shipping packets that can only ever yield ``rslt == -1``.
+
+        Leaves are **host numpy**: requests model packets arriving from the
+        wire, and the jitted classify device-puts them exactly once.  Host
+        and device inputs of the same shape mint *separate* jit traces, so
+        keeping every serving surface (sync classify, coalesced async
+        dispatch) host-side on entry preserves the one-trace-per-bucket
+        admission property across all of them."""
         features = np.asarray(features, dtype=np.int32)
         B, F = features.shape
         Fmax = max_features or F
@@ -78,15 +85,15 @@ class PacketBatch:
         feats = np.zeros((B, Fmax), dtype=np.int32)
         feats[:, :F] = features
         return cls(
-            packet_id=jnp.arange(B, dtype=jnp.uint32),
-            ptype=jnp.full((B,), PacketType.REQUEST, jnp.int32),
-            mid=jnp.asarray(mids),
-            vid=jnp.asarray(vids),
-            rslt=jnp.full((B,), -1, jnp.int32),
-            rid=jnp.zeros((B,), jnp.int32),
-            features=jnp.asarray(feats),
-            codes=jnp.zeros((B, n_trees), jnp.uint32),
-            svm_acc=jnp.zeros((B, n_hyperplanes), jnp.int32),
+            packet_id=np.arange(B, dtype=np.uint32),
+            ptype=np.full((B,), PacketType.REQUEST, np.int32),
+            mid=np.ascontiguousarray(mids),
+            vid=np.ascontiguousarray(vids),
+            rslt=np.full((B,), -1, np.int32),
+            rid=np.zeros((B,), np.int32),
+            features=feats,
+            codes=np.zeros((B, n_trees), np.uint32),
+            svm_acc=np.zeros((B, n_hyperplanes), np.int32),
         )
 
     def strip_payload(self) -> "PacketBatch":

@@ -23,10 +23,17 @@ compiled shapes per executor — and delegates execution to a pluggable
 * ``ShardedExecutor``        — the 2D ``("switch", "port")`` mesh: pipeline
   along the path, data-parallel across ports.
 
+``policies.py`` holds the pluggable ``BatchingPolicy`` strategies
+(immediate / size-or-deadline / adaptive-bucket) the async serving front
+(``repro.serving.async_server``) coalesces traffic through; the
+``coalesce``/``split`` seam in ``admission.py`` lets them batch many
+per-client submits into one admitted bucket — same shapes, same O(log B)
+trace bound.
+
 This package is the **only** place in ``src/repro`` allowed to construct a
 ``shard_map`` classify loop (pinned by ``tests/test_runtime.py``).
 """
-from repro.runtime.admission import bucket_size, pad_to_bucket, trim
+from repro.runtime.admission import bucket_size, coalesce, pad_to_bucket, split, trim
 from repro.runtime.executors import (
     Executor,
     PipelinedExecutor,
@@ -35,6 +42,12 @@ from repro.runtime.executors import (
     SingleSwitchExecutor,
 )
 from repro.runtime.facade import DataplaneRuntime
+from repro.runtime.policies import (
+    AdaptiveBucketPolicy,
+    BatchingPolicy,
+    ImmediatePolicy,
+    SizeOrDeadlinePolicy,
+)
 
 __all__ = [
     "DataplaneRuntime",
@@ -43,7 +56,13 @@ __all__ = [
     "SequentialPathExecutor",
     "PipelinedExecutor",
     "ShardedExecutor",
+    "BatchingPolicy",
+    "ImmediatePolicy",
+    "SizeOrDeadlinePolicy",
+    "AdaptiveBucketPolicy",
     "bucket_size",
     "pad_to_bucket",
     "trim",
+    "coalesce",
+    "split",
 ]

@@ -12,15 +12,26 @@ passthrough gate leaves its ``rslt``/``codes``/``svm_acc`` untouched (paper
 semantically invisible and ``trim`` just slices it back off.  Net effect:
 any sequence of batch sizes ≤ B costs at most ``O(log B)`` traces per
 executor (pinned in ``tests/test_runtime.py``).
+
+``coalesce``/``split`` are the multi-client seam on the same invariant: an
+async serving front (``repro.serving.async_server``) concatenates several
+per-client request batches into one flat batch, runs it through the same
+bucketing, and splits the classified batch back per client.  Because
+classification is per-packet, coalescing is semantically invisible too —
+each client's slice is bit-identical to classifying its batch alone (pinned
+in ``tests/test_conformance.py``).
 """
 from __future__ import annotations
 
+from typing import Sequence
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.packets import PacketBatch
 
-__all__ = ["bucket_size", "pad_to_bucket", "trim"]
+__all__ = ["bucket_size", "pad_to_bucket", "trim", "coalesce", "split"]
 
 
 def bucket_size(batch: int, granularity: int = 1) -> int:
@@ -43,17 +54,29 @@ def pad_to_bucket(pb: PacketBatch, bucket: int) -> PacketBatch:
 
     The tail is zero-filled: ``ptype = FORWARD`` (0), zero features and
     intermediates — packets the plane forwards untouched by construction.
+
+    Host-resident leaves (numpy — what ``coalesce`` produces) pad with
+    numpy: a ``jnp.concatenate`` outside jit XLA-compiles once per
+    (batch, bucket) shape pair per leaf, which on a live serving front
+    turns every new ragged size into a ~100x glue stall before the warmed
+    classify trace even runs.  Device-resident leaves keep the jnp path so
+    the sync pipeline never forces a device -> host round-trip.
     """
     B = pb.batch
     if bucket < B:
         raise ValueError(f"bucket {bucket} smaller than batch {B}")
     if bucket == B:
         return pb
-    return jax.tree.map(
-        lambda x: jnp.concatenate(
+
+    def pad(x):
+        if isinstance(x, np.ndarray):
+            return np.concatenate(
+                [x, np.zeros((bucket - B,) + x.shape[1:], x.dtype)])
+        return jnp.concatenate(
             [jnp.asarray(x),
-             jnp.zeros((bucket - B,) + x.shape[1:], x.dtype)]),
-        pb)
+             jnp.zeros((bucket - B,) + x.shape[1:], x.dtype)])
+
+    return jax.tree.map(pad, pb)
 
 
 def trim(pb: PacketBatch, batch: int) -> PacketBatch:
@@ -61,3 +84,38 @@ def trim(pb: PacketBatch, batch: int) -> PacketBatch:
     if pb.batch == batch:
         return pb
     return jax.tree.map(lambda x: x[:batch], pb)
+
+
+def coalesce(batches: Sequence[PacketBatch]) -> tuple[PacketBatch, tuple[int, ...]]:
+    """Concatenate per-client request batches into one flat batch.
+
+    Returns ``(flat, offsets)`` where ``offsets`` has ``len(batches) + 1``
+    entries and client ``i``'s packets occupy ``flat[offsets[i]:offsets[i+1]]``
+    — the demux map ``split`` (and the async server's future demux) slices
+    by.  Empty member batches are legal and occupy an empty slice.
+    """
+    batches = list(batches)
+    if not batches:
+        raise ValueError("coalesce needs at least one batch")
+    offsets = [0]
+    for b in batches:
+        offsets.append(offsets[-1] + b.batch)
+    if len(batches) == 1:
+        return batches[0], tuple(offsets)
+    # Host-side numpy concatenation, deliberately: a jnp.concatenate over a
+    # varying number of ragged operands XLA-compiles per (count, shapes)
+    # signature — a serving front coalescing live traffic would recompile
+    # constantly and pay ~100x the classify cost in glue.  The flat batch is
+    # device_put once by the executor's jitted classify.
+    flat = jax.tree.map(
+        lambda *xs: np.concatenate([np.asarray(x) for x in xs]), *batches)
+    return flat, tuple(offsets)
+
+
+def split(pb: PacketBatch, offsets: Sequence[int]) -> list[PacketBatch]:
+    """Invert ``coalesce``: slice the flat batch back per client (device-side)."""
+    if not offsets or offsets[0] != 0 or offsets[-1] != pb.batch:
+        raise ValueError(
+            f"offsets {tuple(offsets)} do not tile a batch of {pb.batch}")
+    return [jax.tree.map(lambda x: x[lo:hi], pb)
+            for lo, hi in zip(offsets, offsets[1:])]

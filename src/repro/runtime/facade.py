@@ -19,11 +19,20 @@ pre-built device programs and reprogrammed wholesale via ``swap``.
 """
 from __future__ import annotations
 
+from typing import Sequence
+
+import jax
 import numpy as np
 
 from repro.core.packets import PacketBatch
 from repro.core.plane import PlaneProfile
-from repro.runtime.admission import bucket_size, pad_to_bucket, trim
+from repro.runtime.admission import (
+    bucket_size,
+    coalesce,
+    pad_to_bucket,
+    split,
+    trim,
+)
 from repro.runtime.executors import Executor, SingleSwitchExecutor
 
 __all__ = ["DataplaneRuntime"]
@@ -51,15 +60,63 @@ class DataplaneRuntime:
 
         Pads to the bucket shape (passthrough tail), executes, trims — the
         result stays on device (callers needing host values convert
-        explicitly, e.g. ``np.asarray(out.rslt)``).
+        explicitly, e.g. ``np.asarray(out.rslt)``).  An empty batch (B = 0,
+        the async front's empty submit) short-circuits: nothing to classify,
+        nothing traced.
         """
         B = batch.batch
+        if B == 0:
+            return batch
         out = self.executor.classify(pad_to_bucket(batch, self.bucket(B)))
         return trim(out, B)
 
     def results(self, batch: PacketBatch) -> np.ndarray:
         """``run`` + the one host round-trip serving fronts usually want."""
         return np.asarray(self.run(batch).rslt)
+
+    def run_host(self, batch: PacketBatch) -> PacketBatch:
+        """``run`` variant that lands the result on host (numpy leaves).
+
+        Same classification, different trim: the padded device result is
+        transferred once and the admission tail sliced off in numpy.  A
+        device-side trim (``run``) lazily compiles one slice kernel per
+        (bucket, batch) shape pair per leaf — fine for a handful of batch
+        shapes, but a live serving front sees a new ragged size on nearly
+        every coalesced dispatch and would stall ~tens of ms of glue compile
+        each time.  The async server always wants host values anyway, so it
+        trims here for free.
+        """
+        B = batch.batch
+        if B == 0:
+            return batch
+        # normalize leaves to host first so padding takes admission's numpy
+        # branch unconditionally — a lone device-leaf request (the
+        # single-batch coalesce fast path returns its input untouched)
+        # must not fall back to the per-ragged-shape jnp glue
+        batch = jax.tree.map(np.asarray, batch)
+        out = self.executor.classify(pad_to_bucket(batch, self.bucket(B)))
+        return jax.tree.map(lambda x: np.asarray(x)[:B], out)
+
+    # ------------------------------------------------------------ coalesce
+    # The multi-client seam batching policies dispatch through: several
+    # per-client request batches run as ONE admitted batch (one bucket, one
+    # executor call), then split back per client.  Policies thereby reuse
+    # the power-of-two bucketing — and its O(log B) trace bound — instead of
+    # inventing shapes of their own.
+    @staticmethod
+    def coalesce(batches: Sequence[PacketBatch]) -> tuple[PacketBatch, tuple[int, ...]]:
+        """Concatenate per-client batches; returns (flat batch, demux offsets)."""
+        return coalesce(batches)
+
+    def run_coalesced(self, batches: Sequence[PacketBatch]) -> list[PacketBatch]:
+        """Classify several per-client batches as one admitted batch.
+
+        Equivalent to ``[self.run(b) for b in batches]`` packet-for-packet
+        (classification is per-packet; pinned in ``tests/test_conformance.py``)
+        but costs one executor dispatch for the whole group.
+        """
+        flat, offsets = coalesce(batches)
+        return split(self.run(flat), offsets)
 
     # ------------------------------------------------------ control plane
     def install(self, program, *, vid: int | None = None,

@@ -1,3 +1,5 @@
+from repro.serving.async_server import AsyncResult, AsyncZooServer
 from repro.serving.serve import ZooServer, make_decode_step, make_prefill_step
 
-__all__ = ["ZooServer", "make_decode_step", "make_prefill_step"]
+__all__ = ["AsyncResult", "AsyncZooServer", "ZooServer", "make_decode_step",
+           "make_prefill_step"]

@@ -1,0 +1,297 @@
+"""``AsyncZooServer`` — the live request-stream front over a model zoo.
+
+The paper's serving story is end-to-end: models deploy once, then traffic
+arrives *continuously* and is classified at line rate (§1, §6).  The batch
+entry points (``ZooServer.classify``, the examples) model one tenant handing
+the plane a ready-made batch; this module models the plane's actual ingress
+side — many concurrent clients each submitting small ragged batches on an
+asyncio event loop, a ``BatchingPolicy`` (``repro.runtime.policies``)
+deciding when to cut a batch, and the runtime's coalesce seam
+(``DataplaneRuntime.coalesce`` / ``run``) turning the cut into exactly one
+admitted bucket dispatch.
+
+Data path of one dispatch::
+
+    submit(feats) --+                            +--> future.set_result
+    submit(feats) --+-> queue -> policy decides -+--> future.set_result
+    submit(feats) --+   (cut)    coalesce->run   +--> future.set_result
+                                 demux rslt/codes/svm_acc by offsets
+
+Invariants (pinned in ``tests/test_async_serving.py`` and the conformance
+harness ``tests/test_conformance.py``):
+
+* **bit-identity** — every request's ``rslt``/``codes``/``svm_acc`` equal a
+  synchronous ``DataplaneRuntime`` classify of the same packets, whatever
+  the policy coalesced them with;
+* **whole requests** — a client's batch is never split across dispatches;
+* **O(log B) traces** — dispatch sizes hit the executor only through
+  admission bucketing, so a traffic storm mints no new compiled shapes;
+* the blocking executor call runs in a worker thread
+  (``loop.run_in_executor``), so the event loop keeps accepting submits
+  while a batch classifies — that concurrency is where size-or-deadline
+  coalescing beats per-request dispatch at high offered load
+  (``benchmarks/serve_async.py``).
+
+Latency accounting: each request carries ``t_submit`` / ``t_dispatch`` /
+``t_done`` (event-loop monotonic clock); ``latency_stats()`` aggregates
+p50/p99 end-to-end latency, queue wait, and mean coalesced batch size.
+"""
+from __future__ import annotations
+
+import asyncio
+import collections
+import dataclasses
+
+import numpy as np
+
+from repro.core.packets import PacketBatch
+from repro.runtime import DataplaneRuntime, ImmediatePolicy
+from repro.runtime.policies import BatchingPolicy
+from repro.serving.serve import ZooServer
+
+__all__ = ["AsyncResult", "AsyncZooServer"]
+
+
+@dataclasses.dataclass
+class AsyncResult:
+    """One request's demuxed classification + its latency accounting."""
+
+    rslt: np.ndarray      # int32 [B]
+    codes: np.ndarray     # uint32 [B, T]
+    svm_acc: np.ndarray   # int32 [B, H]
+    t_submit: float       # event-loop clock (s)
+    t_dispatch: float
+    t_done: float
+
+    @property
+    def latency_s(self) -> float:
+        """End-to-end: submit -> result available."""
+        return self.t_done - self.t_submit
+
+    @property
+    def queue_wait_s(self) -> float:
+        """Coalescing delay the batching policy charged this request."""
+        return self.t_dispatch - self.t_submit
+
+
+class _Pending:
+    __slots__ = ("pb", "future", "t_submit")
+
+    def __init__(self, pb: PacketBatch, future: asyncio.Future,
+                 t_submit: float) -> None:
+        self.pb = pb
+        self.future = future
+        self.t_submit = t_submit
+
+
+class AsyncZooServer:
+    """Asyncio serving front over one ``ZooServer`` / ``DataplaneRuntime``.
+
+    Construction does not start serving; use ``async with`` (or ``start()``
+    / ``stop()``).  ``stop()`` drains: queued requests are flushed through a
+    final dispatch before the loop exits, so no future is left pending.
+
+    Control-plane writes (``install`` / ``evict``) pass through to the
+    wrapped ``ZooServer`` — an install between dispatches is exactly the
+    paper's runtime reprogrammability, now under live traffic.
+    """
+
+    def __init__(self, zoo: ZooServer, *,
+                 policy: BatchingPolicy | None = None,
+                 stats_window: int = 100_000) -> None:
+        self.zoo = zoo
+        self.policy = policy if policy is not None else ImmediatePolicy()
+        self._queue: collections.deque[_Pending] = collections.deque()
+        self._queued_packets = 0
+        self._arrival: asyncio.Event | None = None
+        self._task: asyncio.Task | None = None
+        self._closing = False
+        # bounded: a long-lived front at line rate must not grow its
+        # accounting without limit (stats_window = most recent requests /
+        # dispatches retained; counters below keep lifetime totals)
+        self._dispatch_log: collections.deque[tuple[int, int, float, float]] \
+            = collections.deque(maxlen=stats_window)
+        self._latencies: collections.deque[float] = \
+            collections.deque(maxlen=stats_window)
+        self._queue_waits: collections.deque[float] = \
+            collections.deque(maxlen=stats_window)
+        self._total_requests = 0
+        self._total_dispatches = 0
+
+    @property
+    def runtime(self) -> DataplaneRuntime:
+        return self.zoo.runtime
+
+    # ----------------------------------------------------------- lifecycle
+    async def start(self) -> "AsyncZooServer":
+        if self._task is not None:
+            raise RuntimeError("server already started")
+        self._closing = False
+        self._arrival = asyncio.Event()
+        self._task = asyncio.get_running_loop().create_task(
+            self._dispatch_loop(), name="async-zoo-dispatch")
+        return self
+
+    async def stop(self) -> None:
+        """Flush queued requests, then stop the dispatch loop."""
+        if self._task is None:
+            return
+        self._closing = True
+        self._arrival.set()
+        await self._task
+        self._task = None
+
+    async def __aenter__(self) -> "AsyncZooServer":
+        return await self.start()
+
+    async def __aexit__(self, *exc) -> None:
+        await self.stop()
+
+    # -------------------------------------------------------- control plane
+    def install(self, model_or_program, *, vid: int, tag: str = "") -> int:
+        return self.zoo.install(model_or_program, vid=vid, tag=tag)
+
+    def evict(self, *, vid: int, kind: str = "all") -> None:
+        self.zoo.evict(vid=vid, kind=kind)
+
+    # -------------------------------------------------------------- submit
+    async def submit(self, features, *, mid: int = 0, vid=0) -> AsyncResult:
+        """Classify one client's ragged feature batch; resolves when the
+        batching policy's dispatch completes."""
+        return await self.submit_batch(
+            self.zoo.make_request(features, mid=mid, vid=vid))
+
+    async def submit_batch(self, pb: PacketBatch) -> AsyncResult:
+        """Classify one pre-built ``PacketBatch`` (arbitrary ptype/vid mixes
+        — the conformance harness's entry point)."""
+        if self._task is None or self._closing:
+            raise RuntimeError("AsyncZooServer is not serving — use "
+                               "'async with AsyncZooServer(zoo) as srv'")
+        loop = asyncio.get_running_loop()
+        now = loop.time()
+        if pb.batch == 0:
+            # empty submit: nothing to classify, resolve immediately
+            return AsyncResult(
+                rslt=np.empty((0,), np.int32),
+                codes=np.asarray(pb.codes, np.uint32),
+                svm_acc=np.asarray(pb.svm_acc, np.int32),
+                t_submit=now, t_dispatch=now, t_done=now)
+        pending = _Pending(pb, loop.create_future(), now)
+        self._queue.append(pending)
+        self._queued_packets += pb.batch
+        self._arrival.set()
+        return await pending.future
+
+    # ------------------------------------------------------------ dispatch
+    def _classify_flat(self, flat: PacketBatch):
+        # run_host: one padded-result transfer, host-side trim — no
+        # per-ragged-shape slice compiles on the serving hot path
+        out = self.runtime.run_host(flat)
+        return out.rslt, out.codes, out.svm_acc
+
+    def _cut_batch(self) -> list[_Pending]:
+        """Pop whole requests up to the policy's drain limit (>= 1 request)."""
+        limit = max(int(self.policy.drain(self._queued_packets)), 1)
+        reqs: list[_Pending] = []
+        taken = 0
+        while self._queue and (
+                not reqs or taken + self._queue[0].pb.batch <= limit):
+            p = self._queue.popleft()
+            reqs.append(p)
+            taken += p.pb.batch
+        self._queued_packets -= taken
+        return reqs
+
+    async def _dispatch_loop(self) -> None:
+        loop = asyncio.get_running_loop()
+        while True:
+            if not self._queue:
+                if self._closing:
+                    return
+                self._arrival.clear()
+                await self._arrival.wait()
+                continue
+            # A broken BatchingPolicy (it is a user-implementable protocol)
+            # or coalesce failure must fail the affected futures loudly and
+            # leave the loop serving — NOT kill this task silently, which
+            # would hang every pending and future submit forever.
+            # (CancelledError is a BaseException and still propagates.)
+            reqs: list[_Pending] = []
+            try:
+                # ---- policy wait phase: hold for more traffic until the
+                # policy says cut (or the server is draining on stop()).
+                while self._queue and not self._closing:
+                    age_us = (loop.time() - self._queue[0].t_submit) * 1e6
+                    w = self.policy.wait_us(self._queued_packets, age_us)
+                    if w <= 0:
+                        break
+                    self._arrival.clear()
+                    try:
+                        await asyncio.wait_for(self._arrival.wait(), w / 1e6)
+                    except (asyncio.TimeoutError, TimeoutError):
+                        break   # deadline: cut what we have
+                if not self._queue:
+                    continue
+                reqs = self._cut_batch()
+                flat, offsets = self.runtime.coalesce([p.pb for p in reqs])
+            except Exception as e:
+                if not reqs:        # failed before the cut: fail the queue
+                    reqs = list(self._queue)
+                    self._queue.clear()
+                    self._queued_packets = 0
+                for p in reqs:
+                    if not p.future.done():
+                        p.future.set_exception(e)
+                continue
+            t_dispatch = loop.time()
+            waited_us = (t_dispatch - reqs[0].t_submit) * 1e6
+            try:
+                rslt, codes, acc = await loop.run_in_executor(
+                    None, self._classify_flat, flat)
+            except Exception as e:  # executor died: fail this batch's futures
+                for p in reqs:
+                    if not p.future.done():
+                        p.future.set_exception(e)
+                continue
+            t_done = loop.time()
+            try:
+                self.policy.note_dispatch(flat.batch, waited_us)
+            except Exception as e:  # broken feedback hook: surface it
+                for p in reqs:
+                    if not p.future.done():
+                        p.future.set_exception(e)
+                continue
+            self._dispatch_log.append(
+                (flat.batch, len(reqs), waited_us, t_done - t_dispatch))
+            self._total_dispatches += 1
+            for p, lo, hi in zip(reqs, offsets, offsets[1:]):
+                self._total_requests += 1
+                self._latencies.append(t_done - p.t_submit)
+                self._queue_waits.append(t_dispatch - p.t_submit)
+                if not p.future.done():   # client may have been cancelled
+                    p.future.set_result(AsyncResult(
+                        rslt=rslt[lo:hi], codes=codes[lo:hi],
+                        svm_acc=acc[lo:hi], t_submit=p.t_submit,
+                        t_dispatch=t_dispatch, t_done=t_done))
+
+    # --------------------------------------------------------------- stats
+    def latency_stats(self) -> dict:
+        """Aggregate latency accounting: p50/p99 end-to-end, queue wait,
+        dispatch count, and mean coalesced batch size.  ``requests`` /
+        ``dispatches`` are lifetime totals; the distribution numbers cover
+        the most recent ``stats_window`` of each."""
+        lat = np.asarray(self._latencies, float)
+        if lat.size == 0:
+            return {"requests": self._total_requests,
+                    "dispatches": self._total_dispatches}
+        waits = np.asarray(self._queue_waits, float)
+        batches = np.asarray([b for b, _, _, _ in self._dispatch_log], float)
+        return {
+            "requests": self._total_requests,
+            "dispatches": self._total_dispatches,
+            "p50_ms": float(np.percentile(lat, 50) * 1e3),
+            "p99_ms": float(np.percentile(lat, 99) * 1e3),
+            "mean_ms": float(lat.mean() * 1e3),
+            "p50_wait_ms": float(np.percentile(waits, 50) * 1e3),
+            "mean_batch_packets": float(batches.mean()),
+        }

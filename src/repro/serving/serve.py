@@ -114,7 +114,12 @@ class ZooServer:
             if kind in (pipeline, "all"):
                 self.versions.pop((pipeline, vid), None)
 
-    def _request(self, features, mid: int, vid) -> PacketBatch:
+    def make_request(self, features, *, mid: int = 0, vid=0) -> PacketBatch:
+        """Build a REQUEST batch sized to this zoo's plane profile.
+
+        The one request-construction path shared by the synchronous
+        ``classify`` and the async front (``AsyncZooServer.submit``), so
+        both serve bit-identical packets by construction."""
         prof = self.profile
         return PacketBatch.make_request(
             features, mid=mid, vid=vid, max_features=prof.max_features,
@@ -129,10 +134,22 @@ class ZooServer:
         instead of forcing the per-batch host round-trip — runtime-stacked
         callers (and sharded executors, whose results live across port
         devices) keep results on device and convert only at the edge."""
-        out = self.runtime.run(self._request(features, mid, vid))
+        out = self.runtime.run(self.make_request(features, mid=mid, vid=vid))
         if device_out:
             return out
         return np.asarray(out.rslt)
+
+    def classify_coalesced(self, requests) -> list[np.ndarray]:
+        """Classify several per-client request batches as ONE dispatch.
+
+        ``requests`` is a sequence of ``(features, mid, vid)`` triples; the
+        batches are coalesced through the runtime's admission seam (one
+        bucket, one executor call) and split back per client — the
+        synchronous twin of one ``AsyncZooServer`` batch dispatch, with the
+        same per-client results as calling ``classify`` once per triple
+        (pinned in ``tests/test_async_serving.py``)."""
+        pbs = [self.make_request(f, mid=m, vid=v) for f, m, v in requests]
+        return [np.asarray(out.rslt) for out in self.runtime.run_coalesced(pbs)]
 
     def classify_split(self, features, *, mid: int,
                        split: dict[int, float]) -> tuple[np.ndarray, np.ndarray]:

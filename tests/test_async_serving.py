@@ -1,0 +1,339 @@
+"""Async serving front: batching policies, coalesce seam, future demux.
+
+Every coroutine here runs through ``asyncio.run(..., debug=True)`` —
+asyncio's debug (strict) mode, which surfaces un-awaited coroutines, slow
+callbacks, and futures resolved from the wrong loop; CI additionally exports
+``PYTHONASYNCIODEBUG=1`` for the whole step.  Policies are tested purely
+(no event loop): the ``BatchingPolicy`` protocol is synchronous by design.
+
+Bit-identity of the async path against every executor substrate lives in
+``tests/test_conformance.py``; this module pins the serving mechanics:
+policy decisions, whole-request batching, demux offsets, drain-on-stop,
+error propagation, and the latency accounting surface.
+"""
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.core.mlmodels import DecisionTree, LinearSVM
+from repro.core.packets import PacketBatch
+from repro.core.plane import PlaneProfile
+from repro.core.translator import MID_SVM
+from repro.runtime import (
+    AdaptiveBucketPolicy,
+    BatchingPolicy,
+    ImmediatePolicy,
+    SizeOrDeadlinePolicy,
+    coalesce,
+    split,
+)
+from repro.serving import AsyncZooServer, ZooServer
+
+
+def run_async(coro):
+    """All async tests run under asyncio debug (strict) mode."""
+    return asyncio.run(coro, debug=True)
+
+
+def _profile(V=2):
+    return PlaneProfile(max_features=36, max_trees=4, max_layers=6,
+                        max_entries_per_layer=64, max_leaves=64,
+                        max_classes=8, max_hyperplanes=8, max_versions=V)
+
+
+@pytest.fixture(scope="module")
+def zoo(satdap):
+    Xtr, ytr, _, _ = satdap
+    z = ZooServer(_profile())
+    z.install(DecisionTree(max_depth=4, max_leaf_nodes=16).fit(Xtr, ytr),
+              vid=0)
+    z.install(LinearSVM(epochs=30).fit(Xtr, ytr), vid=0)
+    return z
+
+
+# ------------------------------------------------------------- policies
+def test_immediate_policy_never_waits_never_coalesces():
+    p = ImmediatePolicy()
+    assert p.wait_us(1, 0.0) <= 0
+    assert p.wait_us(1000, 1e6) <= 0
+    assert p.drain(37) == 1      # one whole request per dispatch
+    assert isinstance(p, BatchingPolicy)
+
+
+def test_size_or_deadline_policy_semantics():
+    p = SizeOrDeadlinePolicy(max_batch=16, max_wait_us=2_000)
+    assert p.wait_us(16, 0.0) <= 0          # size trigger
+    assert p.wait_us(40, 0.0) <= 0
+    assert p.wait_us(3, 2_500.0) <= 0       # deadline trigger
+    assert p.wait_us(3, 500.0) == pytest.approx(1_500.0)   # remaining budget
+    assert p.drain(40) == 16                # batches cap at max_batch
+    assert p.drain(3) == 3
+    assert isinstance(p, BatchingPolicy)
+    with pytest.raises(ValueError):
+        SizeOrDeadlinePolicy(max_batch=0)
+    with pytest.raises(ValueError):
+        SizeOrDeadlinePolicy(max_wait_us=-1)
+
+
+def test_adaptive_policy_widens_bucket_under_sustained_load():
+    p = AdaptiveBucketPolicy(min_batch=1, max_batch=128, max_wait_us=1_000,
+                             alpha=0.3)
+    assert p.target_batch == 1              # idle: immediate-like
+    assert p.wait_us(1, 0.0) <= 0
+    for _ in range(12):                     # sustained ~50-packet dispatches
+        p.note_dispatch(50, 500.0)
+    assert p.target_batch == 64             # next power-of-two bucket up
+    assert p.wait_us(10, 0.0) > 0           # now holds for a fuller bucket
+    assert p.wait_us(64, 0.0) <= 0
+    # load drops: one deadline flush below target snaps the estimate down —
+    # a lone request after a burst must not keep paying the deadline
+    p.note_dispatch(1, 1_000.0)
+    assert p.target_batch == 1
+    assert p.wait_us(1, 0.0) <= 0
+    for _ in range(12):                     # EWMA path still decays too
+        p.note_dispatch(50, 500.0)
+    assert p.target_batch == 64
+    for _ in range(40):
+        p.note_dispatch(1, 0.0)             # below-deadline trickle
+    assert p.target_batch == 1
+    assert isinstance(p, BatchingPolicy)
+
+
+def test_adaptive_policy_targets_are_admission_buckets():
+    p = AdaptiveBucketPolicy(min_batch=1, max_batch=100, granularity=4,
+                             alpha=1.0)
+    p.note_dispatch(13, 0.0)
+    assert p.target_batch == 16             # bucket_size(13, 4)
+    p.note_dispatch(100, 0.0)
+    # never above max_batch: drain() can't cut more, so a bucket-rounded
+    # 128 target would be unreachable and every dispatch would wait out
+    # the full deadline
+    assert p.target_batch == 100
+    assert p.wait_us(100, 0.0) <= 0
+    with pytest.raises(ValueError):
+        AdaptiveBucketPolicy(min_batch=8, max_batch=4)
+
+
+# ------------------------------------------------------- coalesce seam
+def test_coalesce_split_round_trip(satdap):
+    _, _, Xte, _ = satdap
+    prof = _profile()
+    pbs = [PacketBatch.make_request(Xte[lo:hi], mid=0,
+                                    max_features=prof.max_features,
+                                    n_trees=prof.max_trees,
+                                    n_hyperplanes=prof.max_hyperplanes)
+           for lo, hi in ((0, 5), (5, 5), (5, 17))]   # middle one is empty
+    flat, offsets = coalesce(pbs)
+    assert offsets == (0, 5, 5, 17)
+    assert flat.batch == 17
+    parts = split(flat, offsets)
+    assert [p.batch for p in parts] == [5, 0, 12]
+    for part, pb in zip(parts, pbs):
+        np.testing.assert_array_equal(np.asarray(part.features),
+                                      np.asarray(pb.features))
+    with pytest.raises(ValueError):
+        coalesce([])
+    with pytest.raises(ValueError):
+        split(flat, (0, 3))
+
+
+def test_classify_coalesced_matches_per_batch(zoo, satdap):
+    """The sync twin of one async dispatch: coalesced results equal one
+    classify call per client batch."""
+    _, _, Xte, _ = satdap
+    reqs = [(Xte[:9], 0, 0), (Xte[9:10], MID_SVM, 0), (Xte[10:31], 0, 0)]
+    outs = zoo.classify_coalesced(reqs)
+    for got, (f, m, v) in zip(outs, reqs):
+        np.testing.assert_array_equal(got, zoo.classify(f, mid=m, vid=v))
+
+
+# ------------------------------------------------------------ serving
+def test_async_results_bit_identical_and_demuxed(zoo, satdap):
+    """Concurrent ragged submits (tree + SVM traffic interleaved) demux to
+    exactly the synchronous per-batch results."""
+    _, _, Xte, _ = satdap
+    chunks = [(Xte[0:7], 0, 0), (Xte[7:8], MID_SVM, 0), (Xte[8:29], 0, 0),
+              (Xte[29:61], MID_SVM, 0), (Xte[61:64], 0, 0)]
+
+    async def main():
+        async with AsyncZooServer(
+                zoo, policy=SizeOrDeadlinePolicy(max_batch=64,
+                                                 max_wait_us=2_000)) as srv:
+            return await asyncio.gather(
+                *[srv.submit(f, mid=m, vid=v) for f, m, v in chunks])
+
+    outs = run_async(main())
+    for out, (f, m, v) in zip(outs, chunks):
+        want = zoo.classify(f, mid=m, vid=v, device_out=True)
+        np.testing.assert_array_equal(out.rslt, np.asarray(want.rslt))
+        np.testing.assert_array_equal(out.codes, np.asarray(want.codes))
+        np.testing.assert_array_equal(out.svm_acc, np.asarray(want.svm_acc))
+        assert out.t_submit <= out.t_dispatch <= out.t_done
+        assert out.latency_s >= out.queue_wait_s >= 0
+
+
+def test_size_policy_coalesces_concurrent_submits(zoo, satdap):
+    """Many small concurrent submits under a size-or-deadline policy land in
+    far fewer dispatches; whole requests are never split."""
+    _, _, Xte, _ = satdap
+
+    async def main():
+        async with AsyncZooServer(
+                zoo, policy=SizeOrDeadlinePolicy(max_batch=32,
+                                                 max_wait_us=50_000)) as srv:
+            outs = await asyncio.gather(
+                *[srv.submit(Xte[i:i + 2], mid=0, vid=0) for i in range(24)])
+            return outs, srv.latency_stats()
+
+    outs, stats = run_async(main())
+    assert stats["requests"] == 24
+    assert stats["dispatches"] <= 4, \
+        f"48 packets under max_batch=32 should coalesce, got {stats}"
+    assert stats["mean_batch_packets"] >= 12
+    for i, out in enumerate(outs):
+        assert out.rslt.shape == (2,)       # whole request, one future
+        np.testing.assert_array_equal(
+            out.rslt, zoo.classify(Xte[i:i + 2], mid=0, vid=0))
+
+
+def test_empty_submit_resolves_immediately(zoo):
+    async def main():
+        async with AsyncZooServer(zoo) as srv:
+            out = await srv.submit(np.zeros((0, 36), np.int32), mid=0, vid=0)
+            return out, srv.latency_stats()
+
+    out, stats = run_async(main())
+    assert out.rslt.shape == (0,)
+    assert out.codes.shape[0] == 0 and out.svm_acc.shape[0] == 0
+    assert out.latency_s == 0.0
+    assert stats["requests"] == 0           # nothing was queued or dispatched
+
+
+def test_stop_drains_pending_requests(zoo, satdap):
+    """stop() flushes the queue through a final dispatch — no future is left
+    pending, even with a deadline policy mid-wait."""
+    _, _, Xte, _ = satdap
+
+    async def main():
+        srv = AsyncZooServer(zoo, policy=SizeOrDeadlinePolicy(
+            max_batch=4096, max_wait_us=60_000_000))   # would wait a minute
+        await srv.start()
+        tasks = [asyncio.create_task(srv.submit(Xte[i:i + 3], mid=0, vid=0))
+                 for i in range(5)]
+        await asyncio.sleep(0.01)           # let submits enqueue
+        await srv.stop()                    # drain overrides the deadline
+        return await asyncio.gather(*tasks)
+
+    outs = run_async(main())
+    assert len(outs) == 5
+    for i, out in enumerate(outs):
+        np.testing.assert_array_equal(
+            out.rslt, zoo.classify(Xte[i:i + 3], mid=0, vid=0))
+
+
+def test_submit_without_start_raises(zoo, satdap):
+    _, _, Xte, _ = satdap
+    srv = AsyncZooServer(zoo)
+
+    async def main():
+        with pytest.raises(RuntimeError, match="not serving"):
+            await srv.submit(Xte[:2], mid=0, vid=0)
+
+    run_async(main())
+
+
+def test_executor_failure_propagates_to_futures(satdap):
+    """A dispatch that blows up inside the executor must fail that batch's
+    futures with the original exception — and leave the loop serving."""
+    _, _, Xte, _ = satdap
+    prof = _profile()
+    z = ZooServer(prof)
+
+    class Boom(RuntimeError):
+        pass
+
+    async def main():
+        async with AsyncZooServer(z) as srv:
+            orig = srv.runtime.executor.classify
+            srv.runtime.executor.classify = lambda pb: (_ for _ in ()).throw(
+                Boom("kernel died"))
+            with pytest.raises(Boom):
+                await srv.submit(Xte[:4], mid=0, vid=0)
+            srv.runtime.executor.classify = orig    # loop survived the error
+            out = await srv.submit(Xte[:4], mid=0, vid=0)
+            return out
+
+    out = run_async(main())
+    assert out.rslt.shape == (4,)
+
+
+def test_broken_policy_fails_futures_not_the_loop(zoo, satdap):
+    """BatchingPolicy is a user-implementable protocol: a policy that raises
+    must fail the affected futures loudly and leave the dispatch loop
+    serving — never kill the loop and hang every later submit."""
+    _, _, Xte, _ = satdap
+
+    class BrokenWait(ImmediatePolicy):
+        def wait_us(self, queued_packets, oldest_age_us):
+            raise ZeroDivisionError("bad policy math")
+
+    class BrokenFeedback(ImmediatePolicy):
+        def note_dispatch(self, packets, waited_us):
+            raise KeyError("bad feedback hook")
+
+    async def main():
+        async with AsyncZooServer(zoo, policy=BrokenWait()) as srv:
+            with pytest.raises(ZeroDivisionError):
+                await srv.submit(Xte[:3], mid=0, vid=0)
+            srv.policy = BrokenFeedback()
+            with pytest.raises(KeyError):
+                await srv.submit(Xte[:3], mid=0, vid=0)
+            srv.policy = ImmediatePolicy()   # loop survived both failures
+            return await srv.submit(Xte[:3], mid=0, vid=0)
+
+    out = run_async(main())
+    np.testing.assert_array_equal(out.rslt, zoo.classify(Xte[:3], mid=0,
+                                                         vid=0))
+
+
+def test_install_between_dispatches_under_live_traffic(zoo, satdap):
+    """Runtime reprogrammability through the async front: an install between
+    dispatches changes subsequent answers, zero retrace."""
+    Xtr, ytr, Xte, _ = satdap
+    prof = _profile()
+    z = ZooServer(prof)
+    z.install(DecisionTree(max_depth=4, max_leaf_nodes=16).fit(Xtr, ytr),
+              vid=0)
+
+    async def main():
+        async with AsyncZooServer(z) as srv:
+            before = await srv.submit(Xte[:16], mid=0, vid=1)
+            srv.install(DecisionTree(max_depth=6, max_leaf_nodes=40)
+                        .fit(Xtr, ytr), vid=1, tag="canary")
+            after = await srv.submit(Xte[:16], mid=0, vid=1)
+            return before, after
+
+    before, after = run_async(main())
+    assert (before.rslt == -1).all()        # slot was empty
+    np.testing.assert_array_equal(after.rslt,
+                                  z.classify(Xte[:16], mid=0, vid=1))
+    assert z.cache_size() == 1              # one bucket trace, no recompile
+
+
+def test_latency_stats_surface(zoo, satdap):
+    _, _, Xte, _ = satdap
+
+    async def main():
+        async with AsyncZooServer(zoo) as srv:
+            await asyncio.gather(
+                *[srv.submit(Xte[i:i + 4], mid=0, vid=0) for i in range(6)])
+            return srv.latency_stats()
+
+    stats = run_async(main())
+    assert stats["requests"] == 6
+    assert stats["dispatches"] >= 1
+    for key in ("p50_ms", "p99_ms", "mean_ms", "p50_wait_ms",
+                "mean_batch_packets"):
+        assert stats[key] >= 0.0
+    assert stats["p50_ms"] <= stats["p99_ms"]

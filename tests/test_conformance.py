@@ -1,0 +1,289 @@
+"""Cross-executor property-test harness (ISSUE-5 acceptance pin).
+
+Seeded-numpy generators (PR-1 convention — no hypothesis) draw random
+programs (DT / RF / SVM across V ∈ {1, 4, 8} zoo slots) and ragged packet
+batches with passthrough and invalid-VID mixes; every drawn case must come
+out **bit-identical** through
+
+* all four ``repro.runtime`` executors (single / sequential-path /
+  pipelined / sharded), admission-bucketed through ``DataplaneRuntime``, and
+* the ``AsyncZooServer`` front (per-client chunks coalesced by a batching
+  policy, demuxed back to futures),
+
+against the ``kernels.ref`` oracle (``SwitchEngine(mode="ref")`` on the
+unpadded batch).  ≥ 200 cases total.
+
+On failure the harness *shrinks*: classification is per-packet, so the first
+mismatching packet is re-run alone (B = 1) against the oracle and a
+single-packet repro string is printed —
+
+    CONFORMANCE REPRO V=4 case=17 seed=28693 substrate=sharded field=rslt ...
+
+rerun one case with ``CONFORMANCE_ONLY="V=4,case=17"``.
+
+Cost control: executors, oracle engine, and the async server are built once
+per V and **reprogrammed via swap()** each case (the paper's zero-retrace
+reployment), so compiled traces amortize across all cases; ragged batch
+sizes come from a fixed menu so the trace count stays O(log B) per
+substrate.
+"""
+import asyncio
+import dataclasses
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.mlmodels import DecisionTree, LinearSVM, RandomForest
+from repro.core.packets import PacketBatch, PacketType
+from repro.core.plane import (
+    PlaneProfile,
+    SwitchEngine,
+    empty_program,
+    install_program,
+)
+from repro.core.translator import translate
+from repro.runtime import DataplaneRuntime, SizeOrDeadlinePolicy
+from repro.runtime.executors import (
+    PipelinedExecutor,
+    SequentialPathExecutor,
+    ShardedExecutor,
+    SingleSwitchExecutor,
+)
+from repro.serving import AsyncZooServer, ZooServer
+
+N_CASES = {1: 72, 4: 72, 8: 60}          # 204 drawn cases total (>= 200)
+SIZES = (1, 2, 3, 5, 7, 12, 17, 24, 33, 48)   # ragged batch menu
+FIELDS = ("rslt", "codes", "svm_acc")
+N_SEQ_DEV = 3                            # sequential-path hop count
+N_FEATURES = 10
+
+
+def _seed(V: int, case: int) -> int:
+    return 7919 * V + case
+
+
+def _profile(V: int) -> PlaneProfile:
+    return PlaneProfile(max_features=N_FEATURES, max_trees=3, max_layers=6,
+                        max_entries_per_layer=32, max_leaves=32,
+                        max_classes=8, max_hyperplanes=8, max_versions=V)
+
+
+def _fit_random_model(kind: str, rng: np.random.Generator, seed: int):
+    """A random tiny model on random data — the program generator."""
+    n_classes = int(rng.integers(2, 5))   # ovo SVM: <= 4*3/2 = 6 hyperplanes
+    X = rng.integers(0, 256, (60, N_FEATURES)).astype(np.int32)
+    y = rng.integers(0, n_classes, 60).astype(np.int64)
+    y[:n_classes] = np.arange(n_classes)  # every class present
+    if kind == "dt":
+        return DecisionTree(max_depth=int(rng.integers(2, 5)),
+                            max_leaf_nodes=int(rng.integers(6, 20))).fit(X, y)
+    if kind == "rf":
+        return RandomForest(n_estimators=int(rng.integers(2, 4)),
+                            max_depth=int(rng.integers(2, 4)),
+                            max_leaf_nodes=10, random_state=seed).fit(X, y)
+    return LinearSVM(epochs=8, random_state=seed).fit(X, y)
+
+
+def _split_stages(progs, profile, n_dev):
+    """Contiguous stage split in path order (as in tests/test_runtime.py)."""
+    dps = []
+    for d in range(n_dev):
+        packed = empty_program(profile)
+        for prog in progs:
+            chunks = np.array_split(np.arange(len(prog.stages())), n_dev)
+            stages = set(chunks[d].tolist())
+            if stages:
+                packed = install_program(packed, prog, profile,
+                                         stages=stages, vid=prog.vid)
+        dps.append(packed)
+    return dps
+
+
+def _draw_case(V: int, case: int, profile: PlaneProfile):
+    """One property draw: (seed, installed programs, full packed, traffic)."""
+    seed = _seed(V, case)
+    rng = np.random.default_rng(seed)
+
+    # ---- random zoo: 1..min(V,3) programs in distinct version slots
+    n_prog = int(rng.integers(1, min(V, 3) + 1))
+    vids = rng.choice(V, size=n_prog, replace=False)
+    progs = []
+    for v in vids:
+        kind = str(rng.choice(["dt", "rf", "svm"]))
+        model = _fit_random_model(kind, rng, seed)
+        progs.append(translate(model, vid=int(v)))
+    packed = empty_program(profile)
+    for prog in progs:
+        packed = install_program(packed, prog, profile, vid=prog.vid)
+
+    # ---- ragged traffic aimed at the installed (MID, VID) pairs
+    B = int(SIZES[rng.integers(len(SIZES))])
+    X = rng.integers(0, 256, (B, N_FEATURES)).astype(np.int32)
+    pick = rng.integers(0, n_prog, B)
+    mids = np.asarray([progs[c].mid for c in pick], np.int32)
+    pvids = np.asarray([progs[c].vid for c in pick], np.int32)
+    # invalid-VID mix: out-of-range slots and empty (never-installed) slots
+    # must all answer rslt = -1 through every substrate
+    bad = rng.random(B) < 0.2
+    bad_vids = rng.choice(np.asarray([-1, V, V + 3], np.int32), B)
+    if n_prog < V:
+        empty_slots = np.setdiff1d(np.arange(V, dtype=np.int32), vids)
+        swap_in = rng.random(B) < 0.5
+        bad_vids = np.where(swap_in, rng.choice(empty_slots, B), bad_vids)
+    pvids = np.where(bad, bad_vids, pvids)
+    pb = PacketBatch.make_request(X, mid=mids, vid=pvids,
+                                  max_features=profile.max_features,
+                                  n_trees=profile.max_trees,
+                                  n_hyperplanes=profile.max_hyperplanes)
+    # passthrough mix: FORWARD / RESPONSE packets with nonzero intermediates
+    # must come out untouched (paper §6.1)
+    ptype = np.where(rng.random(B) < 0.2, PacketType.FORWARD,
+                     PacketType.REQUEST)
+    ptype = np.where(rng.random(B) < 0.1, PacketType.RESPONSE, ptype)
+    passthru = ptype != PacketType.REQUEST
+    pb = dataclasses.replace(
+        pb,
+        ptype=np.asarray(ptype, np.int32),
+        codes=np.asarray(np.where(passthru[:, None],
+                                  rng.integers(0, 2**10, (B, profile.max_trees)),
+                                  0), np.uint32),
+        svm_acc=np.asarray(np.where(passthru[:, None],
+                                    rng.integers(-50, 50,
+                                                 (B, profile.max_hyperplanes)),
+                                    0), np.int32),
+        rslt=np.asarray(np.where(passthru, rng.integers(0, 8, B), -1),
+                        np.int32),
+    )
+    return seed, progs, packed, pb
+
+
+def _repro_filter():
+    """CONFORMANCE_ONLY="V=4,case=17" reruns exactly one drawn case."""
+    spec = os.environ.get("CONFORMANCE_ONLY", "")
+    out = {}
+    for part in spec.split(","):
+        if "=" in part:
+            k, v = part.split("=", 1)
+            out[k.strip()] = int(v)
+    return out
+
+
+def _shrink_and_fail(V, case, seed, substrate, field, pb, out, want,
+                     classify_one):
+    """Localize the first mismatching packet, re-run it alone, fail with a
+    single-packet repro string."""
+    got = np.asarray(getattr(out, field))
+    exp = np.asarray(getattr(want, field))
+    bad = np.argwhere(
+        (got != exp).reshape(got.shape[0], -1).any(axis=1)).ravel()
+    i = int(bad[0])
+    pb1 = jax.tree.map(lambda x: np.asarray(x)[i:i + 1], pb)
+    try:
+        out1, want1 = classify_one(pb1)
+        g1 = np.asarray(getattr(out1, field))
+        w1 = np.asarray(getattr(want1, field))
+        shrunk = "reproduces at B=1" if (g1 != w1).any() else \
+            "does NOT reproduce at B=1 (batch-coupling bug)"
+    except Exception as e:  # the shrink run itself may crash — still report
+        shrunk = f"B=1 rerun raised {type(e).__name__}: {e}"
+    pytest.fail(
+        f"CONFORMANCE REPRO V={V} case={case} seed={seed} "
+        f"substrate={substrate} field={field} packet={i}/{got.shape[0]} "
+        f"mid={int(np.asarray(pb.mid)[i])} vid={int(np.asarray(pb.vid)[i])} "
+        f"ptype={int(np.asarray(pb.ptype)[i])} "
+        f"got={got[i]!r} want={exp[i]!r} [{shrunk}] — rerun with "
+        f'CONFORMANCE_ONLY="V={V},case={case}"')
+
+
+@pytest.fixture(scope="module", params=sorted(N_CASES), ids=lambda v: f"V{v}")
+def harness(request):
+    """Per-V substrate pool, reprogrammed via swap() for every drawn case."""
+    V = request.param
+    prof = _profile(V)
+    empties = [empty_program(prof) for _ in range(N_SEQ_DEV)]
+    single = SingleSwitchExecutor(prof, packed=empty_program(prof))
+    executors = {
+        "single": single,
+        "sequential": SequentialPathExecutor(list(empties),
+                                             n_classes=prof.max_classes),
+        "pipelined": PipelinedExecutor([empty_program(prof)],
+                                       n_classes=prof.max_classes, n_micro=2),
+        "sharded": ShardedExecutor([empty_program(prof)],
+                                   n_classes=prof.max_classes,
+                                   n_ports=1, n_micro=2),
+    }
+    runtimes = {name: DataplaneRuntime(ex) for name, ex in executors.items()}
+    zoo = ZooServer(prof, executor=single)    # shares the single jit cache
+    oracle = SwitchEngine(prof, mode="ref")   # kernels.ref, unpadded shapes
+    return V, prof, executors, runtimes, zoo, oracle
+
+
+async def _serve_async(zoo, pb, rng):
+    """Submit the case's traffic as 1-3 ragged client chunks through the
+    async front; return the demuxed results re-concatenated in order."""
+    policy = SizeOrDeadlinePolicy(max_batch=32, max_wait_us=500.0)
+    B = pb.batch
+    n_chunks = int(rng.integers(1, min(3, B) + 1))
+    cuts = sorted(rng.choice(np.arange(1, B), size=n_chunks - 1,
+                             replace=False).tolist()) if n_chunks > 1 else []
+    bounds = [0] + cuts + [B]
+    chunks = [jax.tree.map(lambda x: np.asarray(x)[lo:hi], pb)
+              for lo, hi in zip(bounds, bounds[1:])]
+    async with AsyncZooServer(zoo, policy=policy) as srv:
+        outs = await asyncio.gather(
+            *[srv.submit_batch(c) for c in chunks])
+    return (np.concatenate([o.rslt for o in outs]),
+            np.concatenate([o.codes for o in outs]),
+            np.concatenate([o.svm_acc for o in outs]))
+
+
+def test_conformance_cross_executor_and_async(harness):
+    """>= 200 drawn cases: four executors + the async server, bit-identical
+    to the kernels.ref oracle, passthrough and invalid VIDs included."""
+    V, prof, executors, runtimes, zoo, oracle = harness
+    only = _repro_filter()
+    if only.get("V") not in (None, V):
+        pytest.skip(f"CONFORMANCE_ONLY pins V={only['V']}")
+    cases = ([only["case"]] if only.get("case") is not None
+             else range(N_CASES[V]))
+    for case in cases:
+        seed, progs, packed, pb = _draw_case(V, case, prof)
+        want = oracle.classify(packed, pb)
+
+        executors["single"].swap([packed])
+        executors["sequential"].swap(_split_stages(progs, prof, N_SEQ_DEV))
+        executors["pipelined"].swap([packed])
+        executors["sharded"].swap([packed])
+
+        for name, rt in runtimes.items():
+            out = rt.run(pb)
+            for field in FIELDS:
+                if not (np.asarray(getattr(out, field))
+                        == np.asarray(getattr(want, field))).all():
+                    def classify_one(pb1, _rt=rt):
+                        return _rt.run(pb1), oracle.classify(packed, pb1)
+                    _shrink_and_fail(V, case, seed, name, field, pb, out,
+                                     want, classify_one)
+
+        rng = np.random.default_rng(seed + 1)
+        a_rslt, a_codes, a_acc = asyncio.run(_serve_async(zoo, pb, rng))
+        got_async = dataclasses.replace(pb, rslt=a_rslt, codes=a_codes,
+                                        svm_acc=a_acc)
+        for field in FIELDS:
+            if not (np.asarray(getattr(got_async, field))
+                    == np.asarray(getattr(want, field))).all():
+                def classify_one(pb1):
+                    r, c, a = asyncio.run(_serve_async(
+                        zoo, pb1, np.random.default_rng(0)))
+                    return (dataclasses.replace(pb1, rslt=r, codes=c,
+                                                svm_acc=a),
+                            oracle.classify(packed, pb1))
+                _shrink_and_fail(V, case, seed, "async", field, pb,
+                                 got_async, want, classify_one)
+
+
+def test_conformance_draw_count():
+    """The harness contract: at least 200 drawn cases across the V sweep."""
+    assert sum(N_CASES.values()) >= 200

@@ -133,3 +133,95 @@ def test_weights_shift_optimum(models, net):
     lat = plan_program(prog, net, src, dst, weights=(1, 0, 0), solver="dp")
     ovh = plan_program(prog, net, src, dst, weights=(0, 0, 1), solver="dp")
     assert ovh.breakdown["last_pos"] <= lat.breakdown["last_pos"]
+
+
+# ---------------------------------------------------- differential (ISSUE 5)
+@pytest.fixture(scope="module")
+def small_models(satdap):
+    """Tiny models so the MILP stays fast across many randomized draws."""
+    Xtr, ytr, _, _ = satdap
+    dt = DecisionTree(max_depth=4, max_leaf_nodes=14).fit(Xtr, ytr)
+    rf = RandomForest(n_estimators=3, max_depth=3, max_leaf_nodes=8).fit(Xtr, ytr)
+    svm = LinearSVM(epochs=30).fit(Xtr, ytr)
+    return [translate(dt), translate(rf), translate(svm)]
+
+
+def _random_topology(rng):
+    mk = [lambda: fat_tree(4),
+          lambda: dcell(3, 1),
+          lambda: bcube(3, 1),
+          lambda: jellyfish(int(rng.integers(12, 22)), 3,
+                            seed=int(rng.integers(0, 100)))]
+    return mk[int(rng.integers(len(mk)))]()
+
+
+def test_differential_milp_equals_dp_random(small_models):
+    """Randomized topologies / endpoints / capacities: the paper's MILP and
+    the beyond-paper DP must return equal-objective plans on every draw (or
+    agree a draw is infeasible)."""
+    rng = np.random.default_rng(1105)
+    draws = 0
+    attempts = 0
+    while draws < 12 and attempts < 60:
+        attempts += 1
+        net = _random_topology(rng)
+        hosts = net.hosts()
+        src, dst = rng.choice(hosts, size=2, replace=False)
+        dev = DeviceModel(n_stages=int(rng.integers(3, 9)))
+        prog = small_models[int(rng.integers(len(small_models)))]
+        kw = dict(default_device=dev, n_candidate_paths=2)
+        try:
+            a = plan_program(prog, net, src, dst, solver="dp", **kw)
+        except RuntimeError:
+            with pytest.raises(RuntimeError):   # infeasibility must agree
+                plan_program(prog, net, src, dst, solver="milp", **kw)
+            continue   # infeasible draws don't count toward the quota
+        b = plan_program(prog, net, src, dst, solver="milp", **kw)
+        assert abs(a.objective - b.objective) < 1e-9, (
+            f"solver gap on draw {draws}: dp={a.objective} milp={b.objective} "
+            f"({prog.kind}, n_stages={dev.n_stages}, {src}->{dst})")
+        draws += 1
+    assert draws >= 8, \
+        f"only {draws} feasible differential draws out of {attempts}"
+
+
+def test_replan_fault_injection_random(small_models):
+    """Kill 1-2 devices of a live plan: the replan must exclude every failed
+    device and still fit each survivor's stage capacity."""
+    rng = np.random.default_rng(2211)
+    injections = 0
+    attempts = 0
+    while injections < 8 and attempts < 40:
+        attempts += 1
+        net = _random_topology(rng)
+        hosts = net.hosts()
+        src, dst = rng.choice(hosts, size=2, replace=False)
+        dev = DeviceModel(n_stages=int(rng.integers(3, 6)))
+        prog = small_models[int(rng.integers(2))]   # dt / rf spread stages
+        kw = dict(default_device=dev, n_candidate_paths=2)
+        try:
+            plan = plan_program(prog, net, src, dst, solver="dp", **kw)
+        except RuntimeError:
+            continue
+        used = plan.breakdown["devices_used"]
+        # never kill the host-adjacent edge switches — those are cut
+        # vertices, covered by test_replan_infeasible_when_cut_vertex_dies
+        killable = [d for d in used if d not in (plan.path[1], plan.path[-2])]
+        if not killable:
+            continue
+        n_kill = min(len(killable), int(rng.integers(1, 3)))
+        failed = set(rng.choice(killable, size=n_kill, replace=False))
+        try:
+            plan2 = replan(prog, net, src, dst, failed, solver="dp", **kw)
+        except RuntimeError:
+            continue   # path genuinely lost — exclusion honored by absence
+        assert not (set(plan2.path) & failed), \
+            f"replanned path routes through dead devices {failed}"
+        assert not (set(plan2.assignment.values()) & failed), \
+            f"replanned assignment uses dead devices {failed}"
+        per_dev = plan2.device_stages()
+        assert all(len(s) <= dev.n_stages for s in per_dev.values()), \
+            "replanned placement overflows a device's stage capacity"
+        injections += 1
+    assert injections >= 4, \
+        f"only {injections} usable fault-injection draws out of {attempts}"

@@ -218,6 +218,56 @@ def test_ragged_admission_bit_identical_one_trace_per_bucket(satdap):
     assert rt.cache_size() == len(buckets)
 
 
+def test_admission_edge_cases_no_extra_traces(satdap):
+    """ISSUE-5 regressions on the admission boundary, checked against the
+    same trace-counting hook (``cache_size``) as the bucketing test:
+
+    * B = 0 (the async front's empty submit) short-circuits — nothing
+      classified, nothing traced;
+    * B exactly on a bucket boundary pads nothing and costs one trace;
+    * B = 1 right after a large batch gets its own small bucket instead of
+      riding the big one — and the whole sequence stays within the
+      O(log B_max) trace bound."""
+    Xtr, ytr, Xte, _ = satdap
+    prof = _profile(1)
+    dt = DecisionTree(max_depth=4, max_leaf_nodes=16).fit(Xtr, ytr)
+    prog = translate(dt)
+    packed = install_program(empty_program(prof), prog, prof)
+    rt = DataplaneRuntime(SingleSwitchExecutor(prof, packed=packed))
+
+    def req(B):
+        X = np.tile(Xte, (B // max(Xte.shape[0], 1) + 1, 1))[:B] \
+            if B else Xte[:0]
+        return PacketBatch.make_request(X, mid=prog.mid, max_features=36,
+                                        n_trees=prof.max_trees,
+                                        n_hyperplanes=prof.max_hyperplanes)
+
+    # ---- B = 0: empty submit returns the empty batch untouched, no trace
+    empty = rt.run(req(0))
+    assert empty.batch == 0
+    assert rt.cache_size() == 0, "an empty batch must not reach the executor"
+    assert np.asarray(rt.results(req(0))).shape == (0,)
+
+    # ---- B on the bucket boundary: zero padding, one trace
+    assert rt.bucket(64) == 64
+    out = rt.run(req(64))
+    assert out.batch == 64
+    assert rt.cache_size() == 1
+
+    # ---- B = 1 after a large batch: own bucket, no thrash on replay
+    big = rt.run(req(512))
+    assert big.batch == 512 and rt.bucket(512) == 512
+    one = rt.run(req(1))
+    assert one.batch == 1 and rt.bucket(1) == 1
+    assert np.asarray(one.rslt)[0] == dt.predict(np.asarray(Xte[:1]))[0]
+    assert rt.cache_size() == 3          # buckets {64, 512, 1}
+    for B in (1, 64, 512, 1):            # replays mint nothing
+        rt.run(req(B))
+    assert rt.cache_size() == 3
+    # O(log B) bound: traces never exceed log2(max bucket) + 1
+    assert rt.cache_size() <= int(np.log2(512)) + 1
+
+
 # ----------------------------------------------- pipelined compile thrash
 def test_pipelined_memoizes_per_n_micro(satdap):
     """Alternating microbatch counts reuses each compiled pipeline instead
