@@ -1,8 +1,18 @@
-from repro.analysis.roofline import (
-    HW,
-    collective_bytes_from_hlo,
-    roofline_terms,
-    model_flops,
-)
+"""Analysis tools: the roofline model and the planelint contract checker.
 
-__all__ = ["HW", "collective_bytes_from_hlo", "roofline_terms", "model_flops"]
+Roofline re-exports are lazy (PEP 562): ``repro.analysis.roofline`` imports
+jax, and the planelint CLI (``python -m repro.analysis.lint``) must stay
+importable in a bare CI environment with no accelerator runtime.
+"""
+_ROOFLINE = ("HW", "collective_bytes_from_hlo", "roofline_terms",
+             "model_flops")
+
+__all__ = list(_ROOFLINE)
+
+
+def __getattr__(name):
+    if name in _ROOFLINE:
+        from repro.analysis import roofline
+
+        return getattr(roofline, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

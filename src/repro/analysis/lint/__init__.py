@@ -1,0 +1,36 @@
+"""planelint — AST contract checker for the ARCHITECTURE invariants.
+
+Run it as a module::
+
+    PYTHONPATH=src python -m repro.analysis.lint [--rule PL001 ...]
+                                                 [--format text|json] [paths]
+
+or call :func:`run_lint` directly.  Rules are pluggable (see
+``repro.analysis.lint.core.Rule`` and ``@register``); the shipped set is
+documented in ``repro.analysis.lint.rules`` and in ``docs/ARCHITECTURE.md``
+("Static contracts").  Per-line suppression:
+``# planelint: disable=PL002`` (comma-separate ids; ``disable=all``).
+"""
+from repro.analysis.lint.core import (
+    REGISTRY,
+    FileContext,
+    Finding,
+    Rule,
+    all_rules,
+    iter_files,
+    register,
+    resolve_rules,
+    run_lint,
+)
+
+__all__ = [
+    "REGISTRY",
+    "FileContext",
+    "Finding",
+    "Rule",
+    "all_rules",
+    "iter_files",
+    "register",
+    "resolve_rules",
+    "run_lint",
+]

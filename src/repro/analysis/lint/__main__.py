@@ -1,0 +1,72 @@
+"""planelint CLI: ``python -m repro.analysis.lint``.
+
+Exit codes: 0 clean, 1 findings, 2 usage/IO error (argparse convention).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from repro.analysis.lint.core import all_rules, run_lint
+
+
+def _default_path() -> Path:
+    # .../src/repro/analysis/lint/__main__.py -> .../src/repro
+    return Path(__file__).resolve().parents[2]
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="Statically check the ARCHITECTURE contracts "
+                    "(shard_map containment, hot-path numpy glue, VMEM "
+                    "budgets, async-safety, retrace hazards).")
+    parser.add_argument(
+        "paths", nargs="*", type=Path,
+        help="files or directories to lint (default: the repro package)")
+    parser.add_argument(
+        "--rule", action="append", metavar="ID",
+        help="run only this rule (id or name; repeatable)")
+    parser.add_argument(
+        "--format", choices=("text", "json"), default="text",
+        help="output format (default: text)")
+    parser.add_argument(
+        "--no-pragmas", action="store_true",
+        help="ignore '# planelint: disable=...' suppressions")
+    parser.add_argument(
+        "--list-rules", action="store_true",
+        help="print the registered rules and exit")
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for rule in all_rules():
+            print(f"{rule.id}  {rule.name:24s} {rule.description}")
+        return 0
+
+    paths = args.paths or [_default_path()]
+    try:
+        findings, checked = run_lint(
+            paths, args.rule, respect_pragmas=not args.no_pragmas)
+    except (ValueError, FileNotFoundError) as e:
+        print(f"planelint: error: {e}", file=sys.stderr)
+        return 2
+
+    if args.format == "json":
+        print(json.dumps({
+            "version": 1,
+            "rules": [r.id for r in all_rules()],
+            "files_checked": checked,
+            "findings": [f.to_json() for f in findings],
+        }, indent=2))
+    else:
+        for f in findings:
+            print(f.format())
+        print(f"planelint: {checked} file(s) checked, "
+              f"{len(findings)} finding(s)")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,257 @@
+"""planelint core: findings, file contexts, the rule registry, the runner.
+
+ACORN front-loads deployment correctness: the translator/planner validate a
+model against the hardware *before* anything reaches the data plane (paper
+§5).  This package does the same for the reproduction's own architectural
+contracts — the prose invariants in ``docs/ARCHITECTURE.md`` ("Static
+contracts") become AST-checked rules with stable IDs that run in CI and fail
+with ``path:line`` diagnostics instead of regressing silently.
+
+Pieces:
+
+* ``Finding``      — one diagnostic: ``path:line:col: PLxxx [name] message``.
+* ``FileContext``  — a parsed file handed to every rule: source, AST,
+  parent links, module path (relative to the ``repro`` package when the file
+  lives inside one, else to the lint root), and the per-line
+  ``# planelint: disable=<rule>[,<rule>...]`` pragma table.
+* ``Rule``         — the plug-in protocol: ``id``/``name``/``description``
+  attributes plus ``check(ctx) -> Iterable[Finding]``.  Concrete rules live
+  in ``repro.analysis.lint.rules`` and self-register via ``@register``.
+* ``run_lint``     — walk files, run rules, apply pragmas, return sorted
+  findings.
+
+The linter is deliberately dependency-free (pure ``ast``): it must run in a
+bare CI step, and importing the modules it checks would defeat the point of
+a *static* gate.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Iterable, Protocol, Sequence, runtime_checkable
+
+__all__ = [
+    "Finding",
+    "FileContext",
+    "Rule",
+    "REGISTRY",
+    "register",
+    "all_rules",
+    "resolve_rules",
+    "iter_files",
+    "run_lint",
+]
+
+# ``# planelint: disable=PL001`` or ``disable=PL001,PL004`` (same line as the
+# finding; ``disable=all`` mutes every rule on that line).  Trailing prose
+# after the id list is fine — the id charset ends the match.
+_PRAGMA = re.compile(
+    r"#\s*planelint:\s*disable=([A-Za-z0-9_]+(?:\s*,\s*[A-Za-z0-9_]+)*)")
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    """One diagnostic, ordered for stable output: (path, line, col, rule)."""
+
+    path: str
+    line: int
+    col: int
+    rule: str      # stable id, e.g. "PL001"
+    name: str      # slug, e.g. "shard-map-containment"
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} " \
+               f"[{self.name}] {self.message}"
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class FileContext:
+    """One parsed source file, shared by every rule that checks it."""
+
+    def __init__(self, path: Path, display: str, modpath: str) -> None:
+        self.path = path
+        self.display = display          # the path findings report
+        self.modpath = modpath          # package-relative, "/"-separated
+        self.text = path.read_text()
+        self.tree = ast.parse(self.text)   # SyntaxError propagates to runner
+        self._parents: dict[ast.AST, ast.AST] = {}
+        for parent in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(parent):
+                self._parents[child] = parent
+        self.disabled: dict[int, set[str]] = {}
+        for lineno, line in enumerate(self.text.splitlines(), start=1):
+            m = _PRAGMA.search(line)
+            if m:
+                self.disabled[lineno] = {
+                    r.strip().upper() for r in m.group(1).split(",")}
+
+    # ------------------------------------------------------------ AST nav
+    def parent(self, node: ast.AST) -> ast.AST | None:
+        return self._parents.get(node)
+
+    def ancestors(self, node: ast.AST):
+        """Yield (child, parent) pairs walking from ``node`` to the module —
+        the child lets callers see *which slot* of the parent was entered
+        (e.g. a decorator list vs. a function body)."""
+        cur = node
+        while True:
+            parent = self._parents.get(cur)
+            if parent is None:
+                return
+            yield cur, parent
+            cur = parent
+
+    def enclosing_functions(self, node: ast.AST) -> list[ast.AST]:
+        """Innermost-first function defs *lexically executing* ``node``.
+
+        A decorator expression runs in the scope *containing* the def, not
+        inside it, so a def reached from its own ``decorator_list`` is
+        skipped and the walk continues outward.
+        """
+        out = []
+        for child, parent in self.ancestors(node):
+            if isinstance(parent, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if any(child is d for d in parent.decorator_list):
+                    continue
+                out.append(parent)
+        return out
+
+    def statement_of(self, node: ast.AST) -> ast.stmt | None:
+        """The nearest enclosing statement (``node`` itself if one)."""
+        cur: ast.AST | None = node
+        while cur is not None and not isinstance(cur, ast.stmt):
+            cur = self._parents.get(cur)
+        return cur
+
+    # ----------------------------------------------------------- findings
+    def finding(self, rule: "Rule", node: ast.AST | int,
+                message: str) -> Finding:
+        line = node if isinstance(node, int) else getattr(node, "lineno", 1)
+        col = 0 if isinstance(node, int) else getattr(node, "col_offset", 0)
+        return Finding(path=self.display, line=line, col=col, rule=rule.id,
+                       name=rule.name, message=message)
+
+    def is_disabled(self, line: int, rule_id: str) -> bool:
+        ids = self.disabled.get(line)
+        return bool(ids) and (rule_id.upper() in ids or "ALL" in ids)
+
+
+@runtime_checkable
+class Rule(Protocol):
+    """A pluggable contract check.  Register instances via ``@register``."""
+
+    id: str            # stable: "PL" + 3 digits, never reused
+    name: str          # kebab-case slug for human output
+    description: str   # one line, shown by ``--list-rules``
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]: ...
+
+
+REGISTRY: dict[str, Rule] = {}
+
+
+def register(cls: type) -> type:
+    """Class decorator: instantiate and register a rule by its stable id."""
+    rule = cls()
+    if rule.id in REGISTRY:
+        raise ValueError(f"duplicate planelint rule id {rule.id}")
+    REGISTRY[rule.id] = rule
+    return cls
+
+
+def all_rules() -> list[Rule]:
+    # Importing the rules package runs every @register decorator once.
+    import repro.analysis.lint.rules  # noqa: F401
+
+    return [REGISTRY[k] for k in sorted(REGISTRY)]
+
+
+def resolve_rules(rule_ids: Sequence[str] | None) -> list[Rule]:
+    rules = all_rules()
+    if not rule_ids:
+        return rules
+    by_id = {r.id.upper(): r for r in rules}
+    by_name = {r.name.lower(): r for r in rules}
+    out = []
+    for rid in rule_ids:
+        rule = by_id.get(rid.upper()) or by_name.get(rid.lower())
+        if rule is None:
+            known = ", ".join(sorted(by_id))
+            raise ValueError(f"unknown planelint rule {rid!r} (known: {known})")
+        if rule not in out:
+            out.append(rule)
+    return out
+
+
+def _modpath(path: Path, root: Path) -> str:
+    """Path of ``path`` relative to its ``repro`` package when inside one
+    (so the rule scopes — ``runtime/``, ``serving/``, ``kernels/`` — are
+    layout-independent), else relative to the lint root (so fixture trees
+    laid out like the package get the same scoping)."""
+    resolved = path.resolve()
+    parts = resolved.parts
+    if "repro" in parts:
+        i = len(parts) - 1 - parts[::-1].index("repro")
+        rel = parts[i + 1:]
+        if rel:
+            return "/".join(rel)
+    base = root if root.is_dir() else root.parent
+    try:
+        return resolved.relative_to(base.resolve()).as_posix()
+    except ValueError:
+        return path.name
+
+
+def iter_files(paths: Sequence[str | Path]) -> list[tuple[Path, Path]]:
+    """Expand files/directories into (file, lint root) pairs."""
+    out: list[tuple[Path, Path]] = []
+    for p in paths:
+        root = Path(p)
+        if root.is_dir():
+            out.extend(
+                (f, root) for f in sorted(root.rglob("*.py"))
+                if "__pycache__" not in f.parts)
+        elif root.is_file():
+            out.append((root, root.parent))
+        else:
+            raise FileNotFoundError(f"planelint: no such path: {root}")
+    return out
+
+
+def run_lint(paths: Sequence[str | Path],
+             rule_ids: Sequence[str] | None = None, *,
+             respect_pragmas: bool = True) -> tuple[list[Finding], int]:
+    """Lint ``paths`` with the selected rules.
+
+    Returns ``(findings, files_checked)``; findings are deduplicated and
+    sorted by (path, line, col, rule).  A file that does not parse yields a
+    single ``PL000`` finding rather than aborting the run.
+    """
+    rules = resolve_rules(rule_ids)
+    findings: set[Finding] = set()
+    checked = 0
+    for path, root in iter_files(paths):
+        checked += 1
+        try:
+            display = str(path.relative_to(Path.cwd()))
+        except ValueError:
+            display = str(path)
+        try:
+            ctx = FileContext(path, display, _modpath(path, root))
+        except SyntaxError as e:
+            findings.add(Finding(
+                path=display, line=e.lineno or 1, col=e.offset or 0,
+                rule="PL000", name="parse-error",
+                message=f"file does not parse: {e.msg}"))
+            continue
+        for rule in rules:
+            for f in rule.check(ctx):
+                if respect_pragmas and ctx.is_disabled(f.line, f.rule):
+                    continue
+                findings.add(f)
+    return sorted(findings), checked

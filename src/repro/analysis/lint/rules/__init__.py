@@ -1,0 +1,21 @@
+"""planelint built-in rules.  Importing this package registers every rule.
+
+| id    | name                  | contract it mechanizes                      |
+|-------|-----------------------|---------------------------------------------|
+| PL001 | shard-map-containment | only ``repro.runtime`` builds shard_map     |
+| PL002 | numpy-glue            | serving hot-path shape glue stays numpy     |
+| PL003 | vmem-budget           | kernel VMEM footprints match budgets.py     |
+| PL004 | async-blocking        | no blocking calls inside ``async def``      |
+| PL005 | retrace-hazard        | jit/pallas_call construction is memoized    |
+
+Adding a rule: drop a module here that defines a class with ``id``/``name``/
+``description`` and ``check(ctx)``, decorate it with ``@core.register``, and
+import it below.  IDs are stable and never reused.
+"""
+from repro.analysis.lint.rules import (  # noqa: F401  (import = register)
+    pl001_shard_map,
+    pl002_numpy_glue,
+    pl003_vmem_budget,
+    pl004_async_blocking,
+    pl005_retrace,
+)

@@ -1,0 +1,51 @@
+"""Shared AST idioms for planelint rules."""
+from __future__ import annotations
+
+import ast
+
+__all__ = ["dotted_ids", "has_decorator_id", "import_aliases"]
+
+
+def dotted_ids(node: ast.AST) -> set[str]:
+    """Every bare identifier appearing in an expression — ``Name`` ids and
+    ``Attribute`` attrs — so ``functools.partial(jax.jit, ...)`` yields
+    ``{"functools", "partial", "jax", "jit"}``."""
+    out: set[str] = set()
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name):
+            out.add(n.id)
+        elif isinstance(n, ast.Attribute):
+            out.add(n.attr)
+    return out
+
+
+def has_decorator_id(fn: ast.AST, ids: set[str]) -> bool:
+    """True if any decorator of ``fn`` mentions one of ``ids`` anywhere in
+    its expression (covers ``@jax.jit``, ``@jit``, ``@functools.partial(
+    jax.jit, ...)``, ``@functools.lru_cache(maxsize=8)``)."""
+    return any(dotted_ids(d) & ids
+               for d in getattr(fn, "decorator_list", []))
+
+
+def import_aliases(tree: ast.AST, module: str,
+                   names: tuple[str, ...] = ()) -> set[str]:
+    """Local bindings referring to ``module`` (or to ``names`` imported from
+    it): ``import queue`` -> {"queue"}, ``import queue as q`` -> {"q"},
+    ``from queue import Queue as Q`` -> {"Q"} (only for listed ``names``)."""
+    out: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == module:
+                    if a.asname:
+                        out.add(a.asname)
+                    elif "." not in module:
+                        out.add(module)
+                    # plain ``import a.b`` binds only the root ``a``; dotted
+                    # uses are matched structurally by the rules themselves
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == module:
+                for a in node.names:
+                    if not names or a.name in names:
+                        out.add(a.asname or a.name)
+    return out

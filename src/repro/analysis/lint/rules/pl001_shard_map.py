@@ -1,0 +1,55 @@
+"""PL001 — shard-map-containment.
+
+``docs/ARCHITECTURE.md`` ("Runtime layer"): **no ``src/repro`` module outside
+``runtime/`` may construct a ``shard_map`` classify loop**.  The runtime
+package is the one seam where device meshes, collective permutes, and
+sharding live; any other module referencing ``shard_map`` — an import, an
+attribute lookup, even a ``getattr(jax, "shard_map")`` string — is either a
+new classify substrate growing outside the executor protocol or dead code
+pretending to be one.
+
+This rule generalizes (and is the single source of truth for) the original
+ad-hoc AST scan in ``tests/test_runtime.py::test_no_shard_map_outside_runtime``;
+the test is now a thin wrapper asserting this rule finds nothing.
+
+Docstrings and comments mentioning shard_map are fine: the AST walk only
+sees imports, names, attributes, and *exact* ``"shard_map"`` string
+constants.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.lint.core import FileContext, Finding, register
+
+_TOKEN = "shard_map"  # planelint: disable=PL001 (the rule names its own token)
+
+
+@register
+class ShardMapContainment:
+    id = "PL001"
+    name = "shard-map-containment"
+    description = ("only repro.runtime may import or reference shard_map "
+                   "(ARCHITECTURE 'Runtime layer')")
+
+    def check(self, ctx: FileContext) -> list[Finding]:
+        if ctx.modpath.startswith("runtime/"):
+            return []
+        out = []
+        for node in ast.walk(ctx.tree):
+            hit = (
+                (isinstance(node, ast.ImportFrom)
+                 and _TOKEN in (node.module or ""))
+                or (isinstance(node, ast.Import)
+                    and any(_TOKEN in a.name for a in node.names))
+                or (isinstance(node, ast.Attribute) and node.attr == _TOKEN)
+                or (isinstance(node, ast.Name) and node.id == _TOKEN)
+                or (isinstance(node, ast.Constant) and node.value == _TOKEN)
+            )
+            if hit:
+                out.append(ctx.finding(
+                    self, node,
+                    "shard_map reference outside repro.runtime — classify "
+                    "substrates live behind the Executor protocol in "
+                    "runtime/executors.py (ARCHITECTURE 'Runtime layer')"))
+        return out

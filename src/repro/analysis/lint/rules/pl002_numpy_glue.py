@@ -1,0 +1,79 @@
+"""PL002 — numpy-glue.
+
+``docs/ARCHITECTURE.md`` ("Async serving", the glue rules): on the serving
+hot path, shape glue — concatenating per-client batches, padding admission
+tails — must be **numpy**, not ``jnp``.  A ``jnp.concatenate``/``jnp.pad``
+executed *outside* a jit-compiled function is dispatched op-by-op through
+XLA and lazily compiles once per (operand count, shapes) signature; on a
+live request stream nearly every coalesced dispatch has a new ragged size,
+so each one stalls ~10-100x the warmed classify trace in glue compilation
+before the classify even starts.
+
+Scope — the modules a request crosses between the wire and the executor:
+
+* everything under ``serving/``;
+* ``runtime/admission.py`` (bucketing/coalescing) and
+  ``runtime/policies.py`` (batching policies).
+
+Calls inside jit-compiled functions (any enclosing def decorated with
+``jit``/``pallas_call``, where the op is traced once per shape) are exempt.
+A deliberate device-side branch (e.g. admission's device-resident-leaf
+padding, which must not force a host round-trip) carries a
+``# planelint: disable=PL002`` pragma with its justification.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.lint.core import FileContext, Finding, register
+from repro.analysis.lint.rules.common import has_decorator_id, import_aliases
+
+_GLUE = {"concatenate", "concat", "pad", "stack", "asarray"}
+_JIT_IDS = {"jit", "pallas_call"}
+_HOT_FILES = {"runtime/admission.py", "runtime/policies.py"}
+
+
+def _jnp_aliases(tree: ast.AST) -> set[str]:
+    return (import_aliases(tree, "jax.numpy")
+            | import_aliases(tree, "jax", ("numpy",)))
+
+
+def _is_jnp(value: ast.AST, aliases: set[str]) -> bool:
+    if isinstance(value, ast.Name):
+        return value.id in aliases
+    # the un-aliased chain: ``jax.numpy.<glue>``
+    return (isinstance(value, ast.Attribute) and value.attr == "numpy"
+            and isinstance(value.value, ast.Name) and value.value.id == "jax")
+
+
+@register
+class NumpyGlue:
+    id = "PL002"
+    name = "numpy-glue"
+    description = ("serving hot-path shape glue (concatenate/pad/stack/"
+                   "asarray) must be numpy outside jit "
+                   "(ARCHITECTURE 'Async serving')")
+
+    def check(self, ctx: FileContext) -> list[Finding]:
+        hot = (ctx.modpath.startswith("serving/")
+               or ctx.modpath in _HOT_FILES)
+        if not hot:
+            return []
+        aliases = _jnp_aliases(ctx.tree)
+        out = []
+        for node in ast.walk(ctx.tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr in _GLUE
+                    and _is_jnp(node.func.value, aliases)):
+                continue
+            if any(has_decorator_id(fn, _JIT_IDS)
+                   for fn in ctx.enclosing_functions(node)):
+                continue   # traced once per shape — not eager glue
+            out.append(ctx.finding(
+                self, node,
+                f"jnp.{node.func.attr} outside jit on the serving hot path "
+                "lazily XLA-compiles per ragged shape (~10-100x the warmed "
+                "classify) — use numpy for host-side glue "
+                "(ARCHITECTURE 'Async serving')"))
+        return out

@@ -1,0 +1,89 @@
+"""PL004 — async-blocking.
+
+The async serving front (``serving/async_server.py``) runs every client and
+the dispatch loop on **one** asyncio event loop; the only blocking work —
+the executor call itself — is explicitly pushed to a worker thread via
+``loop.run_in_executor``.  Anything else that blocks inside an ``async def``
+stalls every pending submit and every deadline timer at once: a 2 ms
+``time.sleep`` inside the dispatch loop is a 2 ms p99 floor for the whole
+server.
+
+Flagged inside ``async def`` bodies (innermost non-async defs are opaque —
+a nested sync helper may legitimately be shipped to an executor thread):
+
+* ``time.sleep(...)``                — use ``await asyncio.sleep(...)``;
+* ``<future>.result(...)``          — synchronous ``concurrent.futures``
+  result wait; ``await`` the future instead;
+* any use of the stdlib ``queue`` module (``queue.Queue().get()/.put()``
+  block the thread) — use ``asyncio.Queue`` or a ``collections.deque``
+  drained by the event loop.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.lint.core import FileContext, Finding, register
+from repro.analysis.lint.rules.common import import_aliases
+
+
+def _async_body(fn: ast.AsyncFunctionDef):
+    """Walk an async def's body without descending into nested defs (each
+    nested ``async def`` is visited as its own root by the caller; nested
+    sync defs are out of scope for this rule)."""
+    stack = list(fn.body)
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+
+
+@register
+class AsyncBlocking:
+    id = "PL004"
+    name = "async-blocking"
+    description = ("no time.sleep / Future.result() / stdlib queue use "
+                   "inside async def (the event loop must never block)")
+
+    def check(self, ctx: FileContext) -> list[Finding]:
+        time_mods = import_aliases(ctx.tree, "time")
+        time_sleeps = import_aliases(ctx.tree, "time", ("sleep",)) - {"time"}
+        queue_names = (import_aliases(ctx.tree, "queue")
+                       | import_aliases(ctx.tree, "queue",
+                                        ("Queue", "LifoQueue",
+                                         "PriorityQueue", "SimpleQueue")))
+        out = []
+        for fn in ast.walk(ctx.tree):
+            if not isinstance(fn, ast.AsyncFunctionDef):
+                continue
+            for node in _async_body(fn):
+                if isinstance(node, ast.Call):
+                    f = node.func
+                    if (isinstance(f, ast.Attribute) and f.attr == "sleep"
+                            and isinstance(f.value, ast.Name)
+                            and f.value.id in time_mods):
+                        out.append(ctx.finding(
+                            self, node,
+                            "time.sleep blocks the event loop — "
+                            "await asyncio.sleep(...) instead"))
+                    elif isinstance(f, ast.Name) and f.id in time_sleeps:
+                        out.append(ctx.finding(
+                            self, node,
+                            "time.sleep blocks the event loop — "
+                            "await asyncio.sleep(...) instead"))
+                    elif isinstance(f, ast.Attribute) and f.attr == "result":
+                        out.append(ctx.finding(
+                            self, node,
+                            ".result() is a synchronous future wait that "
+                            "blocks the event loop — await the future (or "
+                            "wrap the blocking call in run_in_executor)"))
+                elif (isinstance(node, ast.Name) and node.id in queue_names
+                        and queue_names):
+                    out.append(ctx.finding(
+                        self, node,
+                        "stdlib queue ops block the thread they run on — "
+                        "use asyncio.Queue (or a deque drained by the "
+                        "event loop) inside async code"))
+        return out

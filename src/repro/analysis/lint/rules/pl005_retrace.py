@@ -1,0 +1,88 @@
+"""PL005 — retrace-hazard.
+
+``jax.jit`` and ``pl.pallas_call`` *constructions* mint fresh compile caches:
+a jitted callable built inside a plain function body is rebuilt — and
+retraced from scratch — on every call.  This is the compile-cache-thrashing
+bug class the runtime layer fixed in the old ``PipelinedPlane`` (it held one
+``_run`` slot and rebuilt the pipeline each time ``n_micro`` alternated);
+the fix — memoize compiled pipelines per ``n_micro`` — is now a lintable
+discipline.
+
+A jit/pallas_call construction is **allowed** when it demonstrably happens
+once per distinct key:
+
+* at module level (including decorators on module-level defs);
+* inside a function that is itself jit-decorated — the construction is part
+  of a trace, paid once per shape, not once per call;
+* inside a ``functools.lru_cache``/``cache``-decorated function;
+* inside ``__init__`` — once per object, the engine/executor pattern
+  (``SwitchEngine.__init__``, ``SequentialPathExecutor.__init__``);
+* when the constructed callable is stored into a subscript — the memo-table
+  pattern (``self._runs[n_micro] = jax.jit(...)``).
+
+Everything else is a hazard.  Deploy-time launchers (``launch/``) are out of
+scope: they construct one jitted step per process by design.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.lint.core import FileContext, Finding, register
+from repro.analysis.lint.rules.common import has_decorator_id
+
+_CTOR = {"jit", "pallas_call"}
+_MEMO_IDS = {"lru_cache", "cache"}
+
+
+def _ctor_name(node: ast.Call) -> str | None:
+    f = node.func
+    if isinstance(f, ast.Name) and f.id in _CTOR:
+        return f.id
+    if isinstance(f, ast.Attribute) and f.attr in _CTOR:
+        return f.attr
+    return None
+
+
+def _stored_in_subscript(stmt: ast.stmt | None) -> bool:
+    if isinstance(stmt, ast.Assign):
+        return any(isinstance(t, ast.Subscript) for t in stmt.targets)
+    if isinstance(stmt, (ast.AnnAssign, ast.AugAssign)):
+        return isinstance(stmt.target, ast.Subscript)
+    return False
+
+
+@register
+class RetraceHazard:
+    id = "PL005"
+    name = "retrace-hazard"
+    description = ("jax.jit / pallas_call constructed in a non-memoized "
+                   "function body rebuilds its compile cache per call")
+
+    def check(self, ctx: FileContext) -> list[Finding]:
+        if ctx.modpath.startswith("launch/"):
+            return []
+        out = []
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            ctor = _ctor_name(node)
+            if ctor is None:
+                continue
+            fns = ctx.enclosing_functions(node)
+            if not fns:
+                continue   # module level: constructed once per import
+            if any(has_decorator_id(fn, _CTOR) for fn in fns):
+                continue   # inside a traced function: once per shape
+            if any(has_decorator_id(fn, _MEMO_IDS) for fn in fns):
+                continue   # the enclosing function is memoized
+            if fns[0].name == "__init__":
+                continue   # once per object
+            if _stored_in_subscript(ctx.statement_of(node)):
+                continue   # memo-table store: cache[key] = jit(...)
+            out.append(ctx.finding(
+                self, node,
+                f"{ctor}(...) constructed inside {fns[0].name}() rebuilds "
+                "its compile cache every call (the PipelinedPlane thrash "
+                "bug) — hoist to module level / __init__, or store it in a "
+                "memo table keyed by its static config"))
+        return out

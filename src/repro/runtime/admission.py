@@ -72,8 +72,10 @@ def pad_to_bucket(pb: PacketBatch, bucket: int) -> PacketBatch:
         if isinstance(x, np.ndarray):
             return np.concatenate(
                 [x, np.zeros((bucket - B,) + x.shape[1:], x.dtype)])
-        return jnp.concatenate(
-            [jnp.asarray(x),
+        # Device-resident leaf: jnp on purpose — numpy here would force a
+        # device -> host round-trip mid-pipeline (docstring above).
+        return jnp.concatenate(  # planelint: disable=PL002
+            [jnp.asarray(x),     # planelint: disable=PL002
              jnp.zeros((bucket - B,) + x.shape[1:], x.dtype)])
 
     return jax.tree.map(pad, pb)

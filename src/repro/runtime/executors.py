@@ -267,12 +267,14 @@ class ShardedExecutor:
             # the port shards of each microbatch re-concatenate on axis 2.
             return jax.tree.map(lambda x: x[:, None], outs)
 
-        return jax.jit(pipeline)
+        return pipeline
 
     def _run_for(self, n_micro: int):
         fn = self._runs.get(n_micro)
         if fn is None:
-            fn = self._runs[n_micro] = self._build(n_micro)
+            # jit at the memo-store site: one compiled pipeline per n_micro,
+            # never rebuilt (PL005 retrace-hazard discipline).
+            fn = self._runs[n_micro] = jax.jit(self._build(n_micro))
         return fn
 
     def run(self, microbatches: PacketBatch) -> PacketBatch:

@@ -1,0 +1,450 @@
+"""planelint: the static contract checker (ARCHITECTURE 'Static contracts').
+
+Pins, per rule PL001-PL005: a violating fixture fires with the right id and
+line, the matching clean idiom stays silent, and a same-line
+``# planelint: disable=...`` pragma suppresses.  Plus: the CLI's JSON schema
+and exit codes, PL000 on unparsable files, PL003's static footprints
+reproducing both ``kernels/budgets.py`` and the byte values quoted in the
+``docs/ARCHITECTURE.md`` pinned-footprint table within 1%, and the shipped
+tree linting clean end-to-end.
+"""
+import json
+import pathlib
+import re
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.analysis.lint import run_lint
+from repro.analysis.lint.rules.pl003_vmem_budget import kernel_footprints
+from repro.kernels.budgets import BUDGETS, VMEM_BYTES
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+SRC_REPRO = REPO / "src" / "repro"
+
+
+def lint_tree(tmp_path, files, rules=None, **kw):
+    """Write ``{relpath: code}`` under tmp_path and lint the tree."""
+    for rel, code in files.items():
+        f = tmp_path / rel
+        f.parent.mkdir(parents=True, exist_ok=True)
+        f.write_text(textwrap.dedent(code))
+    findings, checked = run_lint([tmp_path], rules, **kw)
+    assert checked == len(files)
+    return findings
+
+
+def rule_ids(findings):
+    return [f.rule for f in findings]
+
+
+# ------------------------------------------------------------------ PL001
+def test_pl001_fires_outside_runtime(tmp_path):
+    findings = lint_tree(tmp_path, {
+        "core/rogue.py": """\
+            from jax.experimental.shard_map import shard_map
+        """,
+    }, ["PL001"])
+    assert rule_ids(findings) == ["PL001"]
+    assert findings[0].line == 1
+    assert findings[0].name == "shard-map-containment"
+
+
+def test_pl001_runtime_and_docstrings_exempt(tmp_path):
+    findings = lint_tree(tmp_path, {
+        # runtime/ is the one allowed home
+        "runtime/mesh.py": """\
+            from jax.experimental.shard_map import shard_map
+
+            def go(f):
+                return shard_map(f, mesh=None, in_specs=(), out_specs=())
+        """,
+        # prose mentions see no AST nodes
+        "core/doc.py": '''\
+            """This module deliberately avoids shard_map (see runtime/)."""
+            X = 1
+        ''',
+    }, ["PL001"])
+    assert findings == []
+
+
+def test_pl001_attribute_name_and_string_forms(tmp_path):
+    findings = lint_tree(tmp_path, {
+        "serving/a.py": """\
+            import jax
+            loop = jax.experimental.shard_map
+        """,
+        "serving/b.py": """\
+            import jax
+            loop = getattr(jax, "shard_map")
+        """,
+    }, ["PL001"])
+    assert rule_ids(findings) == ["PL001", "PL001"]
+
+
+# ------------------------------------------------------------------ PL002
+_GLUE_BAD = """\
+    import jax.numpy as jnp
+
+    def coalesce(parts):
+        return jnp.concatenate(parts)
+"""
+
+
+def test_pl002_fires_on_hot_path(tmp_path):
+    for rel in ("serving/glue.py", "runtime/admission.py",
+                "runtime/policies.py"):
+        findings = lint_tree(tmp_path / rel.replace("/", "_"),
+                             {rel: _GLUE_BAD}, ["PL002"])
+        assert rule_ids(findings) == ["PL002"], rel
+        assert "jnp.concatenate" in findings[0].message
+
+
+def test_pl002_cold_modules_numpy_and_jit_exempt(tmp_path):
+    findings = lint_tree(tmp_path, {
+        # not a hot-path module: jnp glue is fine
+        "core/maths.py": _GLUE_BAD,
+        # numpy glue on the hot path is the sanctioned idiom
+        "serving/host.py": """\
+            import numpy as np
+
+            def coalesce(parts):
+                return np.concatenate(parts)
+        """,
+        # jnp inside a jit-compiled function is traced, not eager glue
+        "serving/traced.py": """\
+            import jax
+            import jax.numpy as jnp
+
+            @jax.jit
+            def pack(a, b):
+                return jnp.stack([a, b])
+        """,
+    }, ["PL002"])
+    assert findings == []
+
+
+def test_pl002_sees_aliases_and_dotted_chain(tmp_path):
+    findings = lint_tree(tmp_path, {
+        "serving/alias.py": """\
+            from jax import numpy as xp
+
+            def pad(x):
+                return xp.pad(x, 3)
+        """,
+        "serving/dotted.py": """\
+            import jax.numpy
+
+            def glue(xs):
+                return jax.numpy.asarray(xs)
+        """,
+    }, ["PL002"])
+    assert rule_ids(findings) == ["PL002", "PL002"]
+
+
+def test_pl002_pragma_suppresses_only_that_line(tmp_path):
+    files = {
+        "serving/mixed.py": """\
+            import jax.numpy as jnp
+
+            def pack(parts, x):
+                y = jnp.asarray(x)  # planelint: disable=PL002
+                return jnp.concatenate(parts)
+        """,
+    }
+    findings = lint_tree(tmp_path, files, ["PL002"])
+    assert len(findings) == 1 and findings[0].line == 5
+    # and the pragma is visible again with pragmas off
+    findings = run_lint([tmp_path], ["PL002"], respect_pragmas=False)[0]
+    assert len(findings) == 2
+
+
+# ------------------------------------------------------------------ PL003
+def _pallas_src(body):
+    return ("from jax.experimental import pallas as pl\n\n"
+            "block_b, F_pad = 256, 128\n\n" + textwrap.dedent(body))
+
+
+def test_pl003_over_budget(tmp_path):
+    findings = lint_tree(tmp_path, {
+        "kernels/tree_walk.py": _pallas_src("""\
+            out = pl.pallas_call(
+                None,
+                grid=(1,),
+                in_specs=[pl.BlockSpec((4096, 4096), lambda i: (i, 0))],
+                out_specs=pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+            )
+        """),
+    }, ["PL003"])
+    assert rule_ids(findings) == ["PL003"]
+    assert "exceeds" in findings[0].message
+    assert str(VMEM_BYTES) in findings[0].message
+
+
+def test_pl003_drift_from_pinned(tmp_path):
+    findings = lint_tree(tmp_path, {
+        "kernels/tcam_match.py": _pallas_src("""\
+            out = pl.pallas_call(
+                None,
+                grid=(1,),
+                in_specs=[pl.BlockSpec((block_b, F_pad), lambda i: (i, 0))],
+                out_specs=pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+            )
+        """),
+    }, ["PL003"])
+    assert rule_ids(findings) == ["PL003"]
+    assert "drifted" in findings[0].message
+
+
+def test_pl003_unbudgeted_and_unknown_binding(tmp_path):
+    findings = lint_tree(tmp_path, {
+        "kernels/mystery.py": _pallas_src("""\
+            out = pl.pallas_call(None, grid=(1,), in_specs=[])
+        """),
+        "kernels/svm_lookup.py": _pallas_src("""\
+            out = pl.pallas_call(
+                None,
+                grid=(1,),
+                in_specs=[pl.BlockSpec((block_q, 8), lambda i: (i, 0))],
+            )
+        """),
+    }, ["PL003"])
+    msgs = {f.path.rsplit("/", 1)[-1]: f.message for f in findings}
+    assert "unbudgeted" in msgs["mystery.py"]
+    assert "block_q" in msgs["svm_lookup.py"]
+
+
+def test_pl003_stale_manifest_entry(tmp_path):
+    # a budgets.py with no sibling kernel modules: every entry is stale
+    findings = lint_tree(tmp_path, {
+        "kernels/budgets.py": "BUDGETS = {}\n",
+    }, ["PL003"])
+    stale = {re.search(r"'(\w+)'", f.message).group(1) for f in findings}
+    assert stale == set(BUDGETS)
+
+
+def test_pl003_shipped_kernels_match_manifest_and_doc():
+    """The acceptance bar: recomputed static footprints equal the manifest
+    pins and the byte values quoted in the ARCHITECTURE table within 1%."""
+    doc = (REPO / "docs" / "ARCHITECTURE.md").read_text()
+    doc_rows = dict(re.findall(r"^\|\s*`(\w+)`\s*\|[^|]*\|\s*([\d,]+) B",
+                               doc, re.M))
+    assert set(doc_rows) == set(BUDGETS)
+    for key, entry in BUDGETS.items():
+        got = kernel_footprints(SRC_REPRO / "kernels" / f"{key}.py")
+        assert set(got) == {key}, key
+        fp = got[key]
+        assert abs(fp - entry.pinned_bytes) <= entry.tolerance * \
+            entry.pinned_bytes, (key, fp, entry.pinned_bytes)
+        doc_bytes = int(doc_rows[key].replace(",", ""))
+        assert abs(fp - doc_bytes) <= 0.01 * doc_bytes, (key, fp, doc_bytes)
+        assert fp <= entry.budget_bytes
+
+
+# ------------------------------------------------------------------ PL004
+def test_pl004_fires_on_blocking_calls(tmp_path):
+    findings = lint_tree(tmp_path, {
+        "serving/loop.py": """\
+            import queue
+            import time
+
+            async def dispatch(fut):
+                time.sleep(0.002)
+                x = fut.result()
+                q = queue.Queue()
+                return x
+        """,
+    }, ["PL004"])
+    assert rule_ids(findings) == ["PL004"] * 3
+    assert [f.line for f in findings] == [5, 6, 7]
+
+
+def test_pl004_async_idioms_and_sync_helpers_exempt(tmp_path):
+    findings = lint_tree(tmp_path, {
+        "serving/ok.py": """\
+            import asyncio
+            import time
+
+            async def dispatch(loop, work):
+                await asyncio.sleep(0.002)
+                out = await loop.run_in_executor(None, work)
+                q = asyncio.Queue()
+                return out, q
+
+            def sync_worker():
+                time.sleep(0.002)   # fine: runs on an executor thread
+
+            async def outer():
+                def helper(fut):
+                    return fut.result()   # nested sync def is opaque
+                return helper
+        """,
+    }, ["PL004"])
+    assert findings == []
+
+
+def test_pl004_from_import_and_alias(tmp_path):
+    findings = lint_tree(tmp_path, {
+        "serving/alias.py": """\
+            from time import sleep
+            import queue as q
+
+            async def f():
+                sleep(1)
+                return q.SimpleQueue()
+        """,
+    }, ["PL004"])
+    assert rule_ids(findings) == ["PL004", "PL004"]
+
+
+# ------------------------------------------------------------------ PL005
+def test_pl005_fires_in_plain_function(tmp_path):
+    findings = lint_tree(tmp_path, {
+        "core/build.py": """\
+            import jax
+
+            def make(f):
+                return jax.jit(f)
+        """,
+    }, ["PL005"])
+    assert rule_ids(findings) == ["PL005"]
+    assert "make()" in findings[0].message
+
+
+def test_pl005_sanctioned_construction_sites(tmp_path):
+    findings = lint_tree(tmp_path, {
+        "core/ok.py": """\
+            import functools
+            import jax
+
+            step = jax.jit(sum)          # module level
+
+            class Engine:
+                def __init__(self, impl):
+                    self._fn = jax.jit(impl)      # once per object
+
+                def run_for(self, n):
+                    fn = self._runs.get(n)
+                    if fn is None:
+                        # memo-table store: once per key
+                        fn = self._runs[n] = jax.jit(self._build(n))
+                    return fn
+
+            @functools.lru_cache(maxsize=8)
+            def blank_program(profile):
+                return jax.jit(lambda x: x)       # memoized by decorator
+
+            @jax.jit
+            def traced(x):
+                inner = jax.jit(lambda y: y)      # part of a trace
+                return inner(x)
+        """,
+        # launchers build one jitted step per process by design
+        "launch/serve.py": """\
+            import jax
+
+            def main():
+                return jax.jit(sum)
+        """,
+    }, ["PL005"])
+    assert findings == []
+
+
+# ------------------------------------------------------- runner mechanics
+def test_pl000_parse_error(tmp_path):
+    findings = lint_tree(tmp_path, {"broken.py": "def f(:\n"})
+    assert rule_ids(findings) == ["PL000"]
+    assert findings[0].name == "parse-error"
+
+
+def test_disable_all_pragma(tmp_path):
+    findings = lint_tree(tmp_path, {
+        "serving/x.py": """\
+            import jax.numpy as jnp
+
+            def f(xs):
+                return jnp.stack(xs)  # planelint: disable=all
+        """,
+    })
+    assert findings == []
+
+
+def test_unknown_rule_raises():
+    with pytest.raises(ValueError, match="PL999"):
+        run_lint([SRC_REPRO], ["PL999"])
+
+
+def test_rule_selection_by_name(tmp_path):
+    findings = lint_tree(tmp_path, {"core/r.py": "x = shard_map\n"},
+                         ["shard-map-containment"])
+    assert rule_ids(findings) == ["PL001"]
+
+
+# ------------------------------------------------------------------- CLI
+def _cli(args, cwd=REPO):
+    env = {"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"}
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint", *args],
+        capture_output=True, text=True, cwd=cwd, env=env)
+
+
+def test_cli_json_schema_and_exit_codes(tmp_path):
+    (tmp_path / "serving").mkdir()
+    (tmp_path / "serving" / "bad.py").write_text(
+        "import jax.numpy as jnp\n\n\ndef f(xs):\n"
+        "    return jnp.concatenate(xs)\n")
+    proc = _cli([str(tmp_path), "--format", "json"])
+    assert proc.returncode == 1, proc.stderr
+    doc = json.loads(proc.stdout)
+    assert doc["version"] == 1
+    assert doc["files_checked"] == 1
+    assert set(doc["rules"]) >= {"PL001", "PL002", "PL003", "PL004", "PL005"}
+    (finding,) = doc["findings"]
+    assert set(finding) == {"path", "line", "col", "rule", "name", "message"}
+    assert finding["rule"] == "PL002" and finding["line"] == 5
+
+    # text format carries path:line: and the rule id; same exit
+    proc = _cli([str(tmp_path)])
+    assert proc.returncode == 1
+    assert f"bad.py:5:" in proc.stdout and "PL002" in proc.stdout
+
+    # clean tree exits 0
+    clean = tmp_path / "clean"
+    clean.mkdir()
+    (clean / "m.py").write_text("x = 1\n")
+    proc = _cli([str(clean), "--format", "json"])
+    assert proc.returncode == 0
+    assert json.loads(proc.stdout)["findings"] == []
+
+    # usage errors exit 2
+    assert _cli([str(clean), "--rule", "PL999"]).returncode == 2
+    assert _cli([str(tmp_path / "nope")]).returncode == 2
+
+
+def test_cli_list_rules():
+    proc = _cli(["--list-rules"])
+    assert proc.returncode == 0
+    for rid in ("PL001", "PL002", "PL003", "PL004", "PL005"):
+        assert rid in proc.stdout
+
+
+def test_cli_runs_without_jax_runtime():
+    """The lint CLI must not import jax (it runs in bare CI steps and must
+    never initialize an accelerator runtime to parse source files)."""
+    code = ("import sys\n"
+            "import repro.analysis.lint.rules\n"
+            "assert 'jax' not in sys.modules, 'lint import pulled in jax'\n")
+    proc = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"})
+    assert proc.returncode == 0, proc.stderr
+
+
+# ----------------------------------------------------------- end to end
+def test_shipped_tree_is_clean():
+    """The whole package lints clean — the CI gate, in-process."""
+    findings, checked = run_lint([SRC_REPRO])
+    assert checked > 50
+    assert findings == [], "\n".join(f.format() for f in findings)

@@ -14,7 +14,6 @@ Pins the ISSUE-4 contract:
 * the multi-device story (4-switch pipeline, 2x2 and 1x4 meshes) runs in a
   subprocess with 8 emulated devices, per the conftest 1-device rule.
 """
-import ast
 import dataclasses
 import json
 import os
@@ -315,32 +314,26 @@ def test_zooserver_device_out_skips_host_round_trip(satdap):
 
 
 # ------------------------------------------------- shard_map containment
-def test_no_shard_map_outside_runtime():
-    """Only repro.runtime may construct a shard_map classify loop: no other
-    src/repro module may import or reference shard_map in code (docstrings
-    and comments are fine — the AST walk sees neither)."""
+def test_no_shard_map_outside_runtime(tmp_path):
+    """Only repro.runtime may construct a shard_map classify loop — now a
+    thin wrapper over planelint rule PL001 (the single source of truth;
+    ARCHITECTURE 'Static contracts'): the shipped tree must be clean, and
+    the rule must actually fire on an out-of-runtime offender."""
+    from repro.analysis.lint import run_lint
+
     root = pathlib.Path(__file__).resolve().parent.parent / "src" / "repro"
-    offenders = []
-    for path in sorted(root.rglob("*.py")):
-        rel = path.relative_to(root)
-        if rel.parts[0] == "runtime":
-            continue
-        for node in ast.walk(ast.parse(path.read_text())):
-            hit = (
-                (isinstance(node, ast.ImportFrom)
-                 and "shard_map" in (node.module or ""))
-                or (isinstance(node, ast.Import)
-                    and any("shard_map" in a.name for a in node.names))
-                or (isinstance(node, ast.Attribute)
-                    and node.attr == "shard_map")
-                or (isinstance(node, ast.Name) and node.id == "shard_map")
-                or (isinstance(node, ast.Constant)
-                    and node.value == "shard_map")
-            )
-            if hit:
-                offenders.append(f"{rel}:{node.lineno}")
-    assert not offenders, \
-        f"shard_map classify loops must live in repro/runtime: {offenders}"
+    findings, checked = run_lint([root], ["PL001"])
+    assert checked > 0
+    assert not findings, "shard_map classify loops must live in " \
+        f"repro/runtime: {[f.format() for f in findings]}"
+
+    # The rule is live: a fixture module outside runtime/ is one finding.
+    bad = tmp_path / "serving" / "rogue.py"
+    bad.parent.mkdir()
+    bad.write_text("from jax.experimental.shard_map import shard_map\n")
+    findings, _ = run_lint([tmp_path])
+    assert [f.rule for f in findings] == ["PL001"]
+    assert findings[0].line == 1
 
 
 # ------------------------------------------------------- multi-device

@@ -14,11 +14,17 @@ Rules, applied to every backtick-quoted token that looks like a file path:
 * ``path:N`` — the file must have at least N lines;
 * ``path::name`` (pytest-style) — ``name`` must occur in the file's text.
 
+Additionally, the "Kernel memory plans" pinned-footprint table in
+``docs/ARCHITECTURE.md`` must name exactly the kernels budgeted in
+``src/repro/kernels/budgets.py`` (``BUDGETS`` is AST-parsed — this script
+runs without ``PYTHONPATH=src`` in CI).
+
 Usage:  python tools/check_doc_refs.py [file.md ...]
         (default: docs/ARCHITECTURE.md README.md benchmarks/README.md)
 """
 from __future__ import annotations
 
+import ast
 import re
 import sys
 from pathlib import Path
@@ -61,6 +67,59 @@ def check_doc(doc: Path) -> list[str]:
     return errors
 
 
+BUDGETS_PY = REPO / "src" / "repro" / "kernels" / "budgets.py"
+ARCH_MD = REPO / "docs" / "ARCHITECTURE.md"
+# First backticked token of a pinned-table row: the kernel name.
+TABLE_ROW = re.compile(r"^\|\s*`([\w]+)`")
+
+
+def budget_keys() -> set[str]:
+    """Keys of the ``BUDGETS`` dict, by AST (no imports, no PYTHONPATH)."""
+    tree = ast.parse(BUDGETS_PY.read_text())
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and any(
+                isinstance(t, ast.Name) and t.id == "BUDGETS"
+                for t in node.targets):
+            if isinstance(node.value, ast.Dict):
+                return {k.value for k in node.value.keys
+                        if isinstance(k, ast.Constant)
+                        and isinstance(k.value, str)}
+    raise SystemExit(f"error: no literal BUDGETS dict in {BUDGETS_PY}")
+
+
+def doc_table_kernels() -> set[str]:
+    """Kernel names from the pinned-footprint table rows of the
+    "Kernel memory plans" section of ARCHITECTURE.md."""
+    out: set[str] = set()
+    in_section = False
+    for line in ARCH_MD.read_text().splitlines():
+        if line.startswith("## "):
+            in_section = line.startswith("## Kernel memory plans")
+            continue
+        if in_section:
+            m = TABLE_ROW.match(line)
+            if m and m.group(1) != "kernel":   # skip the header row
+                out.add(m.group(1))
+    return out
+
+
+def check_budget_manifest() -> list[str]:
+    if not BUDGETS_PY.is_file():
+        return [f"{BUDGETS_PY}: budget manifest is missing"]
+    manifest = budget_keys()
+    doc = doc_table_kernels()
+    errors = []
+    for k in sorted(manifest - doc):
+        errors.append(
+            f"{ARCH_MD}: kernel `{k}` is budgeted in kernels/budgets.py but "
+            "missing from the 'Kernel memory plans' pinned-footprint table")
+    for k in sorted(doc - manifest):
+        errors.append(
+            f"{ARCH_MD}: kernel `{k}` in the 'Kernel memory plans' table has "
+            "no BUDGETS entry in kernels/budgets.py")
+    return errors
+
+
 def main(argv: list[str]) -> int:
     docs = [Path(a) for a in argv] if argv else [REPO / d for d in DEFAULT_DOCS]
     errors, checked = [], 0
@@ -70,6 +129,7 @@ def main(argv: list[str]) -> int:
             continue
         checked += 1
         errors.extend(check_doc(doc))
+    errors.extend(check_budget_manifest())
     for e in errors:
         print(f"error: {e}", file=sys.stderr)
     print(f"check_doc_refs: {checked} docs checked, {len(errors)} stale "
