@@ -3,13 +3,20 @@
 Run it as a module::
 
     PYTHONPATH=src python -m repro.analysis.lint [--rule PL001 ...]
-                                                 [--format text|json] [paths]
+                                                 [--format text|json|github]
+                                                 [--cache [PATH]]
+                                                 [--changed-only [BASE]]
+                                                 [paths]
 
-or call :func:`run_lint` directly.  Rules are pluggable (see
-``repro.analysis.lint.core.Rule`` and ``@register``); the shipped set is
-documented in ``repro.analysis.lint.rules`` and in ``docs/ARCHITECTURE.md``
-("Static contracts").  Per-line suppression:
-``# planelint: disable=PL002`` (comma-separate ids; ``disable=all``).
+or call :func:`run_lint` (stable two-value API) / :func:`lint_project` (the
+whole-project engine: incremental cache, git changed-only mode, parse
+accounting) directly.  Rules are pluggable — per-file rules implement
+``core.Rule``; cross-file rules implement ``project.ProjectRule`` against
+the ``ProjectContext`` module/import graph.  The shipped set is documented
+in ``repro.analysis.lint.rules`` and in ``docs/ARCHITECTURE.md`` ("Static
+contracts").  Per-line suppression: ``planelint: disable=PL002``
+(comma-separate ids; ``disable=all``) — PL008 reports pragmas that
+suppress nothing.
 """
 from repro.analysis.lint.core import (
     REGISTRY,
@@ -22,6 +29,13 @@ from repro.analysis.lint.core import (
     resolve_rules,
     run_lint,
 )
+from repro.analysis.lint.project import (
+    LintRun,
+    ModuleSummary,
+    ProjectContext,
+    ProjectRule,
+    lint_project,
+)
 
 __all__ = [
     "REGISTRY",
@@ -33,4 +47,9 @@ __all__ = [
     "register",
     "resolve_rules",
     "run_lint",
+    "LintRun",
+    "ModuleSummary",
+    "ProjectContext",
+    "ProjectRule",
+    "lint_project",
 ]

@@ -1,6 +1,11 @@
 """planelint CLI: ``python -m repro.analysis.lint``.
 
 Exit codes: 0 clean, 1 findings, 2 usage/IO error (argparse convention).
+
+Incremental CI shape: PR jobs restore the cache and run
+``--cache .planelint-cache.json --changed-only origin/<base> --format
+github`` (annotations on the diff, only the changed files' reverse-import
+closure re-parses); main runs the full tree with ``--format json``.
 """
 from __future__ import annotations
 
@@ -9,7 +14,8 @@ import json
 import sys
 from pathlib import Path
 
-from repro.analysis.lint.core import all_rules, run_lint
+from repro.analysis.lint.core import all_rules
+from repro.analysis.lint.project import lint_project
 
 
 def _default_path() -> Path:
@@ -17,12 +23,18 @@ def _default_path() -> Path:
     return Path(__file__).resolve().parents[2]
 
 
+def _github_escape(s: str) -> str:
+    return s.replace("%", "%25").replace("\r", "%0D").replace("\n", "%0A")
+
+
 def main(argv: list[str] | None = None) -> int:
     parser = argparse.ArgumentParser(
         prog="python -m repro.analysis.lint",
         description="Statically check the ARCHITECTURE contracts "
                     "(shard_map containment, hot-path numpy glue, VMEM "
-                    "budgets, async-safety, retrace hazards).")
+                    "budgets, async-safety, retrace hazards, kernel "
+                    "oracle-parity, concretization hazards, pragma "
+                    "hygiene).")
     parser.add_argument(
         "paths", nargs="*", type=Path,
         help="files or directories to lint (default: the repro package)")
@@ -30,8 +42,22 @@ def main(argv: list[str] | None = None) -> int:
         "--rule", action="append", metavar="ID",
         help="run only this rule (id or name; repeatable)")
     parser.add_argument(
-        "--format", choices=("text", "json"), default="text",
-        help="output format (default: text)")
+        "--format", choices=("text", "json", "github"), default="text",
+        help="output format (default: text; 'github' emits workflow "
+             "::error annotations)")
+    parser.add_argument(
+        "--cache", nargs="?", const=".planelint-cache.json", default=None,
+        metavar="PATH",
+        help="incremental cache file keyed by file-content hash: only "
+             "changed files + their reverse-import closure re-lint "
+             "(default path when given bare: .planelint-cache.json)")
+    parser.add_argument(
+        "--changed-only", nargs="?", const="HEAD", default=None,
+        metavar="BASE",
+        help="report per-file findings only for files changed vs this git "
+             "ref (worktree + untracked included) and their reverse-import "
+             "closure; cross-file rules still cover the whole tree "
+             "(default ref when given bare: HEAD)")
     parser.add_argument(
         "--no-pragmas", action="store_true",
         help="ignore '# planelint: disable=...' suppressions")
@@ -47,24 +73,39 @@ def main(argv: list[str] | None = None) -> int:
 
     paths = args.paths or [_default_path()]
     try:
-        findings, checked = run_lint(
-            paths, args.rule, respect_pragmas=not args.no_pragmas)
+        run = lint_project(
+            paths, args.rule, respect_pragmas=not args.no_pragmas,
+            cache_path=args.cache, changed_only=args.changed_only)
     except (ValueError, FileNotFoundError) as e:
         print(f"planelint: error: {e}", file=sys.stderr)
         return 2
 
+    findings = run.findings
     if args.format == "json":
         print(json.dumps({
             "version": 1,
             "rules": [r.id for r in all_rules()],
-            "files_checked": checked,
+            "files_checked": run.checked,
+            "files_parsed": len(run.parsed),
+            "files_cached": run.cached,
+            "changed_only": args.changed_only,
             "findings": [f.to_json() for f in findings],
         }, indent=2))
+    elif args.format == "github":
+        for f in findings:
+            print(f"::error file={f.path},line={f.line},col={f.col + 1},"
+                  f"title=planelint {f.rule} [{f.name}]::"
+                  f"{_github_escape(f.message)}")
+        print(f"planelint: {run.checked} file(s) checked, "
+              f"{len(findings)} finding(s)")
     else:
         for f in findings:
             print(f.format())
-        print(f"planelint: {checked} file(s) checked, "
+        print(f"planelint: {run.checked} file(s) checked, "
               f"{len(findings)} finding(s)")
+        if args.cache is not None:
+            print(f"planelint: {len(run.parsed)} file(s) parsed, "
+                  f"{run.cached} served from cache")
     return 1 if findings else 0
 
 

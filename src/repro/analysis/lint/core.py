@@ -44,7 +44,7 @@ __all__ = [
     "run_lint",
 ]
 
-# ``# planelint: disable=PL001`` or ``disable=PL001,PL004`` (same line as the
+# ``planelint: disable=PL001`` or ``disable=PL001,PL004`` (same line as the
 # finding; ``disable=all`` mutes every rule on that line).  Trailing prose
 # after the id list is fine — the id charset ends the match.
 _PRAGMA = re.compile(
@@ -208,14 +208,22 @@ def _modpath(path: Path, root: Path) -> str:
 
 
 def iter_files(paths: Sequence[str | Path]) -> list[tuple[Path, Path]]:
-    """Expand files/directories into (file, lint root) pairs."""
+    """Expand files/directories into (file, lint root) pairs.
+
+    ``__pycache__`` and hidden directories (and hidden files) under a lint
+    root are never walked: cached bytecode and venv/tool droppings must not
+    become lint input even when a ``*.py`` file ends up inside them.
+    """
     out: list[tuple[Path, Path]] = []
     for p in paths:
         root = Path(p)
         if root.is_dir():
-            out.extend(
-                (f, root) for f in sorted(root.rglob("*.py"))
-                if "__pycache__" not in f.parts)
+            for f in sorted(root.rglob("*.py")):
+                rel = f.relative_to(root)
+                if any(part == "__pycache__" or part.startswith(".")
+                       for part in rel.parts):
+                    continue
+                out.append((f, root))
         elif root.is_file():
             out.append((root, root.parent))
         else:
@@ -231,27 +239,13 @@ def run_lint(paths: Sequence[str | Path],
     Returns ``(findings, files_checked)``; findings are deduplicated and
     sorted by (path, line, col, rule).  A file that does not parse yields a
     single ``PL000`` finding rather than aborting the run.
+
+    This is the stable two-value wrapper around the whole-project engine
+    (``repro.analysis.lint.project.lint_project``), which additionally
+    supports the on-disk incremental cache and git ``--changed-only`` mode
+    and reports which files were actually (re-)parsed.
     """
-    rules = resolve_rules(rule_ids)
-    findings: set[Finding] = set()
-    checked = 0
-    for path, root in iter_files(paths):
-        checked += 1
-        try:
-            display = str(path.relative_to(Path.cwd()))
-        except ValueError:
-            display = str(path)
-        try:
-            ctx = FileContext(path, display, _modpath(path, root))
-        except SyntaxError as e:
-            findings.add(Finding(
-                path=display, line=e.lineno or 1, col=e.offset or 0,
-                rule="PL000", name="parse-error",
-                message=f"file does not parse: {e.msg}"))
-            continue
-        for rule in rules:
-            for f in rule.check(ctx):
-                if respect_pragmas and ctx.is_disabled(f.line, f.rule):
-                    continue
-                findings.add(f)
-    return sorted(findings), checked
+    from repro.analysis.lint.project import lint_project
+
+    run = lint_project(paths, rule_ids, respect_pragmas=respect_pragmas)
+    return run.findings, run.checked

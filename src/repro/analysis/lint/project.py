@@ -1,0 +1,891 @@
+"""planelint whole-project engine: ProjectContext, incremental cache, runner.
+
+PR 6's planelint mechanized the *per-file* ARCHITECTURE contracts; the
+invariants protecting the next roadmap moves are **cross-file** properties a
+``FileContext`` cannot see — every kernel entry needs a bit-identical
+``ref`` oracle wired through ``ops.py`` into the conformance gate, and a
+host-side ``float()`` is only a hazard when the value it concretizes flows
+from a parameter of a jit/pallas-reachable function *somewhere else*.
+
+This module grows the runner into a whole-project analysis:
+
+* ``ModuleSummary``  — the JSON-serializable per-module facts every
+  cross-file rule consumes: import targets, local alias bindings, top-level
+  defs with line numbers, per-function call lists and parameter staticness,
+  names wrapped by ``jax.jit``/``pallas_call``, and the pragma table.
+  Summaries are built from an AST once and then *cached*, so a warmed run
+  reconstructs the project view without re-parsing clean files.
+* ``ProjectContext`` — the project built once per run: module/import graph
+  over the linted tree (plus the conformance test as an auxiliary node),
+  symbol resolution with one-level call resolution (``ops.tree_walk_v`` in
+  ``core/plane.py`` resolves to the def in ``kernels/ops.py``), forward and
+  reverse import closures, and the global jit/pallas-reachable function set.
+* ``ProjectRule``    — the cross-file rule protocol.  ``check_project``
+  runs once per run from summaries alone (PL006 oracle-parity, PL008
+  pragma-hygiene); ``check_file(project, ctx)`` is the per-file hook for
+  rules that need an AST *and* project facts (PL007 concretization-hazard),
+  and participates in the incremental cache via ``file_facts`` — when a
+  clean file's project-derived facts change (a new caller made one of its
+  functions jit-reachable), the file is re-linted even though its bytes
+  did not.
+* ``lint_project``   — the runner: content-hash incremental cache on disk
+  (re-lint only changed files + their reverse-import closure), git
+  ``--changed-only`` mode, and parse accounting (``LintRun.parsed`` is the
+  exact set of files read this run — the incrementality acceptance test
+  asserts on it).
+
+Like ``core``, this module is dependency-free (``ast`` + stdlib): it must
+run in a bare CI step without importing jax or the modules it checks.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import hashlib
+import json
+import subprocess
+from pathlib import Path
+from typing import Any, Iterable, Protocol, Sequence, runtime_checkable
+
+from repro.analysis.lint.core import (
+    FileContext,
+    Finding,
+    Rule,
+    _modpath,
+    iter_files,
+    resolve_rules,
+)
+
+__all__ = [
+    "ModuleSummary",
+    "FunctionInfo",
+    "ProjectContext",
+    "ProjectRule",
+    "LintRun",
+    "lint_project",
+    "summarize",
+]
+
+CACHE_SCHEMA = 1
+
+# Parameter annotations naming only these are static Python scalars, not
+# traced arrays — ``n_classes: int`` is a trace-time constant, so ``int()``
+# on it concretizes nothing.
+_STATIC_ANN_IDS = {"int", "float", "bool", "str", "bytes", "None",
+                   "Optional", "Union"}
+_JIT_CTORS = {"jit", "pallas_call"}
+
+# The auxiliary project node: the conformance gate lives outside the linted
+# package but PL006's reachability leg is *about* it, so the engine walks up
+# from each lint root and adopts it (summaries only — per-file rules never
+# run on auxiliary files).
+_AUX_RELPATH = ("tests", "test_conformance.py")
+
+
+# ==========================================================================
+# Module summaries
+# ==========================================================================
+@dataclasses.dataclass
+class FunctionInfo:
+    """One top-level or class-level function: the def-use facts rules need."""
+
+    qual: str                  # "fn" or "Class.fn"
+    cls: str | None
+    line: int
+    params: list[str]          # non-static parameter names, in order
+    static_params: list[str]   # annotated scalar / static_argnames params
+    jit: bool                  # jit/pallas decorated (incl. partial(jax.jit))
+    calls: list[str]           # dotted call targets as written, deduplicated
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "FunctionInfo":
+        return cls(**d)
+
+
+@dataclasses.dataclass
+class ModuleSummary:
+    """Per-module facts, buildable from an AST and round-trippable as JSON."""
+
+    modpath: str                     # package-relative, "/"-separated
+    display: str                     # the path findings report
+    aux: bool = False                # auxiliary node (conformance test)
+    parse_error: bool = False
+    aliases: dict[str, str] = dataclasses.field(default_factory=dict)
+    import_targets: list[str] = dataclasses.field(default_factory=list)
+    defs: dict[str, dict] = dataclasses.field(default_factory=dict)
+    functions: list[FunctionInfo] = dataclasses.field(default_factory=list)
+    jit_wrapped: list[str] = dataclasses.field(default_factory=list)
+    pragmas: dict[int, list[str]] = dataclasses.field(default_factory=dict)
+
+    def function(self, qual: str) -> FunctionInfo | None:
+        for f in self.functions:
+            if f.qual == qual:
+                return f
+        return None
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["functions"] = [f.to_json() for f in self.functions]
+        d["pragmas"] = {str(k): sorted(v) for k, v in self.pragmas.items()}
+        return d
+
+    @classmethod
+    def from_json(cls, d: dict) -> "ModuleSummary":
+        d = dict(d)
+        d["functions"] = [FunctionInfo.from_json(f) for f in d["functions"]]
+        d["pragmas"] = {int(k): list(v) for k, v in d["pragmas"].items()}
+        return cls(**d)
+
+
+def _dotted_chain(node: ast.AST) -> str | None:
+    """``a.b.c`` for a Name/Attribute chain rooted at a Name, else None."""
+    parts: list[str] = []
+    cur = node
+    while isinstance(cur, ast.Attribute):
+        parts.append(cur.attr)
+        cur = cur.value
+    if isinstance(cur, ast.Name):
+        parts.append(cur.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _is_static_annotation(node: ast.AST | None) -> bool:
+    if node is None:
+        return False
+    ids = set()
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name):
+            ids.add(n.id)
+        elif isinstance(n, ast.Attribute):
+            ids.add(n.attr)
+        elif isinstance(n, ast.Constant):
+            if n.value is None:
+                ids.add("None")
+            elif isinstance(n.value, str):
+                # string annotation: "int | None"
+                ids.update(t.strip() for t in
+                           n.value.replace("|", " ").replace("[", " ")
+                           .replace("]", " ").replace(",", " ").split())
+    return bool(ids) and ids <= _STATIC_ANN_IDS
+
+
+def _decorator_static_argnames(fn: ast.AST) -> set[str]:
+    """Names pinned static by ``@functools.partial(jax.jit,
+    static_argnames=(...))`` / ``static_argnums=(...)`` decorators."""
+    out: set[str] = set()
+    args = [a.arg for a in fn.args.posonlyargs + fn.args.args]
+    for dec in getattr(fn, "decorator_list", []):
+        if not isinstance(dec, ast.Call):
+            continue
+        for kw in dec.keywords:
+            if kw.arg == "static_argnames":
+                for n in ast.walk(kw.value):
+                    if isinstance(n, ast.Constant) and isinstance(n.value, str):
+                        out.add(n.value)
+            elif kw.arg == "static_argnums":
+                for n in ast.walk(kw.value):
+                    if isinstance(n, ast.Constant) and isinstance(n.value, int):
+                        if 0 <= n.value < len(args):
+                            out.add(args[n.value])
+    return out
+
+
+def _fn_params(fn: ast.AST) -> tuple[list[str], list[str]]:
+    """Split a def's parameters into (traced-candidate, static) name lists."""
+    static = _decorator_static_argnames(fn)
+    a = fn.args
+    params, static_out = [], []
+    for arg in a.posonlyargs + a.args + a.kwonlyargs:
+        if arg.arg in ("self", "cls"):
+            continue
+        if arg.arg in static or _is_static_annotation(arg.annotation):
+            static_out.append(arg.arg)
+        else:
+            params.append(arg.arg)
+    return params, static_out
+
+
+def _has_jit_decorator(fn: ast.AST) -> bool:
+    from repro.analysis.lint.rules.common import has_decorator_id
+
+    return has_decorator_id(fn, _JIT_CTORS)
+
+
+def _calls_in(node: ast.AST) -> list[str]:
+    seen: list[str] = []
+    for n in ast.walk(node):
+        if isinstance(n, ast.Call):
+            name = _dotted_chain(n.func)
+            if name and name not in seen:
+                seen.append(name)
+    return seen
+
+
+def _wrapped_names(tree: ast.AST) -> list[str]:
+    """Names of functions passed (possibly through ``functools.partial``) to
+    a ``jit(...)``/``pallas_call(...)`` construction anywhere in the module:
+    ``jax.jit(functools.partial(_classify_impl, ...))`` yields
+    ``_classify_impl``; ``pl.pallas_call(_kernel, ...)`` yields ``_kernel``.
+    A call *result* passed to jit (``jax.jit(self._build(n))``) wraps the
+    returned closure, not the builder, and is deliberately not recorded.
+    """
+    out: list[str] = []
+
+    def harvest(arg: ast.AST) -> None:
+        if isinstance(arg, ast.Name):
+            out.append(arg.id)
+        elif isinstance(arg, ast.Attribute):
+            out.append(arg.attr)
+        elif isinstance(arg, ast.Call):
+            fname = _dotted_chain(arg.func) or ""
+            if fname.rsplit(".", 1)[-1] == "partial":
+                for a in arg.args:
+                    harvest(a)
+
+    for n in ast.walk(tree):
+        if not isinstance(n, ast.Call):
+            continue
+        fname = _dotted_chain(n.func) or ""
+        if fname.rsplit(".", 1)[-1] in _JIT_CTORS:
+            for a in n.args:
+                harvest(a)
+    return sorted(set(out))
+
+
+def summarize(ctx: FileContext, *, aux: bool = False) -> ModuleSummary:
+    """Build the ModuleSummary of a parsed file."""
+    s = ModuleSummary(modpath=ctx.modpath, display=ctx.display, aux=aux)
+    s.pragmas = {line: sorted(ids) for line, ids in ctx.disabled.items()}
+    # the package a relative import resolves against: path minus the file
+    # (which for ``pkg/__init__.py`` is the package itself — same formula)
+    pkg = ctx.modpath.rsplit("/", 1)[0].split("/") if "/" in ctx.modpath else []
+
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                s.import_targets.append(a.name)
+                s.aliases[a.asname or a.name.split(".")[0]] = \
+                    a.name if a.asname else a.name.split(".")[0]
+        elif isinstance(node, ast.ImportFrom):
+            if node.level:
+                base = pkg[:len(pkg) - (node.level - 1)] if node.level > 1 \
+                    else list(pkg)
+            else:
+                base = []
+            base += (node.module or "").split(".") if node.module else []
+            base = [b for b in base if b]
+            if base:
+                s.import_targets.append(".".join(base))
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                target = ".".join(base + [a.name])
+                s.import_targets.append(target)
+                s.aliases[a.asname or a.name] = target
+
+    module_calls: list[str] = []
+    units: list[tuple[ast.AST, str | None]] = []
+    for stmt in ctx.tree.body:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            units.append((stmt, None))
+            s.defs[stmt.name] = {"kind": "function", "line": stmt.lineno}
+        elif isinstance(stmt, ast.ClassDef):
+            s.defs[stmt.name] = {"kind": "class", "line": stmt.lineno}
+            for item in stmt.body:
+                if isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    units.append((item, stmt.name))
+        else:
+            module_calls.extend(_calls_in(stmt))
+
+    for fn, cls in units:
+        params, static = _fn_params(fn)
+        s.functions.append(FunctionInfo(
+            qual=f"{cls}.{fn.name}" if cls else fn.name, cls=cls,
+            line=fn.lineno, params=params, static_params=static,
+            jit=_has_jit_decorator(fn), calls=_calls_in(fn)))
+    if module_calls:
+        s.functions.append(FunctionInfo(
+            qual="<module>", cls=None, line=1, params=[], static_params=[],
+            jit=False, calls=sorted(set(module_calls))))
+    s.jit_wrapped = _wrapped_names(ctx.tree)
+    return s
+
+
+# ==========================================================================
+# ProjectContext
+# ==========================================================================
+class ProjectContext:
+    """The whole linted tree as one graph, built once per run.
+
+    Rules consume: ``modules`` (modpath -> ModuleSummary), symbol/call
+    resolution (``resolve``), forward/reverse import closures, and the
+    jit/pallas-reachable function sets.  ``context_of`` parses a file on
+    demand (recorded in ``parsed`` — the incrementality accounting).
+    """
+
+    def __init__(self, *, rules_run: Sequence[str] = (),
+                 respect_pragmas: bool = True,
+                 full_rules: bool = True) -> None:
+        self.modules: dict[str, ModuleSummary] = {}
+        self.rules_run = list(rules_run)
+        self.respect_pragmas = respect_pragmas
+        self.full_rules = full_rules
+        # engine-populated accounting consumed by PL008:
+        self.suppressed: dict[str, set[tuple[int, str]]] = {}
+        self.linted: set[str] = set()
+        self.parsed: list[str] = []
+        self._files: dict[str, Path] = {}
+        self._displays: dict[str, str] = {}
+        self._ctx_cache: dict[str, FileContext] = {}
+        self._by_parts: dict[tuple[str, ...], str] = {}
+        self._edges: dict[str, set[str]] | None = None
+        self._reach: dict[str, set[str]] | None = None
+        self._ext_reach: dict[str, set[str]] | None = None
+
+    # ------------------------------------------------------------- build
+    def register_file(self, modpath: str, path: Path, display: str) -> None:
+        """Make a file parseable via ``context_of`` before its summary
+        exists (the engine registers every record up front)."""
+        self._files[modpath] = path
+        self._displays[modpath] = display
+
+    def add(self, summary: ModuleSummary, path: Path) -> None:
+        self.modules[summary.modpath] = summary
+        self._files[summary.modpath] = path
+        self._displays[summary.modpath] = summary.display
+        parts = summary.modpath[:-3].split("/") \
+            if summary.modpath.endswith(".py") else summary.modpath.split("/")
+        if parts and parts[-1] == "__init__":
+            parts = parts[:-1]
+        if parts:
+            self._by_parts[tuple(parts)] = summary.modpath
+        self._edges = self._reach = self._ext_reach = None
+
+    def module(self, modpath: str) -> ModuleSummary | None:
+        return self.modules.get(modpath)
+
+    def path_of(self, modpath: str) -> Path | None:
+        return self._files.get(modpath)
+
+    def context_of(self, modpath: str) -> FileContext:
+        """Parse (once) and return the FileContext — SyntaxError propagates.
+
+        Every first parse is recorded in ``parsed``: the warmed-cache
+        acceptance test asserts this is exactly the edited file's
+        reverse-import closure.
+        """
+        if modpath not in self._ctx_cache:
+            self._ctx_cache[modpath] = FileContext(
+                self._files[modpath], self._displays[modpath], modpath)
+            self.parsed.append(modpath)
+        return self._ctx_cache[modpath]
+
+    # -------------------------------------------------------- resolution
+    def _module_for(self, dotted_parts: Sequence[str]) \
+            -> tuple[str, str | None] | None:
+        """Longest-prefix match of a dotted path against project modules;
+        a leading ``repro`` package wrapper is stripped so absolute
+        ``repro.kernels.ref`` imports resolve in package-relative and
+        fixture-relative trees alike."""
+        parts = list(dotted_parts)
+        if parts and parts[0] == "repro":
+            parts = parts[1:]
+        for i in range(len(parts), 0, -1):
+            mp = self._by_parts.get(tuple(parts[:i]))
+            if mp is not None:
+                return mp, ".".join(parts[i:]) or None
+        return None
+
+    def resolve(self, modpath: str, dotted: str) \
+            -> tuple[str, str | None] | None:
+        """Resolve a dotted reference written in ``modpath`` to
+        ``(target modpath, symbol-or-None)`` — one-level call resolution.
+
+        ``ops.tree_walk_v`` under ``from repro.kernels import ops`` resolves
+        to ``("kernels/ops.py", "tree_walk_v")``; a bare name defined in the
+        module resolves to itself; anything leaving the project is ``None``.
+        """
+        summ = self.modules.get(modpath)
+        if summ is None:
+            return None
+        parts = dotted.split(".")
+        head = parts[0]
+        target = summ.aliases.get(head)
+        if target is not None:
+            full = target.split(".") + parts[1:]
+        elif head in summ.defs:
+            return (modpath, ".".join(parts)) if len(parts) == 1 \
+                else (modpath, head)
+        else:
+            full = parts
+        return self._module_for(full)
+
+    # ------------------------------------------------------ import graph
+    def _build_edges(self) -> dict[str, set[str]]:
+        if self._edges is None:
+            edges: dict[str, set[str]] = {m: set() for m in self.modules}
+            for mp, summ in self.modules.items():
+                for target in summ.import_targets:
+                    hit = self._module_for(target.split("."))
+                    if hit and hit[0] != mp:
+                        edges[mp].add(hit[0])
+            self._edges = edges
+        return self._edges
+
+    def imports_of(self, modpath: str) -> set[str]:
+        return set(self._build_edges().get(modpath, ()))
+
+    def import_closure(self, modpath: str) -> set[str]:
+        """Forward closure: everything ``modpath`` (transitively) imports,
+        including itself."""
+        edges = self._build_edges()
+        seen, todo = set(), [modpath]
+        while todo:
+            m = todo.pop()
+            if m in seen or m not in edges:
+                continue
+            seen.add(m)
+            todo.extend(edges[m])
+        return seen
+
+    def importers_closure(self, modpaths: Iterable[str]) -> set[str]:
+        """Reverse closure: the seeds plus everything that (transitively)
+        imports them — the invalidation set of an edit."""
+        edges = self._build_edges()
+        rev: dict[str, set[str]] = {m: set() for m in edges}
+        for src, dsts in edges.items():
+            for d in dsts:
+                rev.setdefault(d, set()).add(src)
+        seen: set[str] = set()
+        todo = [m for m in modpaths if m in self.modules]
+        while todo:
+            m = todo.pop()
+            if m in seen:
+                continue
+            seen.add(m)
+            todo.extend(rev.get(m, ()))
+        return seen
+
+    # --------------------------------------------- jit/pallas reachability
+    def _build_reach(self) -> None:
+        if self._reach is not None:
+            return
+        entries: dict[str, set[str]] = {}
+        for mp, summ in self.modules.items():
+            wrapped = set(summ.jit_wrapped)
+            mod_entries = set()
+            for fn in summ.functions:
+                last = fn.qual.rsplit(".", 1)[-1]
+                if fn.jit or last in wrapped:
+                    mod_entries.add(fn.qual)
+            entries[mp] = mod_entries
+        reach = {mp: set(e) for mp, e in entries.items()}
+        ext: dict[str, set[str]] = {mp: set() for mp in self.modules}
+        for mp, summ in self.modules.items():
+            for fn in summ.functions:
+                if fn.qual not in entries[mp]:
+                    continue
+                for call in fn.calls:
+                    if call.startswith("self.") and fn.cls:
+                        qual = f"{fn.cls}.{call.split('.', 1)[1]}"
+                        if self.modules[mp].function(qual):
+                            reach[mp].add(qual)
+                        continue
+                    hit = self.resolve(mp, call)
+                    if hit is None or hit[1] is None:
+                        continue
+                    tmod, sym = hit
+                    target = self.modules[tmod].function(sym)
+                    if target is not None:
+                        reach[tmod].add(target.qual)
+                        if tmod != mp:
+                            ext[tmod].add(target.qual)
+        self._reach, self._ext_reach = reach, ext
+
+    def jit_reachable(self, modpath: str) -> set[str]:
+        """Quals in ``modpath`` that are jit/pallas entries or called
+        (one level) from an entry anywhere in the project."""
+        self._build_reach()
+        return set(self._reach.get(modpath, set()))
+
+    def external_jit_reachable(self, modpath: str) -> set[str]:
+        """The cross-file slice of ``jit_reachable`` — quals made reachable
+        by *other* modules.  This is the per-file cache-invalidation fact
+        for PL007: a clean file whose external set changed must re-lint."""
+        self._build_reach()
+        return set(self._ext_reach.get(modpath, set()))
+
+
+@runtime_checkable
+class ProjectRule(Protocol):
+    """A cross-file contract check (registered via ``@core.register``).
+
+    Implement any of:
+
+    * ``check_project(project)`` — run once per run from summaries alone;
+    * ``check_file(project, ctx)`` — per-file, with project facts; cached
+      per file and invalidated by content hash *or* a ``file_facts`` change.
+    """
+
+    id: str
+    name: str
+    description: str
+
+    def check_project(self, project: ProjectContext) -> Iterable[Finding]: ...
+
+
+def _rule_kinds(rules: Sequence[Rule]) \
+        -> tuple[list[Rule], list[Rule], list[Rule]]:
+    per_file = [r for r in rules if callable(getattr(r, "check", None))]
+    hybrid = [r for r in rules if callable(getattr(r, "check_file", None))]
+    project = [r for r in rules if callable(getattr(r, "check_project", None))]
+    return per_file, hybrid, project
+
+
+# ==========================================================================
+# Incremental cache
+# ==========================================================================
+def _tool_digest() -> str:
+    """Digest of the lint package's own sources — any rule/engine edit
+    invalidates the whole cache (stale findings are worse than a re-run)."""
+    pkg = Path(__file__).resolve().parent
+    h = hashlib.sha256()
+    for f in sorted(pkg.rglob("*.py")):
+        if "__pycache__" in f.parts:
+            continue
+        h.update(f.name.encode())
+        h.update(f.read_bytes())
+    return h.hexdigest()[:16]
+
+
+def _file_hash(path: Path) -> str:
+    return hashlib.sha256(path.read_bytes()).hexdigest()[:16]
+
+
+def _load_cache(cache_path: Path | None, rules: Sequence[Rule],
+                respect_pragmas: bool) -> dict:
+    empty = {"schema": CACHE_SCHEMA, "tool": _tool_digest(),
+             "rules": sorted(r.id for r in rules),
+             "respect_pragmas": respect_pragmas, "files": {}}
+    if cache_path is None or not cache_path.is_file():
+        return empty
+    try:
+        doc = json.loads(cache_path.read_text())
+    except (ValueError, OSError):
+        return empty
+    for key in ("schema", "tool", "rules", "respect_pragmas"):
+        if doc.get(key) != empty[key]:
+            return empty
+    if not isinstance(doc.get("files"), dict):
+        return empty
+    return doc
+
+
+def _git_changed_files(base: str, anchor: Path) -> set[Path] | None:
+    """Absolute paths changed vs ``base`` (committed + worktree + untracked)
+    in the repo containing ``anchor``; None when git is unavailable."""
+    anchor_dir = anchor if anchor.is_dir() else anchor.parent
+
+    def git(*args: str) -> str | None:
+        try:
+            proc = subprocess.run(
+                ["git", "-C", str(anchor_dir), *args],
+                capture_output=True, text=True, timeout=30)
+        except (OSError, subprocess.TimeoutExpired):
+            return None
+        return proc.stdout if proc.returncode == 0 else None
+
+    top = git("rev-parse", "--show-toplevel")
+    if top is None:
+        return None
+    root = Path(top.strip())
+    diff = git("diff", "--name-only", base, "--")
+    if diff is None:
+        return None
+    untracked = git("ls-files", "--others", "--exclude-standard") or ""
+    return {(root / line).resolve()
+            for line in (diff + untracked).splitlines() if line.strip()}
+
+
+def _discover_aux(roots: Iterable[Path], have: set[Path]) \
+        -> list[tuple[Path, str]]:
+    """Walk up (<= 3 levels) from each lint root for the conformance test —
+    the auxiliary node PL006's reachability leg is anchored to."""
+    out, seen = [], set()
+    for root in roots:
+        base = root if root.is_dir() else root.parent
+        for up in (base, base.parent, base.parent.parent):
+            cand = (up / Path(*_AUX_RELPATH)).resolve()
+            if cand in have or cand in seen or not cand.is_file():
+                continue
+            seen.add(cand)
+            out.append((cand, "/".join(_AUX_RELPATH)))
+    return out
+
+
+# ==========================================================================
+# The runner
+# ==========================================================================
+@dataclasses.dataclass
+class LintRun:
+    """One engine run: findings plus the incrementality accounting."""
+
+    findings: list[Finding]
+    checked: int                 # lint-target files considered (aux excluded)
+    parsed: list[str]            # modpaths actually read+parsed this run
+    cached: int                  # files whose findings came from the cache
+    changed: list[str]           # modpaths with new content (or no cache)
+    reported_paths: set[str] = dataclasses.field(default_factory=set)
+    project: "ProjectContext | None" = None   # the graph rules ran against
+
+
+def lint_project(paths: Sequence[str | Path],
+                 rule_ids: Sequence[str] | None = None, *,
+                 respect_pragmas: bool = True,
+                 cache_path: str | Path | None = None,
+                 changed_only: str | None = None) -> LintRun:
+    """Whole-project lint with incremental caching.
+
+    ``cache_path``   — on-disk JSON cache keyed by file-content hash; only
+    changed files, their reverse-import closure, and files whose
+    project-derived facts changed are re-parsed and re-linted.
+    ``changed_only`` — a git ref: per-file findings are reported only for
+    files changed vs that ref (worktree + untracked included) plus their
+    reverse-import closure; cross-file (project-rule) findings are always
+    reported.  Project summaries still cover the whole tree, so PL006-class
+    invariants cannot be dodged by a narrow diff.
+    """
+    from repro.analysis.lint.core import all_rules
+
+    rules = resolve_rules(rule_ids)
+    full = {r.id for r in rules} == {r.id for r in all_rules()}
+    per_file_rules, hybrid_rules, project_rules = _rule_kinds(rules)
+    cache_path = Path(cache_path) if cache_path is not None else None
+
+    files = iter_files(paths)
+    records: list[dict] = []
+    have: set[Path] = set()
+    for path, root in files:
+        resolved = path.resolve()
+        if resolved in have:
+            continue
+        have.add(resolved)
+        try:
+            display = str(path.relative_to(Path.cwd()))
+        except ValueError:
+            display = str(path)
+        records.append({"path": resolved, "display": display,
+                        "modpath": _modpath(path, root), "aux": False})
+    roots = [Path(p) for p in paths]
+    for path, modpath in _discover_aux(roots, have):
+        try:
+            display = str(path.relative_to(Path.cwd()))
+        except ValueError:
+            display = str(path)
+        records.append({"path": path, "display": display,
+                        "modpath": modpath, "aux": True})
+
+    cache = _load_cache(cache_path, rules, respect_pragmas)
+    old_files: dict[str, dict] = cache["files"]
+
+    project = ProjectContext(rules_run=[r.id for r in rules],
+                             respect_pragmas=respect_pragmas,
+                             full_rules=full)
+
+    # -- pass 1: hashes + summaries (cached summaries skip the parse) ------
+    content_changed: set[str] = set()
+    parse_errors: dict[str, Finding] = {}
+
+    def parse_and_summarize(rec: dict) -> ModuleSummary:
+        try:
+            ctx = project.context_of(rec["modpath"])
+        except SyntaxError as e:
+            project.parsed.append(rec["modpath"])   # read+failed still counts
+            parse_errors[rec["modpath"]] = Finding(
+                path=rec["display"], line=e.lineno or 1, col=e.offset or 0,
+                rule="PL000", name="parse-error",
+                message=f"file does not parse: {e.msg}")
+            return ModuleSummary(modpath=rec["modpath"],
+                                 display=rec["display"], aux=rec["aux"],
+                                 parse_error=True)
+        return summarize(ctx, aux=rec["aux"])
+
+    for rec in records:
+        project.register_file(rec["modpath"], rec["path"], rec["display"])
+    for rec in records:
+        rec["hash"] = _file_hash(rec["path"])
+        entry = old_files.get(str(rec["path"]))
+        if entry is not None and entry.get("hash") == rec["hash"] \
+                and entry.get("summary") is not None:
+            summary = ModuleSummary.from_json(entry["summary"])
+            # display paths are cwd-relative; refresh if cwd moved
+            summary.display = rec["display"]
+            project.add(summary, rec["path"])
+            rec["cached"] = entry
+        else:
+            content_changed.add(rec["modpath"])
+            rec["cached"] = None
+            summary = parse_and_summarize(rec)
+            project.add(summary, rec["path"])
+        rec["summary"] = summary
+        if summary.parse_error and rec["cached"] is not None:
+            # cached parse error: replay the stored PL000 finding
+            for fd in rec["cached"].get("findings") or []:
+                if fd["rule"] == "PL000":
+                    parse_errors[rec["modpath"]] = Finding(**{
+                        **fd, "path": rec["display"]})
+
+    # -- pass 2: invalidation = changed + reverse closure + fact drift -----
+    # Per-file rules depend on the file's bytes alone; hybrid rules also
+    # depend on project-derived facts (e.g. which of the file's functions
+    # other modules made jit-reachable), so a clean file re-lints when its
+    # facts digest drifts even though its hash did not.
+    needs_lint = project.importers_closure(content_changed)
+    fact_drift: set[str] = set()
+    for rec in records:
+        mp = rec["modpath"]
+        if rec["aux"] or rec["summary"].parse_error or mp in content_changed:
+            continue
+        entry = rec["cached"]
+        if entry is None or entry.get("findings") is None:
+            needs_lint.add(mp)       # summary cached but never fully linted
+            continue
+        old_facts = entry.get("facts") or {}
+        for rule in hybrid_rules:
+            fact_fn = getattr(rule, "file_facts", None)
+            if fact_fn is None:
+                continue
+            if fact_fn(project, mp) != old_facts.get(rule.id):
+                fact_drift.add(mp)
+                break
+    needs_lint |= fact_drift
+
+    # -- changed-only: which files' per-file findings get reported ---------
+    report_scope: set[str] | None = None
+    if changed_only is not None:
+        git_changed = _git_changed_files(changed_only, records[0]["path"]
+                                         if records else Path.cwd())
+        if git_changed is not None:
+            seeds = {rec["modpath"] for rec in records
+                     if rec["path"] in git_changed}
+            report_scope = project.importers_closure(seeds)
+            # files outside the diff scope never re-lint in this mode
+            # (fact-drifted and content-changed files still do, so their
+            # cache entries never go stale); their old entries are kept
+            needs_lint &= report_scope | content_changed | fact_drift
+
+    # -- pass 3: per-file rules on the invalidated set ---------------------
+    findings: set[Finding] = set()
+    file_findings: dict[str, list[Finding]] = {}
+    cached_count = 0
+    for rec in records:
+        mp = rec["modpath"]
+        summary = rec["summary"]
+        if summary.parse_error:
+            if mp in parse_errors:
+                file_findings[mp] = [parse_errors[mp]]
+                project.linted.add(mp)
+            continue
+        if rec["aux"]:
+            continue     # auxiliary nodes feed summaries only
+        if mp in needs_lint:
+            ctx = project.context_of(mp)
+            raw: list[Finding] = []
+            for rule in per_file_rules:
+                raw.extend(rule.check(ctx))
+            for rule in hybrid_rules:
+                raw.extend(rule.check_file(project, ctx))
+            kept, suppressed = [], set()
+            for f in raw:
+                if respect_pragmas and ctx.is_disabled(f.line, f.rule):
+                    suppressed.add((f.line, f.rule))
+                else:
+                    kept.append(f)
+            file_findings[mp] = kept
+            project.suppressed[mp] = suppressed
+            project.linted.add(mp)
+        elif rec["cached"] is not None \
+                and rec["cached"].get("findings") is not None:
+            file_findings[mp] = [Finding(**{**fd, "path": rec["display"]})
+                                 for fd in rec["cached"]["findings"]]
+            project.suppressed[mp] = {
+                (int(l), r) for l, r in rec["cached"].get("suppressed", [])}
+            project.linted.add(mp)
+            cached_count += 1
+        # else: summary-only (changed-only mode skipped it)
+
+    for mp, fs in file_findings.items():
+        findings.update(fs)
+
+    # -- pass 4: project rules (summaries + suppression accounting) --------
+    project_findings: set[Finding] = set()
+    display_to_mod = {rec["summary"].display: rec["modpath"]
+                      for rec in records}
+    for rule in project_rules:
+        for f in rule.check_project(project):
+            mp = display_to_mod.get(f.path)
+            if respect_pragmas and mp is not None:
+                ids = set(project.modules[mp].pragmas.get(f.line, ()))
+                ids = {i.upper() for i in ids}
+                # 'disable=all' must not swallow the PL008 finding reporting
+                # that very pragma (self-silencing loop); naming PL008
+                # explicitly is the sanctioned keep-this-pragma escape hatch
+                blanket = "ALL" in ids and f.rule.upper() != "PL008"
+                if f.rule.upper() in ids or blanket:
+                    continue
+            project_findings.add(f)
+    findings.update(project_findings)
+
+    # -- save cache --------------------------------------------------------
+    if cache_path is not None:
+        out_files = {}
+        for rec in records:
+            mp = rec["modpath"]
+            entry: dict[str, Any] = {
+                "hash": rec["hash"],
+                "summary": rec["summary"].to_json(),
+                "findings": None, "suppressed": [], "facts": {},
+            }
+            if mp in file_findings or (mp in project.linted
+                                       and not rec["summary"].parse_error):
+                entry["findings"] = [f.to_json()
+                                     for f in file_findings.get(mp, [])]
+                entry["suppressed"] = sorted(
+                    list(t) for t in project.suppressed.get(mp, ()))
+                for rule in hybrid_rules:
+                    fact_fn = getattr(rule, "file_facts", None)
+                    if fact_fn is not None and not rec["aux"]:
+                        entry["facts"][rule.id] = fact_fn(project, mp)
+            elif rec["summary"].parse_error and mp in parse_errors:
+                entry["findings"] = [parse_errors[mp].to_json()]
+            elif rec["cached"] is not None:
+                entry["findings"] = rec["cached"].get("findings")
+                entry["suppressed"] = rec["cached"].get("suppressed", [])
+                entry["facts"] = rec["cached"].get("facts", {})
+            out_files[str(rec["path"])] = entry
+        cache["files"] = out_files
+        try:
+            cache_path.parent.mkdir(parents=True, exist_ok=True)
+            cache_path.write_text(json.dumps(cache))
+        except OSError:
+            pass     # an unwritable cache degrades to a full run next time
+
+    # -- report ------------------------------------------------------------
+    reported: set[Finding] = set(project_findings)
+    if report_scope is None:
+        reported.update(f for fs in file_findings.values() for f in fs)
+    else:
+        for mp, fs in file_findings.items():
+            if mp in report_scope:
+                reported.update(fs)
+
+    checked = sum(1 for rec in records if not rec["aux"])
+    return LintRun(
+        findings=sorted(reported), checked=checked,
+        parsed=list(project.parsed), cached=cached_count,
+        changed=sorted(content_changed),
+        reported_paths={f.path for f in reported}, project=project)

@@ -7,10 +7,22 @@
 | PL003 | vmem-budget           | kernel VMEM footprints match budgets.py     |
 | PL004 | async-blocking        | no blocking calls inside ``async def``      |
 | PL005 | retrace-hazard        | jit/pallas_call construction is memoized    |
+| PL006 | oracle-parity         | every ``*_v`` kernel entry has a ref oracle,|
+|       |                       | ops dispatch, and conformance reachability  |
+| PL007 | concretization-hazard | no float()/int()/.item()/np.asarray on      |
+|       |                       | values from jit/pallas-reachable params     |
+| PL008 | pragma-hygiene        | no ``disable=`` pragma that suppresses      |
+|       |                       | nothing                                     |
+
+PL001-PL005 are per-file rules (``check(ctx)``); PL006-PL008 run on the
+whole-project engine (``repro.analysis.lint.project``): PL006/PL008 via
+``check_project`` from cached module summaries, PL007 via
+``check_file(project, ctx)`` with cross-file cache invalidation.
 
 Adding a rule: drop a module here that defines a class with ``id``/``name``/
-``description`` and ``check(ctx)``, decorate it with ``@core.register``, and
-import it below.  IDs are stable and never reused.
+``description`` and ``check(ctx)`` (or ``check_project``/``check_file``),
+decorate it with ``@core.register``, and import it below.  IDs are stable
+and never reused.
 """
 from repro.analysis.lint.rules import (  # noqa: F401  (import = register)
     pl001_shard_map,
@@ -18,4 +30,7 @@ from repro.analysis.lint.rules import (  # noqa: F401  (import = register)
     pl003_vmem_budget,
     pl004_async_blocking,
     pl005_retrace,
+    pl006_oracle_parity,
+    pl007_concretize,
+    pl008_pragma_hygiene,
 )

@@ -19,7 +19,7 @@ Calls inside jit-compiled functions (any enclosing def decorated with
 ``jit``/``pallas_call``, where the op is traced once per shape) are exempt.
 A deliberate device-side branch (e.g. admission's device-resident-leaf
 padding, which must not force a host round-trip) carries a
-``# planelint: disable=PL002`` pragma with its justification.
+``planelint: disable=PL002`` pragma with its justification.
 """
 from __future__ import annotations
 

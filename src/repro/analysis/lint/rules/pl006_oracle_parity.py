@@ -1,0 +1,145 @@
+"""PL006 — oracle-parity.
+
+ACORN's usability claim is that deployment correctness is validated *before*
+anything reaches the data plane (paper §5); IIsy and pForest document how an
+in-network model silently diverges from its host-side twin once the mapping
+layer drifts.  This repo's equivalent contract: **every public
+version-indexed kernel entry ships pre-gated** — a ``*_v`` def in one of the
+four classify kernel modules must have
+
+1. a bit-identical oracle: ``kernels/ref.py`` defines the matching base name
+   (``tree_walk_pallas_v`` -> ``ref.tree_walk_v``);
+2. a dispatch seam: ``kernels/ops.py`` defines the base-name wrapper and its
+   body calls *both* the ref oracle and the Pallas entry (so ``mode="ref"``
+   and the device path stay swappable per call);
+3. conformance reachability: some module in the import closure of
+   ``tests/test_conformance.py`` calls the ``ops`` wrapper — the 204-draw
+   random-program gate actually exercises it (a call *inside*
+   ``kernels/ops.py`` counts when ops itself is in the closure, which is how
+   the layerwise tree-walk fallback reaches ``tcam_match_v``).
+
+Any fused-megakernel work that adds a new ``*_v`` entry therefore fails CI
+until the oracle, the dispatch table, and the conformance wiring exist — the
+cross-file property PR 6's per-file ``FileContext`` could not see.
+
+This is a pure ``check_project`` rule: it runs every run from cached
+``ModuleSummary`` facts alone and never forces a re-parse.
+"""
+from __future__ import annotations
+
+from repro.analysis.lint.core import Finding, register
+from repro.analysis.lint.project import ProjectContext
+
+KERNEL_MODULES = (
+    "kernels/tree_walk.py",
+    "kernels/forest_vote.py",
+    "kernels/svm_lookup.py",
+    "kernels/tcam_match.py",
+)
+REF_MODULE = "kernels/ref.py"
+OPS_MODULE = "kernels/ops.py"
+CONFORMANCE_FILE = "test_conformance.py"
+
+
+def _conformance_modpath(project: ProjectContext) -> str | None:
+    for mp in project.modules:
+        if mp.split("/")[-1] == CONFORMANCE_FILE:
+            return mp
+    return None
+
+
+def parity_report(project: ProjectContext) -> dict[str, dict]:
+    """Audit every public ``*_v`` kernel entry: which of the three legs
+    (ref oracle, ops dispatch, conformance reachability) hold.
+
+    Exposed for the acceptance test, which asserts all four shipped entries
+    pass all three legs — the rule's findings are this report's failures.
+    """
+    ref = project.module(REF_MODULE)
+    ops = project.module(OPS_MODULE)
+    conf = _conformance_modpath(project)
+    closure = project.import_closure(conf) if conf else set()
+
+    # every call in the closure resolved once: (target modpath, symbol)
+    called: set[tuple[str, str]] = set()
+    for mp in closure:
+        summ = project.module(mp)
+        if summ is None:
+            continue
+        for fn in summ.functions:
+            for call in fn.calls:
+                hit = project.resolve(mp, call)
+                if hit and hit[1]:
+                    called.add((hit[0], hit[1]))
+
+    report: dict[str, dict] = {}
+    for kmod in KERNEL_MODULES:
+        summ = project.module(kmod)
+        if summ is None or summ.parse_error:
+            continue
+        for name, d in sorted(summ.defs.items()):
+            if d["kind"] != "function" or name.startswith("_") \
+                    or not name.endswith("_v"):
+                continue
+            base = name.replace("_pallas", "")
+            has_ref = bool(
+                ref and ref.defs.get(base, {}).get("kind") == "function")
+            dispatcher = ops.function(base) if ops else None
+            has_dispatch = False
+            if dispatcher is not None:
+                resolved = {project.resolve(OPS_MODULE, c)
+                            for c in dispatcher.calls}
+                has_dispatch = ((REF_MODULE, base) in resolved
+                                and (kmod, name) in resolved)
+            reachable = conf is not None and (OPS_MODULE, base) in called
+            report[name] = {
+                "module": kmod, "line": d["line"], "base": base,
+                "ref": has_ref, "dispatch": has_dispatch,
+                "reachable": reachable,
+                "conformance": conf,
+            }
+    return report
+
+
+@register
+class OracleParity:
+    id = "PL006"
+    name = "oracle-parity"
+    description = ("every public *_v kernel entry needs a kernels/ref.py "
+                   "oracle, an ops.py dispatcher calling both paths, and a "
+                   "call chain from tests/test_conformance.py")
+
+    def check_project(self, project: ProjectContext) -> list[Finding]:
+        out = []
+        for name, r in parity_report(project).items():
+            summ = project.module(r["module"])
+            where = f"{name} ({r['module']})"
+            if not r["ref"]:
+                out.append(Finding(
+                    path=summ.display, line=r["line"], col=0, rule=self.id,
+                    name=self.name,
+                    message=f"kernel entry {where} has no oracle: "
+                            f"{REF_MODULE} defines no {r['base']} — the "
+                            "conformance gate has nothing bit-identical to "
+                            "pin this kernel against"))
+            if not r["dispatch"]:
+                out.append(Finding(
+                    path=summ.display, line=r["line"], col=0, rule=self.id,
+                    name=self.name,
+                    message=f"kernel entry {where} is not dispatched: "
+                            f"{OPS_MODULE} needs a {r['base']} wrapper whose "
+                            f"body calls both ref.{r['base']} and {name} so "
+                            "mode='ref' stays swappable per call"))
+            if not r["reachable"]:
+                why = (f"no module in the import closure of "
+                       f"{r['conformance']} calls ops.{r['base']}"
+                       if r["conformance"] else
+                       "tests/test_conformance.py was not found in or near "
+                       "the linted tree")
+                out.append(Finding(
+                    path=summ.display, line=r["line"], col=0, rule=self.id,
+                    name=self.name,
+                    message=f"kernel entry {where} is unreachable from the "
+                            f"conformance gate: {why} — the random-program "
+                            "parity sweep never exercises it"))
+        return out

@@ -1,0 +1,236 @@
+"""PL007 — concretization-hazard.
+
+``float(x)`` / ``int(x)`` / ``bool(x)`` / ``x.item()`` / ``np.asarray(x)``
+on a **traced** value silently forces a device->host transfer and, under
+``jit``, either a ``TracerConversionError`` at best or — the nastier serving
+class PR 5 hit — an eager fallback path that re-dispatches per call.  The
+hazard is a *dataflow* property: the same ``float()`` is fine in a latency
+accounting helper and a bug in anything the classify trace can reach.
+
+The rule therefore runs on the whole-project engine:
+
+* a function is **jit/pallas-reachable** when it is jit-decorated (incl.
+  ``functools.partial(jax.jit, ...)``), passed to a ``jit(...)``/
+  ``pallas_call(...)`` construction (``jax.jit(functools.partial(
+  _classify_impl, ...))``), or called — one level of call resolution,
+  across modules — from such an entry;
+* inside a reachable function, an intraprocedural def-use pass follows
+  values flowing from its parameters (assignments, tuple unpacking, loop
+  targets); parameters annotated as static scalars (``n_classes: int``,
+  ``mode: str | None``) and names listed in ``static_argnames``/
+  ``static_argnums`` are exempt, as are flows through ``.shape``/``.ndim``/
+  ``.dtype``/``.size``/``len()`` — those are trace-time constants;
+* a flagged call concretizes a value whose def-use chain roots in a traced
+  parameter.
+
+Cross-file incrementality: the per-file verdicts are cached; the cache key
+includes this file's *externally* jit-reachable set (``file_facts``), so a
+new caller in another module re-lints this file even though its bytes did
+not change.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.lint.core import FileContext, Finding, register
+from repro.analysis.lint.project import ProjectContext
+from repro.analysis.lint.rules.common import import_aliases
+
+_CAST_FUNCS = {"float", "int", "bool"}
+# attribute reads that yield trace-time constants, not traced values
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size"}
+_STATIC_CALLS = {"len", "isinstance", "type"}
+
+
+def _np_aliases(tree: ast.AST) -> tuple[set[str], set[str]]:
+    """(module aliases of numpy, names asarray was from-imported as)."""
+    mods = import_aliases(tree, "numpy")
+    funcs = import_aliases(tree, "numpy", ("asarray",)) - mods
+    return mods, funcs
+
+
+class _Scan:
+    """One reachable function: forward def-use pass + hazard collection."""
+
+    def __init__(self, rule: "ConcretizationHazard", ctx: FileContext,
+                 fn: ast.AST, qual: str, params: list[str],
+                 np_mods: set[str], np_funcs: set[str]) -> None:
+        self.rule = rule
+        self.ctx = ctx
+        self.qual = qual
+        self.np_mods = np_mods
+        self.np_funcs = np_funcs
+        self.taint: dict[str, str] = {p: p for p in params}
+        self.findings: list[Finding] = []
+        for stmt in fn.body:
+            self.visit(stmt)
+
+    # --------------------------------------------------------- taint query
+    def _origin(self, expr: ast.AST) -> str | None:
+        """The parameter a value in ``expr`` flows from, or None.
+
+        Flows through ``.shape``/``.ndim``/``.dtype``/``.size`` or
+        ``len(...)`` are static under trace and do not propagate taint.
+        """
+        for node in ast.walk(expr):
+            if not (isinstance(node, ast.Name) and node.id in self.taint):
+                continue
+            static = False
+            cur = node
+            while cur is not expr:
+                parent = self.ctx.parent(cur)
+                if parent is None:
+                    break
+                if isinstance(parent, ast.Attribute) \
+                        and parent.value is cur \
+                        and parent.attr in _STATIC_ATTRS:
+                    static = True
+                    break
+                if isinstance(parent, ast.Call) \
+                        and isinstance(parent.func, ast.Name) \
+                        and parent.func.id in _STATIC_CALLS \
+                        and cur is not parent.func:
+                    static = True
+                    break
+                cur = parent
+            if not static:
+                return self.taint[node.id]
+        return None
+
+    # ------------------------------------------------------- hazard check
+    def _flag(self, call: ast.Call) -> None:
+        f = call.func
+        hazard = origin = None
+        if isinstance(f, ast.Name) and f.id in _CAST_FUNCS:
+            origin = next((o for o in map(self._origin, call.args) if o),
+                          None)
+            hazard = f"{f.id}()"
+        elif isinstance(f, ast.Name) and f.id in self.np_funcs and call.args:
+            origin = self._origin(call.args[0])
+            hazard = f"{f.id}()"
+        elif isinstance(f, ast.Attribute) and f.attr == "item" \
+                and not call.args:
+            origin = self._origin(f.value)
+            hazard = ".item()"
+        elif isinstance(f, ast.Attribute) and f.attr == "asarray" \
+                and isinstance(f.value, ast.Name) \
+                and f.value.id in self.np_mods and call.args:
+            origin = self._origin(call.args[0])
+            hazard = f"{f.value.id}.asarray()"
+        if hazard and origin:
+            self.findings.append(self.ctx.finding(
+                self.rule, call,
+                f"{hazard} concretizes a value flowing from parameter "
+                f"'{origin}' of jit/pallas-reachable {self.qual}() — under "
+                "trace this forces a device sync (or an eager per-call "
+                "fallback, the PR 5 serving bug class); keep the math in "
+                "jnp or move the host-side read out of the traced path"))
+
+    def _scan_expr(self, expr: ast.AST | None) -> None:
+        if expr is None:
+            return
+        for node in ast.walk(expr):
+            if isinstance(node, ast.Call):
+                self._flag(node)
+
+    # ------------------------------------------------------ statement walk
+    def _assign_names(self, target: ast.AST) -> list[str]:
+        return [n.id for n in ast.walk(target)
+                if isinstance(n, ast.Name)
+                and isinstance(n.ctx, (ast.Store, ast.Del))]
+
+    def visit(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            self._scan_expr(stmt.value)
+            origin = self._origin(stmt.value) if stmt.value is not None \
+                else None
+            targets = stmt.targets if isinstance(stmt, ast.Assign) \
+                else [stmt.target]
+            for t in targets:
+                for name in self._assign_names(t):
+                    if origin:
+                        self.taint[name] = origin
+                    elif not isinstance(stmt, ast.AugAssign):
+                        self.taint.pop(name, None)
+            return
+        if isinstance(stmt, ast.For):
+            self._scan_expr(stmt.iter)
+            origin = self._origin(stmt.iter)
+            for name in self._assign_names(stmt.target):
+                if origin:
+                    self.taint[name] = origin
+            for s in stmt.body + stmt.orelse:
+                self.visit(s)
+            return
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # nested def: a closure traced with the parent — scan its body
+            # with the captured taint (its own params shadow)
+            saved = dict(self.taint)
+            for a in (stmt.args.posonlyargs + stmt.args.args
+                      + stmt.args.kwonlyargs):
+                self.taint.pop(a.arg, None)
+            for s in stmt.body:
+                self.visit(s)
+            self.taint = saved
+            return
+        if isinstance(stmt, ast.ClassDef):
+            return
+        # generic statement: scan embedded expressions, recurse into bodies
+        for field in ("value", "test", "iter", "exc", "msg"):
+            self._scan_expr(getattr(stmt, field, None))
+        if isinstance(stmt, ast.With):
+            for item in stmt.items:
+                self._scan_expr(item.context_expr)
+        if isinstance(stmt, ast.Return) and stmt.value is not None:
+            pass     # already scanned via the "value" field above
+        for field in ("body", "orelse", "finalbody"):
+            for s in getattr(stmt, field, []) or []:
+                if isinstance(s, ast.stmt):
+                    self.visit(s)
+        for handler in getattr(stmt, "handlers", []) or []:
+            for s in handler.body:
+                self.visit(s)
+
+
+def _units(tree: ast.Module):
+    """(fn node, qual) for top-level and class-level defs — the same unit
+    walk ``project.summarize`` uses, so quals line up with summaries."""
+    for stmt in tree.body:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield stmt, stmt.name
+        elif isinstance(stmt, ast.ClassDef):
+            for item in stmt.body:
+                if isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    yield item, f"{stmt.name}.{item.name}"
+
+
+@register
+class ConcretizationHazard:
+    id = "PL007"
+    name = "concretization-hazard"
+    description = ("float()/int()/bool()/.item()/np.asarray on values "
+                   "flowing from parameters of jit/pallas-reachable "
+                   "functions force device syncs on the classify path")
+
+    def file_facts(self, project: ProjectContext, modpath: str) -> list[str]:
+        """The cross-file cache key: which of this file's functions other
+        modules made jit-reachable.  Drift here re-lints a clean file."""
+        return sorted(project.external_jit_reachable(modpath))
+
+    def check_file(self, project: ProjectContext,
+                   ctx: FileContext) -> list[Finding]:
+        reach = project.jit_reachable(ctx.modpath)
+        if not reach:
+            return []
+        summ = project.module(ctx.modpath)
+        np_mods, np_funcs = _np_aliases(ctx.tree)
+        out: list[Finding] = []
+        for fn, qual in _units(ctx.tree):
+            if qual not in reach:
+                continue
+            info = summ.function(qual) if summ else None
+            params = info.params if info else \
+                [a.arg for a in fn.args.args if a.arg not in ("self", "cls")]
+            out.extend(_Scan(self, ctx, fn, qual, params,
+                             np_mods, np_funcs).findings)
+        return out

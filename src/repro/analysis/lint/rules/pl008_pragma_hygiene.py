@@ -1,0 +1,77 @@
+"""PL008 — pragma-hygiene.
+
+``# planelint: disable=<rule>`` is a justified exception, not a mute button.
+Every sweep that fixes the underlying code (or every rule whose scope
+tightens) can leave a pragma behind that no longer suppresses anything — and
+a dead pragma is worse than dead code, because it *pre-silences* the next
+real violation introduced on that line.
+
+This is a runner-accounting rule: the engine records, per file, which
+``(line, rule)`` findings the pragmas actually swallowed
+(``ProjectContext.suppressed`` — cached across runs with the per-file
+findings), and this rule reports pragmas that swallowed nothing.
+
+Judgement is scoped to what actually ran:
+
+* a pragma naming rules that were not selected this run is skipped (a
+  ``--rule PL003`` pass cannot call a PL002 pragma dead);
+* ``disable=all`` is judged only when the full registry ran;
+* a pragma naming only PL008 itself is skipped (self-reference);
+* with ``--no-pragmas`` the whole rule is skipped — there is no suppression
+  to account.
+
+A ``disable=all`` pragma cannot mute the PL008 finding that reports it
+(the engine exempts PL008 from blanket suppression — otherwise a stale
+``disable=all`` would be unreportable by construction).  To keep a pragma
+that is legitimately dormant, name PL008 in its id list:
+``disable=PL002,PL008``.
+"""
+from __future__ import annotations
+
+from repro.analysis.lint.core import Finding, register
+from repro.analysis.lint.project import ProjectContext
+
+
+@register
+class PragmaHygiene:
+    id = "PL008"
+    name = "pragma-hygiene"
+    description = ("a '# planelint: disable=...' pragma that suppressed "
+                   "nothing this run is stale — remove it")
+
+    def check_project(self, project: ProjectContext) -> list[Finding]:
+        if not project.respect_pragmas:
+            return []
+        rules_ran = {r.upper() for r in project.rules_run} - {self.id}
+        out: list[Finding] = []
+        for mp, summ in sorted(project.modules.items()):
+            # only files whose per-file rules actually ran (live or cached)
+            # have suppression accounting to judge against
+            if summ.aux or summ.parse_error or mp not in project.linted:
+                continue
+            sup = project.suppressed.get(mp, set())
+            for line, ids in sorted(summ.pragmas.items()):
+                ids = {i.upper() for i in ids}
+                if ids <= {self.id}:
+                    continue
+                if "ALL" in ids:
+                    if not project.full_rules:
+                        continue
+                    used = any(l == line for l, _ in sup)
+                    label = "all"
+                else:
+                    relevant = ids & rules_ran
+                    if not relevant:
+                        continue
+                    used = any(l == line and r in relevant for l, r in sup)
+                    label = ",".join(sorted(relevant))
+                if not used:
+                    out.append(Finding(
+                        path=summ.display, line=line, col=0, rule=self.id,
+                        name=self.name,
+                        message=f"pragma 'planelint: disable={label}' "
+                                "suppressed nothing — the violation it "
+                                "excused is gone; remove the pragma so it "
+                                "cannot pre-silence the next real finding "
+                                "on this line"))
+        return out

@@ -1,12 +1,20 @@
 """planelint: the static contract checker (ARCHITECTURE 'Static contracts').
 
-Pins, per rule PL001-PL005: a violating fixture fires with the right id and
+Pins, per rule PL001-PL008: a violating fixture fires with the right id and
 line, the matching clean idiom stays silent, and a same-line
-``# planelint: disable=...`` pragma suppresses.  Plus: the CLI's JSON schema
+``planelint: disable=...`` pragma suppresses.  Plus: the CLI's JSON schema
 and exit codes, PL000 on unparsable files, PL003's static footprints
 reproducing both ``kernels/budgets.py`` and the byte values quoted in the
 ``docs/ARCHITECTURE.md`` pinned-footprint table within 1%, and the shipped
 tree linting clean end-to-end.
+
+The whole-project engine (PR 7) gets its own sections: the PL006
+oracle-parity legs on fixture trees and on the four shipped kernel entries,
+PL007's cross-module jit-reachability and def-use exemptions, PL008 pragma
+accounting, the incremental cache (warm runs parse nothing; an edit
+re-parses exactly the reverse-import closure; cross-file fact drift
+re-lints a byte-identical file), and ``--changed-only`` against a scripted
+git repo.
 """
 import json
 import pathlib
@@ -17,20 +25,26 @@ import textwrap
 
 import pytest
 
-from repro.analysis.lint import run_lint
+from repro.analysis.lint import iter_files, lint_project, run_lint
 from repro.analysis.lint.rules.pl003_vmem_budget import kernel_footprints
+from repro.analysis.lint.rules.pl006_oracle_parity import parity_report
 from repro.kernels.budgets import BUDGETS, VMEM_BYTES
 
 REPO = pathlib.Path(__file__).resolve().parent.parent
 SRC_REPRO = REPO / "src" / "repro"
 
 
-def lint_tree(tmp_path, files, rules=None, **kw):
-    """Write ``{relpath: code}`` under tmp_path and lint the tree."""
+def write_tree(tmp_path, files):
+    """Write ``{relpath: code}`` under tmp_path (dedented)."""
     for rel, code in files.items():
         f = tmp_path / rel
         f.parent.mkdir(parents=True, exist_ok=True)
         f.write_text(textwrap.dedent(code))
+
+
+def lint_tree(tmp_path, files, rules=None, **kw):
+    """Write ``{relpath: code}`` under tmp_path and lint the tree."""
+    write_tree(tmp_path, files)
     findings, checked = run_lint([tmp_path], rules, **kw)
     assert checked == len(files)
     return findings
@@ -352,7 +366,415 @@ def test_pl005_sanctioned_construction_sites(tmp_path):
     assert findings == []
 
 
+# ------------------------------------------------------------------ PL006
+# A minimal but fully-wired kernel tree: entry + ref oracle + ops dispatch
+# + a conformance test whose import closure reaches the ops wrapper.
+_PARITY_OK = {
+    "kernels/tree_walk.py": """\
+        def tree_walk_pallas_v(x):
+            return x
+    """,
+    "kernels/ref.py": """\
+        def tree_walk_v(x):
+            return x
+    """,
+    "kernels/ops.py": """\
+        from kernels import ref
+        from kernels.tree_walk import tree_walk_pallas_v
+
+        def tree_walk_v(x, mode="auto"):
+            if mode == "ref":
+                return ref.tree_walk_v(x)
+            return tree_walk_pallas_v(x)
+    """,
+    "tests/test_conformance.py": """\
+        from kernels import ops
+
+        def test_parity(x):
+            assert ops.tree_walk_v(x, mode="ref") is not None
+    """,
+}
+
+
+def test_pl006_clean_when_fully_wired(tmp_path):
+    assert lint_tree(tmp_path, _PARITY_OK, ["PL006"]) == []
+
+
+def test_pl006_reports_each_missing_leg(tmp_path):
+    # entry with no oracle, no dispatcher, no conformance wiring: all three
+    # legs fail, anchored at the def line
+    findings = lint_tree(tmp_path, {
+        "kernels/tree_walk.py": """\
+            def tree_walk_pallas_v(x):
+                return x
+        """,
+        "kernels/ref.py": "X = 1\n",
+        "kernels/ops.py": "X = 1\n",
+    }, ["PL006"])
+    assert rule_ids(findings) == ["PL006"] * 3
+    assert all(f.line == 1 for f in findings)
+    msgs = " ".join(f.message for f in findings)
+    assert "no oracle" in msgs
+    assert "not dispatched" in msgs
+    assert "unreachable from the conformance gate" in msgs
+
+
+def test_pl006_dispatch_must_call_both_paths(tmp_path):
+    # the ops wrapper exists but short-circuits the ref oracle: the
+    # mode='ref' swap is broken even though the name matches
+    files = dict(_PARITY_OK)
+    files["kernels/ops.py"] = """\
+        from kernels.tree_walk import tree_walk_pallas_v
+
+        def tree_walk_v(x, mode="auto"):
+            return tree_walk_pallas_v(x)
+    """
+    findings = lint_tree(tmp_path, files, ["PL006"])
+    assert rule_ids(findings) == ["PL006"]
+    assert "not dispatched" in findings[0].message
+
+
+def test_pl006_private_and_non_v_defs_exempt(tmp_path):
+    findings = lint_tree(tmp_path, {
+        "kernels/tree_walk.py": """\
+            def _pad_v(x):
+                return x
+
+            def helper(x):
+                return x
+        """,
+    }, ["PL006"])
+    assert findings == []
+
+
+def test_pl006_pragma_suppresses(tmp_path):
+    findings = lint_tree(tmp_path, {
+        "kernels/tree_walk.py": """\
+            def scratch_v(x):  # planelint: disable=PL006
+                return x
+        """,
+    }, ["PL006"])
+    assert findings == []
+
+
+def test_pl006_shipped_entries_pass_all_legs():
+    """The acceptance bar: all four shipped ``*_v`` kernel entries have a
+    ref oracle, an ops dispatcher calling both paths, and a call chain from
+    tests/test_conformance.py."""
+    run = lint_project([SRC_REPRO])
+    report = parity_report(run.project)
+    assert set(report) == {
+        "tree_walk_pallas_v", "forest_predict_vote_pallas_v",
+        "svm_lookup_pallas_v", "tcam_match_pallas_v"}
+    for name, legs in report.items():
+        assert legs["ref"], name
+        assert legs["dispatch"], name
+        assert legs["reachable"], name
+        assert legs["conformance"].endswith("test_conformance.py"), name
+
+
+# ------------------------------------------------------------------ PL007
+def test_pl007_fires_in_jit_decorated_function(tmp_path):
+    findings = lint_tree(tmp_path, {
+        "core/entry.py": """\
+            import jax
+
+            @jax.jit
+            def classify(x):
+                return float(x) * 2.0
+        """,
+    }, ["PL007"])
+    assert rule_ids(findings) == ["PL007"]
+    assert "float()" in findings[0].message
+    assert "'x'" in findings[0].message and "classify()" in findings[0].message
+
+
+def test_pl007_cross_module_reachability(tmp_path):
+    # the hazard sits in a plain helper; only the *other* module's jit entry
+    # makes it reachable — the per-file view PR 6 had cannot see this
+    findings = lint_tree(tmp_path, {
+        "kernels/helper.py": """\
+            def scale(x):
+                return float(x) * 2.0
+        """,
+        "core/entry.py": """\
+            import jax
+            from kernels.helper import scale
+
+            @jax.jit
+            def classify(x):
+                return scale(x)
+        """,
+    }, ["PL007"])
+    assert rule_ids(findings) == ["PL007"]
+    assert findings[0].path.endswith("helper.py")
+
+
+def test_pl007_taint_flows_through_assignment_and_item(tmp_path):
+    findings = lint_tree(tmp_path, {
+        "core/entry.py": """\
+            import jax
+
+            @jax.jit
+            def classify(x):
+                y = x + 1
+                z = y.item()
+                return z
+        """,
+    }, ["PL007"])
+    assert rule_ids(findings) == ["PL007"]
+    assert ".item()" in findings[0].message
+
+
+def test_pl007_static_flows_and_cold_functions_exempt(tmp_path):
+    findings = lint_tree(tmp_path, {
+        "core/ok.py": """\
+            import jax
+            import numpy as np
+
+            @jax.jit
+            def classify(x, n_classes: int):
+                b = int(x.shape[0])          # .shape is trace-time static
+                w = int(len(x))              # len() likewise
+                k = int(n_classes) + b + w   # annotated static scalar
+                return x * k
+
+            def host_stats(x):
+                return float(np.mean(x))     # not jit-reachable: fine
+        """,
+    }, ["PL007"])
+    assert findings == []
+
+
+def test_pl007_wrapped_and_pallas_entries_count(tmp_path):
+    # jax.jit(functools.partial(f, ...)) wraps f without a decorator
+    findings = lint_tree(tmp_path, {
+        "core/wrapped.py": """\
+            import functools
+            import jax
+
+            def impl(x, mode):
+                return x.item()
+
+            step = jax.jit(functools.partial(impl, mode="fast"))
+        """,
+    }, ["PL007"])
+    assert rule_ids(findings) == ["PL007"]
+
+
+def test_pl007_np_asarray_and_pragma(tmp_path):
+    files = {
+        "core/entry.py": """\
+            import jax
+            import numpy as np
+
+            @jax.jit
+            def classify(x):
+                h = np.asarray(x)  # planelint: disable=PL007
+                return np.asarray(x + 1)
+        """,
+    }
+    findings = lint_tree(tmp_path, files, ["PL007"])
+    assert len(findings) == 1 and findings[0].line == 7
+    assert "np.asarray()" in findings[0].message
+
+
+# ------------------------------------------------------------------ PL008
+def test_pl008_flags_stale_pragma(tmp_path):
+    findings = lint_tree(tmp_path, {
+        "core/x.py": "y = 1  # planelint: disable=PL002\n",
+    })
+    assert rule_ids(findings) == ["PL008"]
+    assert findings[0].line == 1
+    assert "suppressed nothing" in findings[0].message
+
+
+def test_pl008_working_pragma_is_not_stale(tmp_path):
+    findings = lint_tree(tmp_path, {
+        "serving/glue.py": """\
+            import jax.numpy as jnp
+
+            def f(xs):
+                return jnp.stack(xs)  # planelint: disable=PL002
+        """,
+    })
+    assert findings == []
+
+
+def test_pl008_skips_rules_that_did_not_run(tmp_path):
+    # a --rule PL001,PL008 pass cannot call a PL002 pragma dead; likewise
+    # disable=all is only judged under the full registry
+    findings = lint_tree(tmp_path, {
+        "core/x.py": "y = 1  # planelint: disable=PL002\n",
+        "core/z.py": "w = 1  # planelint: disable=all\n",
+    }, ["PL001", "PL008"])
+    assert findings == []
+
+
+def test_pl008_flags_stale_disable_all_under_full_registry(tmp_path):
+    # disable=all cannot mute the PL008 finding reporting it — otherwise a
+    # stale blanket pragma would be unreportable by construction
+    findings = lint_tree(tmp_path, {
+        "core/z.py": "w = 1  # planelint: disable=all\n",
+    })
+    assert rule_ids(findings) == ["PL008"]
+    assert "disable=all" in findings[0].message
+
+
+def test_pl008_naming_pl008_keeps_a_dormant_pragma(tmp_path):
+    findings = lint_tree(tmp_path, {
+        "core/z.py": "w = 1  # planelint: disable=PL002,PL008\n",
+    })
+    assert findings == []
+
+
+def test_pl008_skipped_with_no_pragmas(tmp_path):
+    write_tree(tmp_path, {"core/x.py": "y = 1  # planelint: disable=PL002\n"})
+    findings, _ = run_lint([tmp_path], respect_pragmas=False)
+    assert findings == []
+
+
+# ------------------------------------------------- incremental cache
+_CHAIN = {
+    # import chain a -> b -> c plus an island d carrying a finding
+    "a.py": "import b\n\nA = b.B + 1\n",
+    "b.py": "import c\n\nB = c.C + 1\n",
+    "c.py": "C = 1\n",
+    "d.py": "x = shard_map\n",
+}
+
+
+def test_cache_warm_run_parses_nothing(tmp_path):
+    write_tree(tmp_path, _CHAIN)
+    cache = tmp_path / "cache.json"
+    cold = lint_project([tmp_path], cache_path=cache)
+    assert sorted(cold.parsed) == ["a.py", "b.py", "c.py", "d.py"]
+    assert cold.cached == 0
+    warm = lint_project([tmp_path], cache_path=cache)
+    assert warm.parsed == []
+    assert warm.cached == 4
+    # cached findings replay identically
+    assert [f.rule for f in warm.findings] == [f.rule for f in cold.findings]
+    assert rule_ids(warm.findings) == ["PL001"]
+
+
+def test_cache_edit_reparses_reverse_import_closure(tmp_path):
+    write_tree(tmp_path, _CHAIN)
+    cache = tmp_path / "cache.json"
+    lint_project([tmp_path], cache_path=cache)
+    (tmp_path / "b.py").write_text("import c\n\nB = c.C + 2\n")
+    run = lint_project([tmp_path], cache_path=cache)
+    # b changed; a imports b; c and d are untouched and replay from cache
+    assert sorted(run.parsed) == ["a.py", "b.py"]
+    assert run.changed == ["b.py"]
+    assert run.cached == 2
+    assert rule_ids(run.findings) == ["PL001"]
+
+
+def test_cache_cross_file_fact_drift_relints_clean_file(tmp_path):
+    # k.py never changes, but an edit elsewhere makes k.scale jit-reachable:
+    # the facts digest drifts and k re-lints, surfacing the PL007 hazard
+    write_tree(tmp_path, {
+        "k.py": "def scale(x):\n    return float(x)\n",
+        "m.py": """\
+            import jax
+            import k
+
+            @jax.jit
+            def f(x):
+                return x
+        """,
+    })
+    cache = tmp_path / "cache.json"
+    cold = lint_project([tmp_path], cache_path=cache)
+    assert cold.findings == []
+    (tmp_path / "m.py").write_text(textwrap.dedent("""\
+        import jax
+        import k
+
+        @jax.jit
+        def f(x):
+            return k.scale(x)
+    """))
+    run = lint_project([tmp_path], cache_path=cache)
+    assert rule_ids(run.findings) == ["PL007"]
+    assert run.findings[0].path.endswith("k.py")
+    assert "k.py" in run.parsed      # re-linted despite identical bytes
+
+
+def test_cache_invalidated_by_rule_selection_change(tmp_path):
+    write_tree(tmp_path, _CHAIN)
+    cache = tmp_path / "cache.json"
+    lint_project([tmp_path], cache_path=cache)
+    run = lint_project([tmp_path], ["PL001"], cache_path=cache)
+    assert len(run.parsed) == 4      # different rule set: wholesale re-run
+    assert rule_ids(run.findings) == ["PL001"]
+
+
+# ------------------------------------------------------- changed-only mode
+def _git(cwd, *args):
+    proc = subprocess.run(
+        ["git", "-c", "user.email=t@t", "-c", "user.name=t", *args],
+        cwd=cwd, capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stderr
+    return proc.stdout
+
+
+def test_changed_only_scopes_report_and_parse_set(tmp_path):
+    """The acceptance bar: a warmed ``--changed-only`` rerun re-parses only
+    the edited file's reverse-import closure, and per-file findings outside
+    the diff scope (d.py's committed PL001) are not reported."""
+    write_tree(tmp_path, _CHAIN)
+    _git(tmp_path, "init", "-q")
+    _git(tmp_path, "add", "-A")
+    _git(tmp_path, "commit", "-qm", "seed")
+    cache = tmp_path / "cache.json"
+    cold = lint_project([tmp_path], cache_path=cache)
+    assert rule_ids(cold.findings) == ["PL001"]
+
+    (tmp_path / "b.py").write_text("import c\n\nB = c.C + 2\n")
+    run = lint_project([tmp_path], cache_path=cache, changed_only="HEAD")
+    assert sorted(run.parsed) == ["a.py", "b.py"]
+    assert run.findings == []        # d.py's finding is outside the diff
+    assert {p.rsplit("/", 1)[-1] for p in run.reported_paths} == set()
+
+
+def test_changed_only_still_reports_project_rules(tmp_path):
+    # a kernel entry missing its oracle is a cross-file property: it is
+    # reported even when the diff does not touch the kernel module
+    write_tree(tmp_path, {
+        "kernels/tree_walk.py": "def tree_walk_pallas_v(x):\n    return x\n",
+        "kernels/ref.py": "X = 1\n",
+        "kernels/ops.py": "X = 1\n",
+        "other.py": "y = 1\n",
+    })
+    _git(tmp_path, "init", "-q")
+    _git(tmp_path, "add", "-A")
+    _git(tmp_path, "commit", "-qm", "seed")
+    (tmp_path / "other.py").write_text("y = 2\n")
+    run = lint_project([tmp_path], changed_only="HEAD")
+    assert rule_ids(run.findings) == ["PL006"] * 3
+
+
+def test_changed_only_without_git_falls_back_to_full_report(tmp_path):
+    write_tree(tmp_path, _CHAIN)    # no git repo here or in any parent tmp
+    run = lint_project([tmp_path], changed_only="HEAD")
+    assert rule_ids(run.findings) == ["PL001"]
+
+
 # ------------------------------------------------------- runner mechanics
+def test_iter_files_skips_pycache_and_hidden(tmp_path):
+    write_tree(tmp_path, {
+        "a.py": "x = 1\n",
+        "sub/ok.py": "y = 1\n",
+        "sub/__pycache__/stale.py": "x = shard_map\n",
+        ".hidden/secret.py": "x = shard_map\n",
+    })
+    names = sorted(p.name for p, _ in iter_files([tmp_path]))
+    assert names == ["a.py", "ok.py"]
+    findings, checked = run_lint([tmp_path])
+    assert checked == 2 and findings == []
+
 def test_pl000_parse_error(tmp_path):
     findings = lint_tree(tmp_path, {"broken.py": "def f(:\n"})
     assert rule_ids(findings) == ["PL000"]
@@ -426,8 +848,32 @@ def test_cli_json_schema_and_exit_codes(tmp_path):
 def test_cli_list_rules():
     proc = _cli(["--list-rules"])
     assert proc.returncode == 0
-    for rid in ("PL001", "PL002", "PL003", "PL004", "PL005"):
+    for rid in ("PL001", "PL002", "PL003", "PL004", "PL005",
+                "PL006", "PL007", "PL008"):
         assert rid in proc.stdout
+
+
+def test_cli_github_format_annotations(tmp_path):
+    (tmp_path / "serving").mkdir()
+    (tmp_path / "serving" / "bad.py").write_text(
+        "import jax.numpy as jnp\n\n\ndef f(xs):\n"
+        "    return jnp.concatenate(xs)\n")
+    proc = _cli([str(tmp_path), "--format", "github"])
+    assert proc.returncode == 1
+    (ann,) = [l for l in proc.stdout.splitlines() if l.startswith("::error")]
+    assert ann.startswith("::error file=")
+    assert ",line=5," in ann and "title=planelint PL002" in ann
+    assert "\n" not in ann.split("::")[-1]    # message newlines escaped
+
+
+def test_cli_cache_flag_reports_parse_accounting(tmp_path):
+    (tmp_path / "m.py").write_text("x = 1\n")
+    cache = tmp_path / "cache.json"
+    first = _cli([str(tmp_path / "m.py"), "--cache", str(cache)])
+    assert first.returncode == 0
+    assert "1 file(s) parsed, 0 served from cache" in first.stdout
+    second = _cli([str(tmp_path / "m.py"), "--cache", str(cache)])
+    assert "0 file(s) parsed, 1 served from cache" in second.stdout
 
 
 def test_cli_runs_without_jax_runtime():

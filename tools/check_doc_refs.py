@@ -16,8 +16,10 @@ Rules, applied to every backtick-quoted token that looks like a file path:
 
 Additionally, the "Kernel memory plans" pinned-footprint table in
 ``docs/ARCHITECTURE.md`` must name exactly the kernels budgeted in
-``src/repro/kernels/budgets.py`` (``BUDGETS`` is AST-parsed — this script
-runs without ``PYTHONPATH=src`` in CI).
+``src/repro/kernels/budgets.py``, and the "Static contracts" rule table
+must agree — id *and* name, both directions — with the planelint rules
+registered in ``src/repro/analysis/lint/rules/`` (both sides are
+AST-parsed — this script runs without ``PYTHONPATH=src`` in CI).
 
 Usage:  python tools/check_doc_refs.py [file.md ...]
         (default: docs/ARCHITECTURE.md README.md benchmarks/README.md)
@@ -120,6 +122,71 @@ def check_budget_manifest() -> list[str]:
     return errors
 
 
+RULES_DIR = REPO / "src" / "repro" / "analysis" / "lint" / "rules"
+# A "Static contracts" table row: `| PL001 | `shard-map-containment` | ...`
+RULE_ROW = re.compile(r"^\|\s*(PL\d{3})\s*\|\s*`([\w-]+)`")
+
+
+def registered_rules() -> dict[str, str]:
+    """``{id: name}`` of every ``@register``-decorated rule class under the
+    rules package, by AST (no imports, no PYTHONPATH)."""
+    out: dict[str, str] = {}
+    for path in sorted(RULES_DIR.glob("pl*.py")):
+        tree = ast.parse(path.read_text())
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            if not any(isinstance(d, ast.Name) and d.id == "register"
+                       for d in node.decorator_list):
+                continue
+            attrs = {}
+            for stmt in node.body:
+                if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                        and isinstance(stmt.targets[0], ast.Name) \
+                        and isinstance(stmt.value, ast.Constant):
+                    attrs[stmt.targets[0].id] = stmt.value.value
+            if "id" in attrs and "name" in attrs:
+                out[attrs["id"]] = attrs["name"]
+    return out
+
+
+def doc_rule_table() -> dict[str, str]:
+    """``{id: name}`` rows of the "Static contracts" rule table."""
+    out: dict[str, str] = {}
+    in_section = False
+    for line in ARCH_MD.read_text().splitlines():
+        if line.startswith("## "):
+            in_section = line.startswith("## Static contracts")
+            continue
+        if in_section:
+            m = RULE_ROW.match(line)
+            if m:
+                out[m.group(1)] = m.group(2)
+    return out
+
+
+def check_rule_table() -> list[str]:
+    if not RULES_DIR.is_dir():
+        return [f"{RULES_DIR}: planelint rules package is missing"]
+    live = registered_rules()
+    doc = doc_rule_table()
+    errors = []
+    for rid in sorted(set(live) - set(doc)):
+        errors.append(
+            f"{ARCH_MD}: planelint rule {rid} [{live[rid]}] is registered "
+            "but missing from the 'Static contracts' rule table")
+    for rid in sorted(set(doc) - set(live)):
+        errors.append(
+            f"{ARCH_MD}: 'Static contracts' table row {rid} [{doc[rid]}] "
+            "has no registered rule in src/repro/analysis/lint/rules/")
+    for rid in sorted(set(live) & set(doc)):
+        if live[rid] != doc[rid]:
+            errors.append(
+                f"{ARCH_MD}: planelint rule {rid} is named '{live[rid]}' in "
+                f"code but '{doc[rid]}' in the 'Static contracts' table")
+    return errors
+
+
 def main(argv: list[str]) -> int:
     docs = [Path(a) for a in argv] if argv else [REPO / d for d in DEFAULT_DOCS]
     errors, checked = [], 0
@@ -130,6 +197,7 @@ def main(argv: list[str]) -> int:
         checked += 1
         errors.extend(check_doc(doc))
     errors.extend(check_budget_manifest())
+    errors.extend(check_rule_table())
     for e in errors:
         print(f"error: {e}", file=sys.stderr)
     print(f"check_doc_refs: {checked} docs checked, {len(errors)} stale "
