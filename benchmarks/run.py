@@ -23,6 +23,7 @@ MODULES = [
     ("zoo", "benchmarks.zoo_swap"),
     ("runtime_scale", "benchmarks.runtime_scale"),
     ("serve_async", "benchmarks.serve_async"),
+    ("fleet_serve", "benchmarks.fleet_serve"),
 ]
 
 

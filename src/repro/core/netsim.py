@@ -28,6 +28,7 @@ __all__ = [
     "server_serving_time",
     "measure_inference_time",
     "simulate_serving",
+    "serving_availability",
     "forwarding_overhead",
 ]
 
@@ -71,16 +72,54 @@ def measure_inference_time(model, Xq: np.ndarray, *, n_requests: int = 200) -> f
 
 
 def simulate_serving(
-    base_s: float, *, n: int = 1000, jitter_frac: float = 0.04, seed: int = 0
+    base_s: float,
+    *,
+    n: int = 1000,
+    jitter_frac: float = 0.04,
+    seed: int = 0,
+    arrival_rate_rps: float | None = None,
+    downtime_windows: tuple[tuple[float, float], ...] = (),
+    return_arrivals: bool = False,
 ) -> np.ndarray:
     """Per-request samples around a mean (switch pipelines are near-
     deterministic: the paper reports 'consistent intervals, very few
-    outliers' — we model small gaussian jitter + rare 10x outliers)."""
+    outliers' — we model small gaussian jitter + rare 10x outliers).
+
+    A deployment is not static (planner ``replan`` under device failure):
+    ``downtime_windows`` are ``(t0, t1)`` control-plane outages — detect ->
+    replan -> drain -> reinstall — on the arrival clock.  A request arriving
+    inside a window is held until the window closes (the drain/reinstall
+    barrier) and pays the remainder on top of its serving time.  Arrivals
+    are Poisson at ``arrival_rate_rps`` (defaults to uniform spacing over
+    ``n * base_s * 100`` when windows are given but no rate is).  With
+    ``return_arrivals`` the arrival times come back alongside the samples.
+    """
     rng = np.random.default_rng(seed)
     s = base_s * (1.0 + jitter_frac * rng.standard_normal(n))
     outliers = rng.random(n) < 0.002
     s[outliers] *= 10.0
-    return np.maximum(s, base_s * 0.5)
+    s = np.maximum(s, base_s * 0.5)
+    if not downtime_windows and arrival_rate_rps is None:
+        return s                     # static plan: exact pre-fault behavior
+    if arrival_rate_rps is not None:
+        t_arr = np.cumsum(rng.exponential(1.0 / arrival_rate_rps, n))
+    else:
+        t_arr = np.linspace(0.0, n * base_s * 100.0, n)
+    for t0, t1 in downtime_windows:
+        held = (t_arr >= t0) & (t_arr < t1)
+        s = np.where(held, s + (t1 - t_arr), s)
+    if return_arrivals:
+        return s, t_arr
+    return s
+
+
+def serving_availability(latency_s: np.ndarray, slo_s: float) -> float:
+    """Fraction of requests served within the SLO — the availability metric
+    ``benchmarks/fleet_serve.py`` records per fault schedule."""
+    lat = np.asarray(latency_s, float)
+    if lat.size == 0:
+        return 1.0
+    return float((lat <= slo_s).mean())
 
 
 def forwarding_overhead(

@@ -55,6 +55,7 @@ __all__ = [
     "plan_program",
     "plan_zoo",
     "replan",
+    "replan_zoo",
 ]
 
 
@@ -522,7 +523,20 @@ def plan_program(
         n_trees=program.n_trees,
         n_hyperplanes=program.n_hyperplanes,
     )
-    paths = candidate_paths or network.k_shortest_paths(src, dst, n_candidate_paths)
+    paths = candidate_paths
+    if paths is None:
+        if exclude & {src, dst}:
+            raise RuntimeError(f"endpoint failed: {sorted(exclude & {src, dst})}")
+        # Enumerate on the surviving topology: the full network's k-shortest
+        # list can have every candidate crossing the dead device even when an
+        # alternate route exists one rank further down.
+        search = network.without(exclude) if exclude else network
+        paths = search.k_shortest_paths(src, dst, n_candidate_paths)
+        if not paths and exclude:
+            raise RuntimeError(
+                f"no surviving path {src} -> {dst} with failed "
+                f"device(s) {sorted(exclude)}"
+            )
     if not paths:
         raise ValueError(f"no path {src} -> {dst}")
     units = _program_units(program)
@@ -636,3 +650,19 @@ def replan(
 ) -> DeploymentPlan:
     """Failure-aware replanning (beyond paper §9): exclude dead devices."""
     return plan_program(program, network, src, dst, exclude=failed, **kw)
+
+
+def replan_zoo(
+    programs: list[TableProgram],
+    network: Network,
+    src: str,
+    dst: str,
+    failed: set[str],
+    **kw,
+) -> list[DeploymentPlan]:
+    """Zoo-wide failure-aware replanning — the control loop's replan step.
+
+    Re-runs ``plan_zoo`` on the surviving topology, so the per-version
+    capacity carry-over and the single-pinned-path invariant both hold on
+    the post-fault deployment exactly as they did on the original one."""
+    return plan_zoo(programs, network, src, dst, exclude=set(failed), **kw)

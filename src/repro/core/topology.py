@@ -39,6 +39,25 @@ class Network:
     def switches(self) -> list[str]:
         return [n for n in self.nodes if self.kind[n] == "switch"]
 
+    def without(self, failed: set[str]) -> "Network":
+        """The surviving topology after ``failed`` nodes die (the control
+        plane's replan view).  Path search on the subgraph reports
+        unreachable endpoints honestly — ``shortest_path`` returns ``None``
+        and ``k_shortest_paths`` returns ``[]`` — instead of routing through
+        dead hardware."""
+        failed = set(failed)
+        unknown = failed - set(self.kind)
+        if unknown:
+            raise ValueError(f"unknown node(s): {sorted(unknown)}")
+        nodes = [n for n in self.nodes if n not in failed]
+        return Network(
+            self.name,
+            nodes,
+            {n: self.kind[n] for n in nodes},
+            {n: [v for v in self.adj[n] if v not in failed] for n in nodes},
+            {n: self.programmable[n] for n in nodes},
+        )
+
     # ---------------------------------------------------------------- paths
     def shortest_path(self, src: str, dst: str) -> list[str] | None:
         prev: dict[str, str] = {src: src}

@@ -30,10 +30,16 @@ compiled shapes per executor — and delegates execution to a pluggable
 per-client submits into one admitted bucket — same shapes, same O(log B)
 trace bound.
 
+``control.py`` is the self-healing control plane: ``ControlLoop`` runs the
+detect -> replan -> drain -> reinstall cycle over a fleet of devices (see
+``repro.serving.fleet``), with ``DeviceFailure`` as the data-path failure
+signal and ``ControlCounters`` surfaced through ``latency_stats()``.
+
 This package is the **only** place in ``src/repro`` allowed to construct a
 ``shard_map`` classify loop (pinned by ``tests/test_runtime.py``).
 """
 from repro.runtime.admission import bucket_size, coalesce, pad_to_bucket, split, trim
+from repro.runtime.control import ControlCounters, ControlLoop, DeviceFailure
 from repro.runtime.executors import (
     Executor,
     PipelinedExecutor,
@@ -60,6 +66,9 @@ __all__ = [
     "ImmediatePolicy",
     "SizeOrDeadlinePolicy",
     "AdaptiveBucketPolicy",
+    "ControlLoop",
+    "ControlCounters",
+    "DeviceFailure",
     "bucket_size",
     "pad_to_bucket",
     "trim",

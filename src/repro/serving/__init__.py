@@ -1,5 +1,6 @@
 from repro.serving.async_server import AsyncResult, AsyncZooServer
+from repro.serving.fleet import FleetExecutor, FleetRuntime
 from repro.serving.serve import ZooServer, make_decode_step, make_prefill_step
 
-__all__ = ["AsyncResult", "AsyncZooServer", "ZooServer", "make_decode_step",
-           "make_prefill_step"]
+__all__ = ["AsyncResult", "AsyncZooServer", "FleetExecutor", "FleetRuntime",
+           "ZooServer", "make_decode_step", "make_prefill_step"]

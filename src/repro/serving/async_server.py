@@ -104,8 +104,12 @@ class AsyncZooServer:
         self._queue: collections.deque[_Pending] = collections.deque()
         self._queued_packets = 0
         self._arrival: asyncio.Event | None = None
+        self._hold_gate: asyncio.Event | None = None   # cleared = held
+        self._idle: asyncio.Event | None = None        # set = no dispatch in flight
+        self._inflight = 0
         self._task: asyncio.Task | None = None
         self._closing = False
+        self._stats_sources: dict[str, object] = {}
         # bounded: a long-lived front at line rate must not grow its
         # accounting without limit (stats_window = most recent requests /
         # dispatches retained; counters below keep lifetime totals)
@@ -128,15 +132,21 @@ class AsyncZooServer:
             raise RuntimeError("server already started")
         self._closing = False
         self._arrival = asyncio.Event()
+        self._hold_gate = asyncio.Event()
+        self._hold_gate.set()
+        self._idle = asyncio.Event()
+        self._idle.set()
         self._task = asyncio.get_running_loop().create_task(
             self._dispatch_loop(), name="async-zoo-dispatch")
         return self
 
     async def stop(self) -> None:
-        """Flush queued requests, then stop the dispatch loop."""
+        """Flush queued requests, then stop the dispatch loop.  An active
+        ``hold()`` is released so the final drain can flush."""
         if self._task is None:
             return
         self._closing = True
+        self._hold_gate.set()
         self._arrival.set()
         await self._task
         self._task = None
@@ -153,6 +163,38 @@ class AsyncZooServer:
 
     def evict(self, *, vid: int, kind: str = "all") -> None:
         self.zoo.evict(vid=vid, kind=kind)
+
+    # ------------------------------------------------------ quiesce seam
+    # The control plane's drain/reinstall barrier (repro.runtime.control):
+    # hold() pauses cutting new dispatches (submits keep queuing), drain()
+    # additionally waits for the in-flight dispatch to land, release()
+    # resumes.  Nothing is dropped — held requests dispatch after release.
+    def hold(self) -> None:
+        """Pause new dispatches; queued and new submits wait for release()."""
+        if self._hold_gate is None:
+            raise RuntimeError("AsyncZooServer is not serving")
+        self._hold_gate.clear()
+
+    def release(self) -> None:
+        """Resume dispatching after a hold()."""
+        if self._hold_gate is None:
+            raise RuntimeError("AsyncZooServer is not serving")
+        self._hold_gate.set()
+
+    async def drain(self) -> None:
+        """Quiesce for a control-plane write: hold new dispatches and wait
+        until the in-flight dispatch (if any) completes.  The caller owns
+        the hold and must release() when its reinstall is done."""
+        self.hold()
+        await self._idle.wait()
+
+    def add_stats_source(self, name: str, fn) -> None:
+        """Register a named zero-arg stats provider whose dict is merged
+        into ``latency_stats()`` under ``name`` — the control plane's
+        failure/replan/drain counters ride this path."""
+        if name in self._stats_sources:
+            raise ValueError(f"stats source {name!r} already registered")
+        self._stats_sources[name] = fn
 
     # -------------------------------------------------------------- submit
     async def submit(self, features, *, mid: int = 0, vid=0) -> AsyncResult:
@@ -211,6 +253,11 @@ class AsyncZooServer:
                 self._arrival.clear()
                 await self._arrival.wait()
                 continue
+            if not self._hold_gate.is_set():
+                # held by the control plane's drain/reinstall barrier;
+                # stop() sets the gate, so a closing server still flushes
+                await self._hold_gate.wait()
+                continue
             # A broken BatchingPolicy (it is a user-implementable protocol)
             # or coalesce failure must fail the affected futures loudly and
             # leave the loop serving — NOT kill this task silently, which
@@ -245,6 +292,8 @@ class AsyncZooServer:
                 continue
             t_dispatch = loop.time()
             waited_us = (t_dispatch - reqs[0].t_submit) * 1e6
+            self._inflight += 1
+            self._idle.clear()
             try:
                 rslt, codes, acc = await loop.run_in_executor(
                     None, self._classify_flat, flat)
@@ -253,6 +302,10 @@ class AsyncZooServer:
                     if not p.future.done():
                         p.future.set_exception(e)
                 continue
+            finally:
+                self._inflight -= 1
+                if self._inflight == 0:
+                    self._idle.set()
             t_done = loop.time()
             try:
                 self.policy.note_dispatch(flat.batch, waited_us)
@@ -279,19 +332,26 @@ class AsyncZooServer:
         """Aggregate latency accounting: p50/p99 end-to-end, queue wait,
         dispatch count, and mean coalesced batch size.  ``requests`` /
         ``dispatches`` are lifetime totals; the distribution numbers cover
-        the most recent ``stats_window`` of each."""
+        the most recent ``stats_window`` of each.  Registered stats sources
+        (``add_stats_source``) are merged in as nested dicts — the control
+        plane's counters appear under ``"control"``."""
         lat = np.asarray(self._latencies, float)
         if lat.size == 0:
-            return {"requests": self._total_requests,
-                    "dispatches": self._total_dispatches}
-        waits = np.asarray(self._queue_waits, float)
-        batches = np.asarray([b for b, _, _, _ in self._dispatch_log], float)
-        return {
-            "requests": self._total_requests,
-            "dispatches": self._total_dispatches,
-            "p50_ms": float(np.percentile(lat, 50) * 1e3),
-            "p99_ms": float(np.percentile(lat, 99) * 1e3),
-            "mean_ms": float(lat.mean() * 1e3),
-            "p50_wait_ms": float(np.percentile(waits, 50) * 1e3),
-            "mean_batch_packets": float(batches.mean()),
-        }
+            out = {"requests": self._total_requests,
+                   "dispatches": self._total_dispatches}
+        else:
+            waits = np.asarray(self._queue_waits, float)
+            batches = np.asarray(
+                [b for b, _, _, _ in self._dispatch_log], float)
+            out = {
+                "requests": self._total_requests,
+                "dispatches": self._total_dispatches,
+                "p50_ms": float(np.percentile(lat, 50) * 1e3),
+                "p99_ms": float(np.percentile(lat, 99) * 1e3),
+                "mean_ms": float(lat.mean() * 1e3),
+                "p50_wait_ms": float(np.percentile(waits, 50) * 1e3),
+                "mean_batch_packets": float(batches.mean()),
+            }
+        for name, fn in self._stats_sources.items():
+            out[name] = fn()
+        return out

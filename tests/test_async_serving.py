@@ -337,3 +337,94 @@ def test_latency_stats_surface(zoo, satdap):
                 "mean_batch_packets"):
         assert stats[key] >= 0.0
     assert stats["p50_ms"] <= stats["p99_ms"]
+
+
+# ------------------------------------------------- quiesce seam (control plane)
+def test_drain_holds_dispatches_until_release(zoo, satdap):
+    """The control plane's barrier: after drain(), submits queue but never
+    dispatch; release() flushes them.  Nothing is dropped either side."""
+    _, _, Xte, _ = satdap
+
+    async def main():
+        async with AsyncZooServer(zoo) as srv:
+            await srv.drain()                      # idle server: returns fast
+            task = asyncio.create_task(srv.submit(Xte[:4], mid=0, vid=0))
+            await asyncio.sleep(0.05)
+            held_pending = not task.done()         # held: future must wait
+            held_dispatches = srv.latency_stats()["dispatches"]
+            srv.release()
+            out = await task
+            return held_pending, held_dispatches, out
+
+    held_pending, held_dispatches, out = run_async(main())
+    assert held_pending, "request dispatched through an active hold"
+    assert held_dispatches == 0
+    np.testing.assert_array_equal(out.rslt, zoo.classify(Xte[:4], mid=0,
+                                                         vid=0))
+
+
+def test_drain_waits_for_inflight_dispatch(zoo, satdap):
+    """drain() returns only after the in-flight executor call lands — the
+    reinstall step never races a live classify."""
+    _, _, Xte, _ = satdap
+
+    async def main():
+        async with AsyncZooServer(zoo) as srv:
+            task = asyncio.create_task(srv.submit(Xte[:8], mid=0, vid=0))
+            await asyncio.sleep(0)                 # let it reach the queue
+            await srv.drain()
+            # after drain, whatever was cut must be fully done
+            inflight = srv._inflight
+            srv.release()
+            await task
+            return inflight
+
+    assert run_async(main()) == 0
+
+
+def test_stop_releases_an_active_hold(zoo, satdap):
+    """stop() must not deadlock on a held server: the final drain flushes
+    queued requests even when the control plane never called release()."""
+    _, _, Xte, _ = satdap
+
+    async def main():
+        srv = AsyncZooServer(zoo)
+        await srv.start()
+        srv.hold()
+        task = asyncio.create_task(srv.submit(Xte[:4], mid=0, vid=0))
+        await asyncio.sleep(0.01)
+        await srv.stop()                           # releases + flushes
+        return await task
+
+    out = run_async(main())
+    np.testing.assert_array_equal(out.rslt, zoo.classify(Xte[:4], mid=0,
+                                                         vid=0))
+
+
+def test_hold_before_start_raises(zoo):
+    srv = AsyncZooServer(zoo)
+    with pytest.raises(RuntimeError):
+        srv.hold()
+    with pytest.raises(RuntimeError):
+        srv.release()
+
+
+def test_stats_sources_merge_into_latency_stats(zoo, satdap):
+    """add_stats_source: named provider dicts ride latency_stats() — the
+    control plane's counter path — and names must be unique."""
+    _, _, Xte, _ = satdap
+    srv = AsyncZooServer(zoo)
+    srv.add_stats_source("control", lambda: {"replans": 3})
+    with pytest.raises(ValueError):
+        srv.add_stats_source("control", lambda: {})
+
+    async def main():
+        async with srv:
+            empty = srv.latency_stats()            # merged before any traffic
+            await srv.submit(Xte[:4], mid=0, vid=0)
+            return empty, srv.latency_stats()
+
+    empty, stats = run_async(main())
+    assert empty["control"] == {"replans": 3}
+    assert stats["control"] == {"replans": 3}
+    assert stats["requests"] >= 1

@@ -29,6 +29,7 @@ substrate.
 """
 import asyncio
 import dataclasses
+import itertools
 import os
 
 import jax
@@ -43,6 +44,8 @@ from repro.core.plane import (
     empty_program,
     install_program,
 )
+from repro.core.planner import DeviceModel, replan_zoo
+from repro.core.topology import fat_tree
 from repro.core.translator import translate
 from repro.runtime import DataplaneRuntime, SizeOrDeadlinePolicy
 from repro.runtime.executors import (
@@ -51,9 +54,11 @@ from repro.runtime.executors import (
     ShardedExecutor,
     SingleSwitchExecutor,
 )
-from repro.serving import AsyncZooServer, ZooServer
+from repro.serving import AsyncZooServer, FleetRuntime, ZooServer
 
 N_CASES = {1: 72, 4: 72, 8: 60}          # 204 drawn cases total (>= 200)
+N_FAULT_CASES = 8                        # topology-lane fault schedules
+FLEET_V = 4                              # the fault lane's zoo width
 SIZES = (1, 2, 3, 5, 7, 12, 17, 24, 33, 48)   # ragged batch menu
 FIELDS = ("rslt", "codes", "svm_acc")
 N_SEQ_DEV = 3                            # sequential-path hop count
@@ -101,12 +106,9 @@ def _split_stages(progs, profile, n_dev):
     return dps
 
 
-def _draw_case(V: int, case: int, profile: PlaneProfile):
-    """One property draw: (seed, installed programs, full packed, traffic)."""
-    seed = _seed(V, case)
-    rng = np.random.default_rng(seed)
-
-    # ---- random zoo: 1..min(V,3) programs in distinct version slots
+def _draw_zoo(rng, V: int, seed: int, profile: PlaneProfile):
+    """1..min(V,3) random programs in distinct version slots + the
+    monolithic full install (the oracle's program)."""
     n_prog = int(rng.integers(1, min(V, 3) + 1))
     vids = rng.choice(V, size=n_prog, replace=False)
     progs = []
@@ -117,8 +119,23 @@ def _draw_case(V: int, case: int, profile: PlaneProfile):
     packed = empty_program(profile)
     for prog in progs:
         packed = install_program(packed, prog, profile, vid=prog.vid)
+    return progs, packed
 
-    # ---- ragged traffic aimed at the installed (MID, VID) pairs
+
+def _draw_case(V: int, case: int, profile: PlaneProfile):
+    """One property draw: (seed, installed programs, full packed, traffic)."""
+    seed = _seed(V, case)
+    rng = np.random.default_rng(seed)
+    progs, packed = _draw_zoo(rng, V, seed, profile)
+    pb = _draw_traffic(rng, progs, V, profile)
+    return seed, progs, packed, pb
+
+
+def _draw_traffic(rng, progs, V: int, profile: PlaneProfile):
+    """One ragged traffic batch aimed at the installed (MID, VID) pairs,
+    with invalid-VID and passthrough mixes (shared by the executor lane and
+    the topology fault lane)."""
+    n_prog = len(progs)
     B = int(SIZES[rng.integers(len(SIZES))])
     X = rng.integers(0, 256, (B, N_FEATURES)).astype(np.int32)
     pick = rng.integers(0, n_prog, B)
@@ -129,6 +146,7 @@ def _draw_case(V: int, case: int, profile: PlaneProfile):
     bad = rng.random(B) < 0.2
     bad_vids = rng.choice(np.asarray([-1, V, V + 3], np.int32), B)
     if n_prog < V:
+        vids = np.asarray([p.vid for p in progs], np.int32)
         empty_slots = np.setdiff1d(np.arange(V, dtype=np.int32), vids)
         swap_in = rng.random(B) < 0.5
         bad_vids = np.where(swap_in, rng.choice(empty_slots, B), bad_vids)
@@ -156,7 +174,7 @@ def _draw_case(V: int, case: int, profile: PlaneProfile):
         rslt=np.asarray(np.where(passthru, rng.integers(0, 8, B), -1),
                         np.int32),
     )
-    return seed, progs, packed, pb
+    return pb
 
 
 def _repro_filter():
@@ -171,9 +189,10 @@ def _repro_filter():
 
 
 def _shrink_and_fail(V, case, seed, substrate, field, pb, out, want,
-                     classify_one):
+                     classify_one, *, fault=None):
     """Localize the first mismatching packet, re-run it alone, fail with a
-    single-packet repro string."""
+    single-packet repro string.  ``fault`` tags the topology lane's fault
+    schedule so the repro string pins it too."""
     got = np.asarray(getattr(out, field))
     exp = np.asarray(getattr(want, field))
     bad = np.argwhere(
@@ -188,13 +207,16 @@ def _shrink_and_fail(V, case, seed, substrate, field, pb, out, want,
             "does NOT reproduce at B=1 (batch-coupling bug)"
     except Exception as e:  # the shrink run itself may crash — still report
         shrunk = f"B=1 rerun raised {type(e).__name__}: {e}"
+    fault_tag = "" if fault is None else f" fault={fault}"
+    only_tag = f"V={V},case={case}" + \
+        ("" if fault is None else f",fault={fault}")
     pytest.fail(
-        f"CONFORMANCE REPRO V={V} case={case} seed={seed} "
+        f"CONFORMANCE REPRO V={V} case={case}{fault_tag} seed={seed} "
         f"substrate={substrate} field={field} packet={i}/{got.shape[0]} "
         f"mid={int(np.asarray(pb.mid)[i])} vid={int(np.asarray(pb.vid)[i])} "
         f"ptype={int(np.asarray(pb.ptype)[i])} "
         f"got={got[i]!r} want={exp[i]!r} [{shrunk}] — rerun with "
-        f'CONFORMANCE_ONLY="V={V},case={case}"')
+        f'CONFORMANCE_ONLY="{only_tag}"')
 
 
 @pytest.fixture(scope="module", params=sorted(N_CASES), ids=lambda v: f"V{v}")
@@ -287,3 +309,123 @@ def test_conformance_cross_executor_and_async(harness):
 def test_conformance_draw_count():
     """The harness contract: at least 200 drawn cases across the V sweep."""
     assert sum(N_CASES.values()) >= 200
+
+
+# --------------------------------------------------------------------------
+# Topology lane: fault-injected whole-fleet serving (ISSUE-8 acceptance pin).
+#
+# Each case plans a random zoo onto a fat-tree with ``plan_zoo``, serves
+# three traffic phases through ``FleetRuntime`` — before, during (submitted
+# concurrently with 1-2 scripted device kills), and after the control loop's
+# replan — and pins every phase bit-identical to the monolithic kernels.ref
+# oracle.  Repro: CONFORMANCE_ONLY="V=4,case=3,fault=3".
+# --------------------------------------------------------------------------
+def _fleet_seed(case: int) -> int:
+    return 104_729 + 13 * case
+
+
+@pytest.fixture(scope="module")
+def fleet_harness():
+    """Shared template engine + oracle for every fault schedule: one jitted
+    trace serves every device of every case's fleet."""
+    prof = _profile(FLEET_V)
+    return prof, SwitchEngine(prof), SwitchEngine(prof, mode="ref")
+
+
+def _draw_fault_schedule(rng, progs, net, src, dst, dev, fleet):
+    """1-2 killable on-path switches, pre-validated survivable: the edge
+    switches next to the hosts are cut vertices (hosts_per_edge=1), so the
+    schedule draws from the interior and keeps only combos the planner can
+    replan around (capacity included, not just connectivity)."""
+    interior = [d for d in fleet.path[2:-2]
+                if net.kind[d] == "switch"]
+    n_kill = int(rng.integers(1, 3))
+    combos = list(itertools.combinations(interior, n_kill))
+    if n_kill == 2:
+        combos += list(itertools.combinations(interior, 1))
+    rng.shuffle(combos)
+    for combo in combos:
+        try:
+            replan_zoo(progs, net, src, dst, set(combo),
+                       solver="dp", default_device=dev)
+        except (RuntimeError, ValueError):
+            continue
+        return list(combo)
+    raise AssertionError(
+        f"no survivable fault schedule on path {fleet.path} — the draw "
+        "should be impossible on a fat-tree interior")
+
+
+async def _run_fleet_phases(fleet, phases, kills):
+    """Serve the three phases live; the kills land while phase 'during' is
+    in flight, so its answers cross the detect->replan->drain->reinstall
+    cycle (DeviceFailure retries included)."""
+    outs = []
+    async with fleet.serving(probe_interval_s=0.005):
+        outs.append(await fleet.submit_batch(phases[0]))      # before
+        during = asyncio.create_task(fleet.submit_batch(phases[1]))
+        await asyncio.sleep(0)           # let the submit reach the queue
+        for d in kills:
+            fleet.kill(d)
+        outs.append(await during)                             # during
+        outs.append(await fleet.submit_batch(phases[2]))      # after
+        stats = fleet.latency_stats()
+    return outs, stats
+
+
+def test_conformance_fleet_fault_schedules(fleet_harness):
+    """Seeded fault schedules: every response before/during/after the
+    replan is bit-identical to the kernels.ref oracle, and the heal cycle's
+    counters surface through latency_stats()."""
+    prof, engine, oracle = fleet_harness
+    only = _repro_filter()
+    if only.get("fault") is not None:
+        cases = [only["fault"]]
+    elif only:
+        pytest.skip("CONFORMANCE_ONLY pins a non-fault case")
+    else:
+        cases = range(N_FAULT_CASES)
+    net = fat_tree(4)
+    for case in cases:
+        seed = _fleet_seed(case)
+        rng = np.random.default_rng(seed)
+        progs, packed = _draw_zoo(rng, FLEET_V, seed, _profile(FLEET_V))
+        # endpoints in different pods, so the path crosses the core layer
+        pods = rng.choice(4, size=2, replace=False)
+        src, dst = f"h{pods[0]}_0_0", f"h{pods[1]}_0_0"
+        # small per-device capacity spreads stages across hops when the
+        # drawn zoo fits; fall back to Tofino-class if the plan is infeasible
+        dev = DeviceModel(n_stages=int(rng.choice([4, 6, 20])))
+        try:
+            fleet = FleetRuntime(net, prof, progs, src=src, dst=dst,
+                                 default_device=dev, engine=engine)
+        except RuntimeError:
+            dev = DeviceModel()
+            fleet = FleetRuntime(net, prof, progs, src=src, dst=dst,
+                                 default_device=dev, engine=engine)
+        kills = _draw_fault_schedule(rng, progs, net, src, dst, dev, fleet)
+        phases = [_draw_traffic(rng, progs, FLEET_V, prof) for _ in range(3)]
+        want = [oracle.classify(packed, pb) for pb in phases]
+
+        outs, stats = asyncio.run(_run_fleet_phases(fleet, phases, kills),
+                                  debug=True)
+        for phase, pb, out, exp in zip(("before", "during", "after"),
+                                       phases, outs, want):
+            got = dataclasses.replace(pb, rslt=out.rslt, codes=out.codes,
+                                      svm_acc=out.svm_acc)
+            for field in FIELDS:
+                if not (np.asarray(getattr(got, field))
+                        == np.asarray(getattr(exp, field))).all():
+                    def classify_one(pb1):
+                        return (fleet.runtime.run(pb1),
+                                oracle.classify(packed, pb1))
+                    _shrink_and_fail(FLEET_V, case, seed,
+                                     f"fleet-{phase}", field, pb, got, exp,
+                                     classify_one, fault=case)
+
+        # the heal cycle actually ran, and the fleet routed around the kills
+        ctl = stats["control"]
+        assert ctl["failures_detected"] >= 1, ctl
+        assert ctl["replans"] >= 1 and ctl["reinstalls"] >= 1, ctl
+        assert ctl["drains"] >= 1 and ctl["heal_failures"] == 0, ctl
+        assert not (set(kills) & set(fleet.path)), (kills, fleet.path)

@@ -1,0 +1,342 @@
+"""Whole-topology fleet serving + routing invariants under node removal.
+
+Three layers of ISSUE-8 pins:
+
+* ``Network.without`` routing invariants across all four paper topologies —
+  post-removal paths stay valid/loop-free and unreachable endpoints are
+  *reported* (``None`` / ``[]``), never silently routed through dead nodes;
+* ``FleetRuntime``/``FleetExecutor`` mechanics — plan-to-wire parity with
+  the ref oracle, one shared jitted trace for any fleet size, swap vs
+  retarget semantics, ``DeviceFailure`` on dead wire paths;
+* the ``ControlLoop`` heal cycle — detect/replan/drain/reinstall counters
+  through ``latency_stats()``, idempotent concurrent heals, honest
+  ``RuntimeError`` when a cut vertex dies.  (Bit-identity across random
+  fault schedules lives in the ``tests/test_conformance.py`` fault lane.)
+"""
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.core.mlmodels import DecisionTree, RandomForest
+from repro.core.plane import (
+    PlaneProfile,
+    SwitchEngine,
+    empty_program,
+    install_program,
+)
+from repro.core.planner import DeviceModel
+from repro.core.topology import bcube, dcell, fat_tree, jellyfish
+from repro.core.translator import translate
+from repro.runtime import DeviceFailure
+from repro.serving import FleetRuntime
+from repro.serving.fleet import FleetExecutor
+
+TOPOLOGIES = [
+    ("fat_tree", lambda: fat_tree(4)),
+    ("dcell", lambda: dcell(3, 1)),
+    ("bcube", lambda: bcube(3, 1)),
+    ("jellyfish", lambda: jellyfish(16, 3, hosts=6, seed=3)),
+]
+
+
+def run_async(coro):
+    return asyncio.run(coro, debug=True)
+
+
+# ------------------------------------------------- routing invariants
+@pytest.mark.parametrize(("name", "mk"), TOPOLOGIES,
+                         ids=[n for n, _ in TOPOLOGIES])
+def test_paths_stay_valid_after_node_removal(name, mk):
+    """Random single-switch removals: every surviving path is loop-free,
+    endpoint-anchored, edge-valid, and avoids the removed node."""
+    net = mk()
+    rng = np.random.default_rng(11)
+    hosts = net.hosts()
+    checked = 0
+    for _ in range(10):
+        src, dst = (str(x) for x in rng.choice(hosts, 2, replace=False))
+        kill = {str(rng.choice(net.switches()))}
+        sub = net.without(kill)
+        paths = sub.k_shortest_paths(src, dst, 3)
+        if not paths:
+            # unreachable must be *reported*, consistently, on both APIs
+            assert sub.shortest_path(src, dst) is None
+            continue
+        for p in paths:
+            assert p[0] == src and p[-1] == dst
+            assert len(set(p)) == len(p), f"loop in {p}"
+            assert not (set(p) & kill), f"{p} routes through dead {kill}"
+            for a, b in zip(p, p[1:]):
+                assert b in sub.adj[a], f"edge {a}-{b} does not exist"
+        checked += 1
+    assert checked >= 3, f"too few reachable draws on {name}"
+
+
+def test_without_reports_unreachable_endpoints():
+    """Killing a host's only edge switch (hosts_per_edge=1 cut vertex) must
+    disconnect it: None / [] — not a path through the dead switch."""
+    net = fat_tree(4)
+    src, dst = "h0_0_0", "h1_0_0"
+    assert net.shortest_path(src, dst) is not None
+    sub = net.without({"edge0_0"})
+    assert sub.shortest_path(src, dst) is None
+    assert sub.k_shortest_paths(src, dst, 4) == []
+
+
+def test_without_validates_and_preserves():
+    net = fat_tree(4)
+    with pytest.raises(ValueError):
+        net.without({"no_such_node"})
+    sub = net.without({"core0"})
+    assert "core0" not in sub.nodes
+    assert all("core0" not in vs for vs in sub.adj.values())
+    assert net.n_switches == sub.n_switches + 1   # original untouched
+    assert "core0" in net.nodes
+
+
+# ------------------------------------------------------ fleet mechanics
+def _profile():
+    return PlaneProfile(max_features=36, max_trees=4, max_layers=8,
+                        max_entries_per_layer=64, max_leaves=64,
+                        max_classes=8, max_hyperplanes=8, max_versions=2)
+
+
+@pytest.fixture(scope="module")
+def fleet_setup(satdap):
+    """Shared net/profile/programs/template-engine for every fleet test —
+    one jit compile for the module, fixed B=16 so one bucket trace."""
+    Xtr, ytr, Xte, _ = satdap
+    prof = _profile()
+    progs = [
+        translate(DecisionTree(max_depth=4, max_leaf_nodes=16).fit(Xtr, ytr),
+                  vid=0),
+        translate(RandomForest(n_estimators=3, max_depth=3,
+                               max_leaf_nodes=8).fit(Xtr, ytr), vid=1),
+    ]
+    prof_engine = SwitchEngine(prof)
+    oracle = empty_program(prof)
+    for p in progs:
+        oracle = install_program(oracle, p, prof, vid=p.vid)
+    return fat_tree(4), prof, progs, prof_engine, oracle, Xte[:16]
+
+
+def _mk_fleet(fleet_setup, *, n_stages=4):
+    net, prof, progs, engine, _, _ = fleet_setup
+    return FleetRuntime(net, prof, progs, src="h0_0_0", dst="h2_0_0",
+                        default_device=DeviceModel(n_stages=n_stages),
+                        engine=engine)
+
+
+def test_fleet_plan_spreads_and_matches_oracle(fleet_setup):
+    """Small per-device capacity forces a multi-hop deployment; classify
+    through the fleet equals the monolithic single-switch oracle for both
+    zoo versions."""
+    net, prof, progs, engine, oracle_packed, Xq = fleet_setup
+    fleet = _mk_fleet(fleet_setup)
+    assert len(fleet.executor.devices) >= 2          # genuinely distributed
+    assert set(fleet.executor.devices) <= set(fleet.path)
+    oracle = SwitchEngine(prof, mode="ref")
+    for vid in (0, 1):
+        want = np.asarray(oracle.classify(
+            oracle_packed, fleet.make_request(Xq, mid=0, vid=vid)).rslt)
+        np.testing.assert_array_equal(fleet.classify(Xq, mid=0, vid=vid),
+                                      want)
+
+
+def test_fleet_shares_one_trace_across_deployments(fleet_setup):
+    """The P4-template analogue: fleets of different device counts reuse one
+    compiled classify — per-device programs are arguments, not traces.  The
+    executable cache holds at most 2 entries at a fixed batch shape (the
+    host-resident first hop vs device-resident later hops), and adding
+    fleets, devices, or deployments must not grow it."""
+    net, prof, progs, engine, _, Xq = fleet_setup
+    wide = _mk_fleet(fleet_setup, n_stages=4)    # several hosting devices
+    tall = _mk_fleet(fleet_setup, n_stages=20)   # everything on one device
+    assert len(wide.executor.devices) > len(tall.executor.devices)
+    a = wide.classify(Xq, mid=0, vid=0)
+    baseline = engine.cache_size()
+    assert baseline <= 2              # one B=16 bucket trace, any fleet size
+    b = tall.classify(Xq, mid=0, vid=0)
+    np.testing.assert_array_equal(a, b)
+    wide.classify(Xq, mid=0, vid=1)   # other zoo version: same trace too
+    assert engine.cache_size() == baseline
+
+
+def test_fleet_kill_raises_device_failure(fleet_setup):
+    """A dead device anywhere on the wire path (hosting or not) fails the
+    dispatch with DeviceFailure naming a dead hop."""
+    fleet = _mk_fleet(fleet_setup)
+    _, _, _, _, _, Xq = fleet_setup
+    non_hosting = [d for d in fleet.path[1:-1]
+                   if d not in fleet.executor.devices]
+    victim = (non_hosting or fleet.executor.devices)[0]
+    fleet.kill(victim)
+    with pytest.raises(DeviceFailure) as ei:
+        fleet.classify(Xq, mid=0, vid=0)
+    assert ei.value.device in fleet.down
+    assert ei.value.path == fleet.path
+    fleet.revive(victim)
+    fleet.classify(Xq, mid=0, vid=0)             # healthy again, no replan
+
+
+def test_fleet_kill_validates_device(fleet_setup):
+    fleet = _mk_fleet(fleet_setup)
+    with pytest.raises(ValueError):
+        fleet.kill("h0_0_0")                     # hosts aren't killable
+    with pytest.raises(ValueError):
+        fleet.kill("no_such_switch")
+
+
+def test_fleet_executor_swap_vs_retarget(fleet_setup):
+    """Protocol swap() keeps the device set; a changed count must be
+    rejected (that's a control-plane retarget, not a swap)."""
+    net, prof, progs, engine, oracle_packed, Xq = fleet_setup
+    fleet = _mk_fleet(fleet_setup)
+    ex = fleet.executor
+    n = len(ex.devices)
+    ex.swap([ex.programs[d] for d in ex.devices])            # same count: ok
+    with pytest.raises(ValueError):
+        ex.swap([empty_program(prof)] * (n + 1))
+    with pytest.raises(ValueError):                          # off-path host
+        ex.retarget(fleet.path, ["not_on_path"], [empty_program(prof)])
+    with pytest.raises(ValueError):                          # count mismatch
+        ex.retarget(fleet.path, ex.devices, [empty_program(prof)] * (n + 1))
+
+
+def test_fleet_executor_is_runtime_executor(fleet_setup):
+    from repro.runtime import Executor
+    fleet = _mk_fleet(fleet_setup)
+    assert isinstance(fleet.executor, Executor)
+    assert isinstance(fleet.executor, FleetExecutor)
+    assert fleet.executor.granularity == 1
+
+
+# ------------------------------------------------------ heal cycle (async)
+def test_fleet_heal_cycle_end_to_end(fleet_setup):
+    """Kill a hosting interior switch under live traffic: the retried answer
+    is identical, the new path avoids the corpse, and every control counter
+    reflects exactly one detect->replan->drain->reinstall cycle."""
+    net, prof, progs, engine, oracle_packed, Xq = fleet_setup
+    fleet = _mk_fleet(fleet_setup)
+    oracle = SwitchEngine(prof, mode="ref")
+    want = np.asarray(oracle.classify(
+        oracle_packed, fleet.make_request(Xq, mid=0, vid=1)).rslt)
+    victims = [d for d in fleet.path[2:-2]]
+
+    async def main():
+        # long probe interval: this test exercises the *data-path* detection
+        # (DeviceFailure -> heal -> retry), not the heartbeat
+        async with fleet.serving(probe_interval_s=30.0):
+            before = await fleet.submit(Xq, mid=0, vid=1)
+            fleet.kill(victims[0])
+            during = await fleet.submit(Xq, mid=0, vid=1)
+            after = await fleet.submit(Xq, mid=0, vid=1)
+            return before, during, after, fleet.latency_stats()
+
+    before, during, after, stats = run_async(main())
+    for out in (before, during, after):
+        np.testing.assert_array_equal(out.rslt, want)
+    assert victims[0] not in fleet.path
+    assert victims[0] in fleet.down                  # still dead, just routed
+    ctl = stats["control"]
+    assert ctl["failures_detected"] == 1
+    assert ctl["replans"] == ctl["drains"] == ctl["reinstalls"] == 1
+    assert ctl["retries"] >= 1
+    assert ctl["heal_failures"] == 0
+    assert ctl["last_heal_ms"] > 0
+    assert len(ctl["downtime_windows"]) == 1
+    t0, t1 = ctl["downtime_windows"][0]
+    assert 0 <= t0 < t1
+    assert ctl["total_downtime_s"] == pytest.approx(t1 - t0)
+    # the session's windows feed the netsim availability model
+    lat = fleet.modeled_latencies(n=200, arrival_rate_rps=1000.0)
+    assert lat.shape == (200,) and (lat > 0).all()
+
+
+def test_fleet_heartbeat_detects_without_traffic(fleet_setup):
+    """The probe task alone (no submits after the kill) must run the heal
+    cycle — failure detection is not submit-driven only."""
+    fleet = _mk_fleet(fleet_setup)
+    victim = fleet.path[2]
+
+    async def main():
+        async with fleet.serving(probe_interval_s=0.01):
+            fleet.kill(victim)
+            for _ in range(200):                     # ~2 s ceiling
+                await asyncio.sleep(0.01)
+                if fleet.counters.reinstalls:
+                    break
+            return fleet.latency_stats()
+
+    stats = run_async(main())
+    assert stats["control"]["reinstalls"] >= 1
+    assert victim not in fleet.path
+
+
+def test_fleet_concurrent_heals_collapse(fleet_setup):
+    """Many submitters racing one failure: the heal lock collapses them into
+    a single replan/reinstall."""
+    net, prof, progs, engine, oracle_packed, Xq = fleet_setup
+    fleet = _mk_fleet(fleet_setup)
+    oracle = SwitchEngine(prof, mode="ref")
+    want = np.asarray(oracle.classify(
+        oracle_packed, fleet.make_request(Xq, mid=0, vid=0)).rslt)
+
+    async def main():
+        async with fleet.serving(probe_interval_s=30.0):
+            fleet.kill(fleet.path[2])
+            outs = await asyncio.gather(
+                *[fleet.submit(Xq, mid=0, vid=0) for _ in range(6)])
+            return outs, fleet.latency_stats()
+
+    outs, stats = run_async(main())
+    for out in outs:
+        np.testing.assert_array_equal(out.rslt, want)
+    assert stats["control"]["replans"] == 1
+    assert stats["control"]["reinstalls"] == 1
+
+
+def test_fleet_cut_vertex_death_is_honest(fleet_setup):
+    """Killing the src host's only edge switch leaves no surviving path: the
+    submit must surface RuntimeError (replan infeasible), not hang and not
+    fabricate answers."""
+    fleet = _mk_fleet(fleet_setup)
+    _, _, _, _, _, Xq = fleet_setup
+    edge = fleet.path[1]
+
+    async def main():
+        async with fleet.serving(probe_interval_s=30.0):
+            fleet.kill(edge)
+            with pytest.raises(RuntimeError, match="no surviving path"):
+                await fleet.submit(Xq, mid=0, vid=0)
+            return fleet.latency_stats()
+
+    stats = run_async(main())
+    assert stats["control"]["heal_failures"] >= 1
+    assert stats["control"]["reinstalls"] == 0
+
+
+def test_fleet_serving_session_is_exclusive(fleet_setup):
+    """One live session at a time; the control handle exists only inside."""
+    fleet = _mk_fleet(fleet_setup)
+    assert fleet.control is None
+    assert fleet.runtime is fleet.zoo.runtime
+
+    async def main():
+        async with fleet.serving(probe_interval_s=30.0):
+            assert fleet.control is not None
+            with pytest.raises(RuntimeError, match="already serving"):
+                async with fleet.serving():
+                    pass
+    run_async(main())
+    assert fleet.control is None
+
+
+def test_fleet_not_serving_raises(fleet_setup):
+    fleet = _mk_fleet(fleet_setup)
+    _, _, _, _, _, Xq = fleet_setup
+    with pytest.raises(RuntimeError, match="not serving"):
+        run_async(fleet.submit(Xq, mid=0, vid=0))
+    with pytest.raises(RuntimeError, match="not serving"):
+        fleet.latency_stats()

@@ -9,6 +9,7 @@ from repro.core.netsim import (
     forwarding_overhead,
     measure_inference_time,
     server_serving_time,
+    serving_availability,
     simulate_serving,
 )
 from repro.core.planner import plan_program
@@ -48,3 +49,42 @@ def test_forwarding_overhead_bounds():
     r = forwarding_overhead()
     assert 0 < r["latency_overhead_frac"] <= 0.033  # paper: 2.7-3.3%
     assert 0.9 < r["goodput_frac"] < 1.0
+
+
+# ----------------------------------------- fault-window downtime (ISSUE 8)
+def test_simulate_serving_static_path_unchanged():
+    """No windows, no arrival rate: bit-identical to the pre-fault model —
+    the regression guard for existing callers (benchmarks/fig67_latency.py)."""
+    a = simulate_serving(1e-4, n=500, seed=1)
+    b = simulate_serving(1e-4, n=500, seed=1, downtime_windows=(),
+                         arrival_rate_rps=None)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_simulate_serving_fault_window_holds_requests():
+    """A replan/drain window holds the requests that arrive inside it until
+    the window closes; everyone else is untouched."""
+    base, rate = 1e-4, 2000.0
+    window = (0.05, 0.15)
+    s, t = simulate_serving(base, n=800, seed=7, arrival_rate_rps=rate,
+                            downtime_windows=(window,), return_arrivals=True)
+    s0 = simulate_serving(base, n=800, seed=7, arrival_rate_rps=rate)
+    inside = (t >= window[0]) & (t < window[1])
+    assert inside.any() and (~inside).any()
+    # held requests pay exactly the remainder of the window on top
+    np.testing.assert_allclose(s[inside], s0[inside] + (window[1] - t[inside]))
+    np.testing.assert_array_equal(s[~inside], s0[~inside])
+    # worst-case held latency approaches the full window length
+    assert s[inside].max() > 0.5 * (window[1] - window[0])
+
+
+def test_serving_availability_reflects_downtime():
+    """Availability (fraction within SLO) degrades when a fault window is
+    injected and recovers without one."""
+    base, rate, slo = 1e-4, 2000.0, 1e-3
+    up = simulate_serving(base, n=1000, seed=3, arrival_rate_rps=rate)
+    down = simulate_serving(base, n=1000, seed=3, arrival_rate_rps=rate,
+                            downtime_windows=((0.1, 0.2),))
+    assert serving_availability(up, slo) > 0.99
+    assert serving_availability(down, slo) < serving_availability(up, slo)
+    assert serving_availability(np.array([]), slo) == 1.0

@@ -3,7 +3,13 @@ import numpy as np
 import pytest
 
 from repro.core.mlmodels import DecisionTree, LinearSVM, RandomForest
-from repro.core.planner import DeviceModel, plan_program, replan
+from repro.core.planner import (
+    DeviceModel,
+    plan_program,
+    plan_zoo,
+    replan,
+    replan_zoo,
+)
 from repro.core.topology import bcube, dcell, fat_tree, jellyfish
 from repro.core.translator import translate
 
@@ -225,3 +231,91 @@ def test_replan_fault_injection_random(small_models):
         injections += 1
     assert injections >= 4, \
         f"only {injections} usable fault-injection draws out of {attempts}"
+
+
+# --------------------------------------------- post-fault properties (ISSUE 8)
+def test_replan_searches_surviving_topology(models, net):
+    """Exclusion must re-enumerate paths on the surviving network: with a
+    single candidate path, killing its core switch used to make every
+    candidate cross the dead device even though the fat-tree has three more
+    cores — the replan must find one, not report infeasible."""
+    src, dst = _ends(net)
+    plan = plan_program(models[0], net, src, dst, solver="dp",
+                        n_candidate_paths=1)
+    interior = [d for d in plan.path[2:-2] if d.startswith(("core", "agg"))]
+    failed = {interior[0]}
+    plan2 = replan(models[0], net, src, dst, failed, solver="dp",
+                   n_candidate_paths=1)
+    assert not (set(plan2.path) & failed)
+
+
+def test_replan_endpoint_failure_is_infeasible(models, net):
+    src, dst = _ends(net)
+    with pytest.raises(RuntimeError):
+        replan(models[0], net, src, dst, {src}, solver="dp")
+
+
+def test_replan_zoo_capacity_carryover_post_fault(small_models, net):
+    """Zoo-wide replanning: no dead device anywhere in any version's plan,
+    one shared surviving path, and the per-device slot budget holds for the
+    stage total summed ACROSS versions (the carry-over invariant)."""
+    src, dst = _ends(net)
+    dev = DeviceModel(n_stages=6)
+    progs = small_models[:2]   # vid is irrelevant to placement
+    kw = dict(default_device=dev, solver="dp")
+    plans = plan_zoo(progs, net, src, dst, **kw)
+    used = sorted({d for p in plans for d in p.assignment.values()},
+                  key=plans[0].path.index)
+    killable = [d for d in used if d not in (plans[0].path[1],
+                                             plans[0].path[-2])]
+    failed = set(killable[:1]) or {plans[0].path[3]}
+    plans2 = replan_zoo(progs, net, src, dst, failed, **kw)
+    assert len({tuple(p.path) for p in plans2}) == 1   # still one wire path
+    assert not (set(plans2[0].path) & failed)
+    per_dev: dict[str, int] = {}
+    for p in plans2:
+        assert not (set(p.assignment.values()) & failed), \
+            f"dead device reappears in a version's post-fault plan: {failed}"
+        for d in p.assignment.values():
+            per_dev[d] = per_dev.get(d, 0) + 1
+    assert all(n <= dev.n_stages for n in per_dev.values()), \
+        f"cross-version stage total overflows a device: {per_dev}"
+
+
+def test_differential_milp_equals_dp_post_fault(small_models):
+    """The solver-agreement property must also hold on post-fault problems:
+    dp and milp agree on the replanned objective (or agree the post-fault
+    draw is infeasible) across randomized kills."""
+    rng = np.random.default_rng(3313)
+    draws = 0
+    attempts = 0
+    while draws < 8 and attempts < 60:
+        attempts += 1
+        net = _random_topology(rng)
+        hosts = net.hosts()
+        src, dst = rng.choice(hosts, size=2, replace=False)
+        dev = DeviceModel(n_stages=int(rng.integers(3, 9)))
+        prog = small_models[int(rng.integers(len(small_models)))]
+        kw = dict(default_device=dev, n_candidate_paths=2)
+        try:
+            plan = plan_program(prog, net, src, dst, solver="dp", **kw)
+        except RuntimeError:
+            continue
+        killable = [d for d in plan.breakdown["devices_used"]
+                    if d not in (plan.path[1], plan.path[-2])]
+        if not killable:
+            continue
+        failed = {str(rng.choice(killable))}
+        try:
+            a = replan(prog, net, src, dst, failed, solver="dp", **kw)
+        except RuntimeError:
+            with pytest.raises(RuntimeError):   # infeasibility must agree
+                replan(prog, net, src, dst, failed, solver="milp", **kw)
+            continue
+        b = replan(prog, net, src, dst, failed, solver="milp", **kw)
+        assert abs(a.objective - b.objective) < 1e-9, (
+            f"post-fault solver gap: dp={a.objective} milp={b.objective} "
+            f"({prog.kind}, failed={failed}, {src}->{dst})")
+        draws += 1
+    assert draws >= 4, \
+        f"only {draws} feasible post-fault differential draws of {attempts}"
