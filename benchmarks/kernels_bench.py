@@ -1,14 +1,31 @@
 """Kernel micro-bench: XLA-ref path wall time on CPU (us/call) + the
-VMEM/MXU tiling parameters the Pallas versions claim on TPU."""
+VMEM/MXU tiling parameters the Pallas versions claim on TPU.
+
+The classify sweep (``run_classify_fused``) is the perf trajectory seed:
+fused megakernel vs the pre-fusion three-launch classify, per (mode, V, L),
+each row carrying us/packet plus the roofline's achieved-vs-peak bytes and
+flops (``repro.analysis.hlocost`` on the compiled module +
+``repro.analysis.roofline`` HW peaks).  ``run()`` also writes the rows
+machine-readable to ``BENCH_kernels.json`` (CI uploads it as a workflow
+artifact).  ``KERNELS_BENCH_SMOKE=1`` shrinks the sweep to the single
+fused-vs-unfused L=32 comparison CI gates on.
+"""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.hlocost import parse_hlo_cost
+from repro.analysis.roofline import HW, roofline_terms
 from repro.kernels import ops
+
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_kernels.json")
 
 
 def _time(fn, *args, n=10):
@@ -66,6 +83,12 @@ def run() -> list[str]:
                f"(Pallas: flash-decode, block_s=512, VMEM scratch accum)")
 
     out.extend(run_tree_walk(rng))
+    classify_rows, json_rows = run_classify_fused(rng)
+    out.extend(classify_rows)
+    with open(BENCH_JSON, "w") as f:
+        json.dump({"bench": "kernels", "rows": json_rows}, f, indent=1)
+        f.write("\n")
+    out.append(f"# wrote {len(json_rows)} rows to BENCH_kernels.json")
     return out
 
 
@@ -126,3 +149,114 @@ def run_tree_walk(rng) -> list[str]:
                     f"{pps:.0f},B={B} T={T} E={E} F={F} "
                     f"(interpret-mode kernel paths)")
     return out
+
+
+def run_classify_fused(rng) -> tuple[list[str], list[dict]]:
+    """Whole-classify megakernel vs the pre-fusion three-launch path.
+
+    Per (mode, V, L) row: launch count (1 fused vs 3 unfused — the jaxpr
+    pin), us/packet in interpret mode (where per-launch overhead is real),
+    and the roofline view of the *compiled module*: HLO matmul flops +
+    HBM-model traffic bytes (``parse_hlo_cost``), the achieved rates at the
+    measured wall time, and the step lower bound against the TPU HW peaks.
+    The fused kernel deletes the f32 ``fsel`` operand stream and the
+    codes/feature HBM round-trips, so its bytes term — not just its launch
+    count — drops; the before/after table at the end shows both.
+    """
+    from repro.kernels import tiling
+
+    smoke = bool(os.environ.get("KERNELS_BENCH_SMOKE"))
+    hw = HW()
+    out = ["classify,mode,V,L,B,launches,us_per_batch,us_per_packet,"
+           "hlo_mflops,hlo_mbytes,achieved_gflops,achieved_gbps,"
+           "roofline_lb_us,dominant,config"]
+    json_rows: list[dict] = []
+    B, T, E, F = 512, 8, 128, 46
+    P, C, H, levels = 256, 8, 8, 256
+    l_sweep = (32,) if smoke else (8, 16, 32)
+    v_sweep = (1,) if smoke else (1, 4)
+    speedups: dict[tuple[int, int], dict[str, float]] = {}
+    for L in l_sweep:
+        for V in v_sweep:
+            codes = jnp.asarray(rng.integers(0, 2**12, (B, T)), jnp.uint32)
+            feats = jnp.asarray(rng.integers(0, levels, (B, F)), jnp.int32)
+            vid = jnp.asarray(rng.integers(0, V, (B,)), jnp.int32)
+            cv = jnp.asarray(rng.integers(0, 64, (V, L, T, E)), jnp.uint32)
+            cm = jnp.asarray(rng.integers(0, 64, (V, L, T, E)), jnp.uint32)
+            fid = jnp.asarray(rng.integers(0, F, (V, L, T, E)), jnp.int32)
+            flo = jnp.zeros((V, L, T, E), jnp.int32)
+            fhi = jnp.full((V, L, T, E), 128, jnp.int32)
+            bit = jnp.asarray(rng.integers(0, 2, (V, L, T, E)), jnp.uint32)
+            valid = jnp.ones((V, L, T, E), bool)
+            shift = jnp.arange(L, dtype=jnp.int32)
+            pc = jnp.asarray(np.sort(
+                rng.choice(2**16, (V, T, P), replace=False).astype(np.uint32),
+                axis=2))
+            plab = jnp.asarray(rng.integers(0, C, (V, T, P)), jnp.int32)
+            pv = jnp.ones((V, T, P), bool)
+            w = jnp.ones((V, T), jnp.float32)
+            lut = jnp.asarray(rng.integers(-50_000, 50_000,
+                                           (V, H, F, levels)), jnp.int32)
+            bias = jnp.zeros((V, H), jnp.int32)
+            args = (codes, feats, vid, cv, cm, fid, flo, fhi, bit, valid,
+                    shift, pc, plab, pv, w, lut, bias)
+            prep = jax.tree.map(   # install-time prep, outside the timed fn
+                lambda x: x.block_until_ready(),
+                tiling.prep_classify_fused(cv, cm, fid, flo, fhi, bit, valid,
+                                           pc, plab, pv, w, lut, bias))
+            for name, mode, kw in (
+                    ("fused", "interpret", {}),
+                    ("fused-prepped", "interpret", {"prep": prep}),
+                    ("unfused", "unfused-interpret", {})):
+                call = lambda *a, m=mode, k=kw: ops.classify_fused_v(
+                    *a, C, mode=m, **k)
+                launches = ops.count_pallas_launches(call, *args)
+                fn = jax.jit(call)
+                cost = parse_hlo_cost(fn.lower(*args).compile().as_text())
+                us = _time(fn, *args, n=2 if smoke else 3)
+                us_pkt = us / B
+                t_s = us * 1e-6
+                terms = roofline_terms(
+                    hlo_flops=cost["matmul_flops"],
+                    hlo_bytes=cost["traffic_bytes"],
+                    collective_wire_bytes=0.0, chips=1, hw=hw)
+                row = {
+                    "mode": name, "V": V, "L": L, "B": B,
+                    "launches": launches,
+                    "us_per_batch": round(us, 1),
+                    "us_per_packet": round(us_pkt, 4),
+                    "hlo_flops": cost["matmul_flops"],
+                    "hlo_bytes": cost["traffic_bytes"],
+                    "achieved_gflops": cost["matmul_flops"] / t_s / 1e9,
+                    "achieved_gbps": cost["traffic_bytes"] / t_s / 1e9,
+                    "peak_gflops": hw.peak_flops / 1e9,
+                    "peak_gbps": hw.hbm_gbps / 1e9,
+                    "roofline_lb_us": terms["step_s_lower_bound"] * 1e6,
+                    "dominant": terms["dominant"],
+                    "config": f"B={B} T={T} E={E} F={F} P={P} levels={levels}",
+                }
+                json_rows.append(row)
+                out.append(
+                    f"classify,{name},{V},{L},{B},{launches},{us:.1f},"
+                    f"{us_pkt:.3f},{cost['matmul_flops'] / 1e6:.1f},"
+                    f"{cost['traffic_bytes'] / 1e6:.1f},"
+                    f"{row['achieved_gflops']:.3f},{row['achieved_gbps']:.3f},"
+                    f"{row['roofline_lb_us']:.2f},{terms['dominant']},"
+                    f"{row['config']}")
+                speedups.setdefault((L, V), {})[name] = us_pkt
+    # before/after roofline table: what the fusion + quantized layouts buy
+    out.append("classify_roofline,L,V,fused_us_pkt,unfused_us_pkt,speedup,"
+               "fused_mbytes,unfused_mbytes,bytes_saved_pct")
+    for (L, V), times in sorted(speedups.items()):
+        f_row = next(r for r in json_rows
+                     if r["mode"] == "fused" and r["L"] == L and r["V"] == V)
+        u_row = next(r for r in json_rows
+                     if r["mode"] == "unfused" and r["L"] == L and r["V"] == V)
+        ratio = times["unfused"] / times["fused"]
+        saved = 100.0 * (1 - f_row["hlo_bytes"] / max(u_row["hlo_bytes"], 1))
+        out.append(
+            f"classify_roofline,{L},{V},{times['fused']:.3f},"
+            f"{times['unfused']:.3f},{ratio:.2f}x,"
+            f"{f_row['hlo_bytes'] / 1e6:.1f},{u_row['hlo_bytes'] / 1e6:.1f},"
+            f"{saved:.1f}")
+    return out, json_rows

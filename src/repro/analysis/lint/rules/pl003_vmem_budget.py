@@ -119,14 +119,20 @@ def _scratch_bytes(kw_value: ast.AST, bindings: dict) -> int:
 
 def _footprint(call: ast.Call, entry: KernelBudget) -> int:
     """Static per-grid-step VMEM bytes of one ``pl.pallas_call``."""
-    total = 0
+    specs, scratch = [], 0
     for kw in call.keywords:
         if kw.arg in ("in_specs", "out_specs"):
-            for spec in _specs_of(kw.value):
-                total += _block_elems(spec, entry.bindings) * entry.itemsize
+            specs.extend(_specs_of(kw.value))
         elif kw.arg == "scratch_shapes":
-            total += _scratch_bytes(kw.value, entry.bindings)
-    return total + sum(entry.intermediates.values())
+            scratch += _scratch_bytes(kw.value, entry.bindings)
+    sizes = entry.spec_itemsizes or (entry.itemsize,) * len(specs)
+    if len(sizes) != len(specs):
+        raise _Unknown(
+            f"spec_itemsizes has {len(sizes)} entries for {len(specs)} "
+            "parsed BlockSpecs")
+    total = sum(_block_elems(spec, entry.bindings) * size
+                for spec, size in zip(specs, sizes))
+    return total + scratch + sum(entry.intermediates.values())
 
 
 def _pallas_calls(tree: ast.AST) -> list[ast.Call]:
@@ -134,21 +140,31 @@ def _pallas_calls(tree: ast.AST) -> list[ast.Call]:
             if isinstance(n, ast.Call) and _call_name(n) == "pallas_call"]
 
 
+def _entries_for(stem: str, budgets: dict) -> dict[str, KernelBudget]:
+    """Manifest entries budgeting the module ``stem`` — usually one, keyed
+    by the stem itself, but a module may carry several (e.g. the quantized
+    and f32 operand widths of ``classify_fused``)."""
+    return {k: e for k, e in budgets.items() if (e.module or k) == stem}
+
+
 def kernel_footprints(path: pathlib.Path | str,
                       budgets: dict | None = None) -> dict[str, int]:
     """Recompute the static footprint of every budgeted ``pallas_call`` in
     ``path`` — the same arithmetic PL003 runs, exposed so tests can check the
     KiB numbers quoted in ``docs/ARCHITECTURE.md``.  Returns
-    ``{kernel_name: bytes}`` (one entry when the file holds one launch)."""
+    ``{budget_key: bytes}`` (one entry per manifest row matching the
+    module; multi-row modules yield one footprint per operand width)."""
     path = pathlib.Path(path)
     budgets = BUDGETS if budgets is None else budgets
-    entry = budgets.get(path.stem)
-    if entry is None:
+    entries = _entries_for(path.stem, budgets)
+    if not entries:
         return {}
     tree = ast.parse(path.read_text(encoding="utf-8"))
     calls = _pallas_calls(tree)
-    return {path.stem: max(_footprint(c, entry) for c in calls)} if calls \
-        else {}
+    if not calls:
+        return {}
+    return {key: max(_footprint(c, entry) for c in calls)
+            for key, entry in entries.items()}
 
 
 @register
@@ -166,45 +182,48 @@ class VmemBudget:
         if ctx.path.name == "budgets.py":
             # Reverse direction: every manifest entry names a live module.
             for key in sorted(BUDGETS):
-                if not (ctx.path.parent / f"{key}.py").exists():
+                mod = BUDGETS[key].module or key
+                if not (ctx.path.parent / f"{mod}.py").exists():
                     out.append(ctx.finding(
                         self, 1,
-                        f"budget entry '{key}' has no kernels/{key}.py — "
+                        f"budget entry '{key}' has no kernels/{mod}.py — "
                         "remove the stale manifest row"))
             return out
         calls = _pallas_calls(ctx.tree)
         if not calls:
             return []
-        entry = BUDGETS.get(ctx.path.stem)
-        if entry is None:
+        entries = _entries_for(ctx.path.stem, BUDGETS)
+        if not entries:
             out.append(ctx.finding(
                 self, calls[0],
                 f"pallas_call in unbudgeted kernel '{ctx.path.stem}' — add "
                 "a KernelBudget entry to kernels/budgets.py and a row to "
                 "the ARCHITECTURE 'Kernel memory plans' table"))
             return out
-        for call in calls:
-            try:
-                got = _footprint(call, entry)
-            except _Unknown as e:
-                out.append(ctx.finding(
-                    self, call,
-                    f"cannot statically evaluate block shape: '{e.name}' "
-                    f"has no reference binding in BUDGETS['{ctx.path.stem}']"
-                    ".bindings"))
-                continue
-            if got > entry.budget_bytes:
-                out.append(ctx.finding(
-                    self, call,
-                    f"static VMEM footprint {got} B exceeds the "
-                    f"{entry.budget_bytes} B per-core budget at the "
-                    "reference config — shrink the batch/block tiles"))
-            elif abs(got - entry.pinned_bytes) > \
-                    entry.tolerance * entry.pinned_bytes:
-                out.append(ctx.finding(
-                    self, call,
-                    f"static VMEM footprint {got} B drifted >"
-                    f"{entry.tolerance:.0%} from the pinned "
-                    f"{entry.pinned_bytes} B — re-budget kernels/budgets.py "
-                    "and the ARCHITECTURE 'Kernel memory plans' table"))
+        for key, entry in entries.items():
+            for call in calls:
+                try:
+                    got = _footprint(call, entry)
+                except _Unknown as e:
+                    out.append(ctx.finding(
+                        self, call,
+                        f"cannot statically evaluate block shape: '{e.name}'"
+                        f" has no reference binding in BUDGETS['{key}']"
+                        ".bindings"))
+                    continue
+                if got > entry.budget_bytes:
+                    out.append(ctx.finding(
+                        self, call,
+                        f"static VMEM footprint {got} B of '{key}' exceeds "
+                        f"the {entry.budget_bytes} B per-core budget at the "
+                        "reference config — shrink the batch/block tiles"))
+                elif abs(got - entry.pinned_bytes) > \
+                        entry.tolerance * entry.pinned_bytes:
+                    out.append(ctx.finding(
+                        self, call,
+                        f"static VMEM footprint {got} B of '{key}' drifted >"
+                        f"{entry.tolerance:.0%} from the pinned "
+                        f"{entry.pinned_bytes} B — re-budget "
+                        "kernels/budgets.py and the ARCHITECTURE 'Kernel "
+                        "memory plans' table"))
         return out

@@ -5,7 +5,7 @@ anything reaches the data plane (paper §5); IIsy and pForest document how an
 in-network model silently diverges from its host-side twin once the mapping
 layer drifts.  This repo's equivalent contract: **every public
 version-indexed kernel entry ships pre-gated** — a ``*_v`` def in one of the
-four classify kernel modules must have
+classify kernel modules (including the fused megakernel) must have
 
 1. a bit-identical oracle: ``kernels/ref.py`` defines the matching base name
    (``tree_walk_pallas_v`` -> ``ref.tree_walk_v``);
@@ -35,6 +35,7 @@ KERNEL_MODULES = (
     "kernels/forest_vote.py",
     "kernels/svm_lookup.py",
     "kernels/tcam_match.py",
+    "kernels/classify_fused.py",
 )
 REF_MODULE = "kernels/ref.py"
 OPS_MODULE = "kernels/ops.py"

@@ -98,6 +98,10 @@ class PlaneProfile:
             raise ValueError("status code is 32-bit (paper: 16-32 bit bitstring)")
         if self.max_versions < 1:
             raise ValueError("need at least one model-zoo version slot")
+        if self.feature_width > 15:
+            raise ValueError(
+                "feature values are int16 in the quantized fused-classify "
+                "operand layout: feature_width must be <= 15")
 
 
 @jax.tree_util.register_dataclass
@@ -121,6 +125,12 @@ class ExecImage:
       device).
     * ``forest`` — dt_predict validity/weights in Pallas block dtypes
       (``pred_codes``/``pred_labels`` bind as-is from the source tables).
+    * ``fused``  — the whole-classify megakernel's quantized operand layout
+      (int16 feature ids / range bounds, int8 leaf labels, bit-packed
+      set_bit / valid / pred_valid words, chunked f32 LUT) — what the
+      default single-launch classify binds; the three groups above serve
+      the ``unfused`` / ``layerwise`` fallback modes.  Its bias block is
+      zeros for the same distributed-compose reason as ``svm``'s.
 
     Residency trade-off: the image lives on the *program*, not the engine,
     so one ``PackedProgram`` serves any engine mode — at the cost of holding
@@ -134,6 +144,7 @@ class ExecImage:
     walk: tiling.TreeWalkOperands
     svm: tiling.SvmOperands
     forest: tiling.ForestOperands
+    fused: tiling.ClassifyFusedOperands
 
 
 @jax.tree_util.register_dataclass
@@ -180,6 +191,15 @@ class PackedProgram:
         return self.pred_enable.shape[0]
 
 
+def _fused_quantize(profile: PlaneProfile) -> bool:
+    """Whether the quantized fused-operand widths are lossless for this
+    profile: int8 labels need <= 127 classes, int16 feature values /
+    range bounds need feature_width <= 15 (enforced in the profile) and
+    levels <= 32768.  Profiles outside that envelope fall back to the f32
+    width of the same layout — still one launch, same bits."""
+    return profile.max_classes <= 127 and profile.levels <= 32768
+
+
 def build_exec_image(packed: PackedProgram, profile: PlaneProfile) -> ExecImage:
     """Full (all-slot) source-tables -> exec-image compile.
 
@@ -196,7 +216,32 @@ def build_exec_image(packed: PackedProgram, profile: PlaneProfile) -> ExecImage:
     svm = tiling.prep_svm_lookup(packed.svm_lut,
                                  jnp.zeros_like(packed.svm_bias))
     forest = tiling.prep_forest_vote(packed.pred_valid, packed.vote_weights)
-    return ExecImage(walk=walk, svm=svm, forest=forest)
+    fused = tiling.prep_classify_fused(
+        packed.dt_cv, packed.dt_cm, packed.dt_fid, packed.dt_flo,
+        packed.dt_fhi, packed.dt_bit, packed.dt_valid, packed.pred_codes,
+        packed.pred_labels, packed.pred_valid, packed.vote_weights,
+        packed.svm_lut, jnp.zeros_like(packed.svm_bias),
+        quantize=_fused_quantize(profile))
+    return ExecImage(walk=walk, svm=svm, forest=forest, fused=fused)
+
+
+def _prep_fused_slot(packed: PackedProgram, vid: int,
+                     profile: PlaneProfile) -> tiling.ClassifyFusedOperands:
+    """V=1 fused-operand slice for one slot's *current* source tables.
+
+    The fused group spans both pipelines, so a tree install must fold in the
+    slot's resident svm tables (and vice versa) — this reads whichever side
+    the caller just wrote from the updated program and the other side from
+    what was already installed.
+    """
+    s = slice(vid, vid + 1)
+    return tiling.prep_classify_fused(
+        packed.dt_cv[s], packed.dt_cm[s], packed.dt_fid[s], packed.dt_flo[s],
+        packed.dt_fhi[s], packed.dt_bit[s], packed.dt_valid[s],
+        packed.pred_codes[s], packed.pred_labels[s], packed.pred_valid[s],
+        packed.vote_weights[s], packed.svm_lut[s],
+        jnp.zeros_like(packed.svm_bias[s]),
+        quantize=_fused_quantize(profile))
 
 
 def _set_image_slot(image_group, slot_group, vid: int):
@@ -342,6 +387,8 @@ def install_program(
             packed.image,
             walk=_set_image_slot(packed.image.walk, walk_slot, vid),
             forest=_set_image_slot(packed.image.forest, forest_slot, vid),
+            fused=_set_image_slot(packed.image.fused,
+                                  _prep_fused_slot(new, vid, profile), vid),
         )
         return dataclasses.replace(new, image=image)
 
@@ -386,7 +433,11 @@ def install_program(
         svm_slot = tiling.prep_svm_lookup(
             lut[None], np.zeros((1, H), np.int32))  # zero bias by design
         image = dataclasses.replace(
-            packed.image, svm=_set_image_slot(packed.image.svm, svm_slot, vid))
+            packed.image,
+            svm=_set_image_slot(packed.image.svm, svm_slot, vid),
+            fused=_set_image_slot(packed.image.fused,
+                                  _prep_fused_slot(new, vid, profile), vid),
+        )
         return dataclasses.replace(new, image=image)
 
     raise ValueError(f"unknown program kind {program.kind}")
@@ -439,6 +490,10 @@ def evict_program(
                                         blank.image.forest, vid)
     if kind in ("svm", "all"):
         img["svm"] = _set_image_slot(packed.image.svm, blank.image.svm, vid)
+    # The fused group spans both pipelines: rebuild its slot from the slot's
+    # post-evict source tables (for kind="all" this equals the blank slice).
+    img["fused"] = _set_image_slot(
+        packed.image.fused, _prep_fused_slot(new, vid, profile), vid)
     return dataclasses.replace(
         new, image=dataclasses.replace(packed.image, **img))
 
@@ -454,31 +509,30 @@ def _classify_impl(packed: PackedProgram, pb: PacketBatch, *, n_classes: int,
     # against slot 0's tables (shape-stable) but their result is forced to -1.
     vid_ok = (pb.vid >= 0) & (pb.vid < V)
     vid = jnp.where(vid_ok, pb.vid, 0)
-    kmode = ops.base_mode(mode)
-    # Bind the install-time exec image: kernel launches read precomputed
+    # Bind the install-time exec image: the kernel launch reads precomputed
     # operands, zero per-call prep.  use_image=False forces the per-call prep
     # path (the pre-image behavior, kept for the install-vs-classify split
-    # benchmark); the ref oracle and layerwise fallback always rebuild from
-    # source tables, so unused operands drop out of the trace either way.
+    # benchmark); the ref oracle and the fallback modes rebuild from source
+    # tables, so unused operands drop out of the trace either way.
     img = packed.image if use_image else None
 
-    # ---- tree pipeline: fused single-launch walk over all dt_layer tables
-    # (mode="layerwise[-*]" selects the pre-fusion scan of per-layer kernels)
-    codes = ops.tree_walk_v(
+    # ---- both pipelines in ONE launch: walk -> vote codes stay VMEM-resident
+    # and feed the svm LUT contraction in the same grid program.
+    # mode="unfused[-*]" restores the pre-fusion three-launch classify;
+    # mode="layerwise[-*]" additionally scans per-layer walk kernels.
+    # Zero bias into the kernel: svm_bias is added below, outside, so
+    # distributed partial sums compose (bias once, on the owning device).
+    codes, tree_label, partial = ops.classify_fused_v(
         pb.codes, feats, vid, packed.dt_cv, packed.dt_cm, packed.dt_fid,
         packed.dt_flo, packed.dt_fhi, packed.dt_bit, packed.dt_valid,
-        packed.layer_shift, mode=mode, prep=img.walk if img else None)
-
-    tree_label, _per_tree = ops.forest_predict_vote_v(
-        codes, vid, packed.pred_codes, packed.pred_labels, packed.pred_valid,
-        packed.vote_weights, n_classes, mode=kmode,
-        prep=img.forest if img else None)
+        packed.layer_shift, packed.pred_codes, packed.pred_labels,
+        packed.pred_valid, packed.vote_weights, packed.svm_lut,
+        jnp.zeros_like(packed.svm_bias), n_classes, mode=mode,
+        prep=img.fused if img else None,
+        unfused_prep=(img.walk, img.forest, img.svm) if img else None)
     tree_result = jnp.where(packed.pred_enable[vid], tree_label, -1)
 
-    # ---- svm pipeline: LUT partials + native adds ----
-    partial = ops.svm_lookup_v(feats, vid, packed.svm_lut,
-                               jnp.zeros_like(packed.svm_bias), mode=kmode,
-                               prep=img.svm if img else None)
+    # ---- svm predict: native adds on the kernel's LUT partials ----
     acc = pb.svm_acc + partial
     sums = acc + packed.svm_bias[vid]
     signs = ((sums >= 0) & packed.svm_hvalid[vid]).astype(jnp.int32)
@@ -510,8 +564,11 @@ class SwitchEngine:
                  use_image: bool = True) -> None:
         """``mode`` picks the kernel path: ``None`` auto-selects (pallas on
         TPU, ref elsewhere); ``"ref"`` / ``"interpret"`` / ``"pallas"`` force
-        one; a ``"layerwise[-<kernel mode>]"`` prefix swaps the fused tree
-        walk for the per-layer kernel scan (L launches instead of 1).
+        one and run classify as a single fused walk→vote→svm launch; an
+        ``"unfused[-<kernel mode>]"`` prefix restores the pre-fusion
+        three-launch classify, and ``"layerwise[-<kernel mode>]"``
+        additionally swaps the fused tree walk for the per-layer kernel scan
+        (L + 2 launches instead of 1).
 
         ``use_image=False`` disables exec-image binding, so every classify
         reruns the operand prep the image precomputes — the pre-image

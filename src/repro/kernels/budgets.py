@@ -50,8 +50,17 @@ class KernelBudget:
     # sum(prod(block shape) * itemsize over in/out specs) + scratch bytes
     # + sum(intermediates).  PL003 must reproduce this within `tolerance`.
     pinned_bytes: int
-    # Operand element size: every operand block here is 4-byte (f32/i32/u32).
+    # Operand element size when every block shares one width (f32/i32/u32).
     itemsize: int = 4
+    # Kernel module stem this entry budgets (defaults to the manifest key).
+    # Lets one module carry several entries — e.g. ``classify_fused`` pins
+    # both the quantized and the f32 operand widths of the same launch.
+    module: str = ""
+    # Per-BlockSpec element sizes, in pallas_call source order (in_specs
+    # first, then out_specs).  Empty means uniform ``itemsize``.  PL003
+    # refuses to guess: a length mismatch with the parsed spec list fails
+    # the lint rather than silently misbudgeting.
+    spec_itemsizes: tuple = ()
     budget_bytes: int = VMEM_BYTES
     tolerance: float = 0.01
     note: str = ""
@@ -96,6 +105,46 @@ BUDGETS = {
         pinned_bytes=74_272,
         note="one (version, chunk) LUT slice [chunk_f*L, H_pad] = 64 KiB "
              "streamed per step; L is the quantization level count",
+    ),
+    "classify_fused": KernelBudget(
+        kernel="classify_fused",
+        module="classify_fused",
+        bindings={"block_b": 256, "T": 8, "L": 32, "E_pad": 128, "WP": 4,
+                  "F_pad": 128, "P": 256, "PW": 8, "n_chunks": 8,
+                  "chunk_f": 8, "levels": 256, "H_pad": 16},
+        # in_specs order: codes, vid, feats(i16), fid(i16), cv, cm, flo(i16),
+        # fhi(i16), bitpk, validpk, shift, pred_codes, plab(i8), pvalidpk,
+        # weights, lut, bias; out: codes, label, svm.
+        spec_itemsizes=(4, 4, 2, 2, 4, 4, 2, 2, 4, 4, 4, 4, 1, 4, 4, 4, 4,
+                        4, 4, 4),
+        intermediates={
+            # svm one-hot [block_b, chunk_f*levels] f32, live per chunk.
+            "svm_onehot": 256 * 8 * 256 * 4,
+            # vote select jnp.where(eq, plab, 0): [block_b, T, P] i32.
+            "vote_select": 256 * 8 * 256 * 4,
+            # walk selector [E_pad, F_pad] f32 + fv [block_b, E_pad] f32.
+            "walk_select": 128 * 128 * 4 + 256 * 128 * 4,
+        },
+        pinned_bytes=6_017_504,
+        note="quantized widths (i16 feats/fid/range bounds, i8 labels, "
+             "bit-packed masks): the whole classify in one launch at ~6.0 "
+             "MiB/step, independent of V — V=8 zoos fit the same plan",
+    ),
+    "classify_fused_f32": KernelBudget(
+        kernel="classify_fused",
+        module="classify_fused",
+        bindings={"block_b": 256, "T": 8, "L": 32, "E_pad": 128, "WP": 4,
+                  "F_pad": 128, "P": 256, "PW": 8, "n_chunks": 8,
+                  "chunk_f": 8, "levels": 256, "H_pad": 16},
+        intermediates={
+            "svm_onehot": 256 * 8 * 256 * 4,
+            "vote_select": 256 * 8 * 256 * 4,
+            "walk_select": 128 * 128 * 4 + 256 * 128 * 4,
+        },
+        pinned_bytes=6_285_792,
+        note="full-width counterfactual of the same launch (quantize=False: "
+             "i32 feats/fid/labels, f32 range bounds) — the +268 KiB the "
+             "quantized layouts buy back per grid step",
     ),
     "decode_attn": KernelBudget(
         kernel="decode_attn",

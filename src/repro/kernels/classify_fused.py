@@ -1,0 +1,286 @@
+"""Pallas TPU kernel: the whole-classify megakernel (walk -> vote -> svm).
+
+Pre-fusion, one classify issued three launches — ``tree_walk`` produced the
+per-packet status codes, which round-tripped through HBM into
+``forest_vote``'s compare-reduce and (independently) ``svm_lookup`` streamed
+the feature tile a second time.  This kernel runs all three stages inside
+**one** grid program, so classify drops from 3 ``pallas_call``s to 1:
+
+  1. *walk* — the multi-layer ternary walk of ``tree_walk.py``, per tree: a
+     ``fori_loop`` over L layer-indexed table slices with the same masked
+     code equality + range compare + exclusive-cumsum priority encode.  The
+     per-(layer, tree) one-hot feature selector is rebuilt in VMEM from the
+     int16 ``fid`` table (an iota compare + MXU matmul), which deletes the
+     precomputed f32 ``[V, T, L*E_pad, F_pad]`` ``fsel`` stream entirely —
+     the largest operand of the unfused path.
+  2. *vote* — the resulting ``[Bb, T]`` codes never leave VMEM; they feed the
+     exact compare-reduce + weighted one-hot voting of ``forest_vote.py``
+     (identical accumulation shapes and order, so no new float divergence).
+  3. *svm* — the feature tile, already VMEM-resident from the walk, drives
+     the chunked one-hot LUT contraction of ``svm_lookup.py`` as a static
+     chunk loop; per-chunk f32 partials stay integer-exact (< 2**24) and are
+     rounded once by the wrapper.
+
+Quantized operand layouts (``tiling.prep_classify_fused``): feature ids and
+range bounds stream as int16, leaf labels as int8, and the three {0,1}
+tables (``set_bit``/``valid``/``pred_valid``) as bit-packed uint32 words
+unpacked per layer in VMEM — all lossless, upcast in-kernel, so quantized
+and f32 layouts decode bit-identical classifications (pinned by the
+round-trip property tests).
+
+Model-zoo dispatch follows the established version-grid pattern: grid
+(batch blocks, versions), outputs initialized at v == 0 (codes pass through
+unchanged, label/svm zero) and merged per step for packets whose ``vid``
+matches.
+
+Per-step VMEM at the reference config (block_b=256, L=32, T=8, E_pad=128,
+F_pad=128, P=256, levels=256, H_pad=16): quantized operands ~1.6 MiB +
+in-kernel transients (svm one-hot 2 MiB, vote compare 2 MiB, walk selector
+~0.2 MiB) ~ 6.0 MiB — under the 16 MiB ceiling and independent of V, so
+V=8 zoos fit the same plan (see ``kernels/budgets.py``: ``classify_fused``
+vs the f32-width counterfactual ``classify_fused_f32``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.tiling import (
+    LANES,
+    SVM_CHUNK_F,
+    SVM_SUBLANES,
+    ClassifyFusedOperands,
+    pad_to,
+    prep_classify_fused,
+)
+
+__all__ = ["classify_fused_pallas_v"]
+
+
+def _unpack_bits(words, n_words: int, out_len: int):
+    """uint32 words [..., W] -> {0,1} uint32 [..., out_len] (little-endian
+    within each word, matching ``tiling.bitpack_last``)."""
+    lead = words.shape[:-1]
+    shifts = jax.lax.broadcasted_iota(
+        jnp.uint32, lead + (n_words, 32), words.ndim)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(lead + (n_words * 32,))[..., :out_len]
+
+
+def _kernel(codes_ref, vid_ref, feats_ref, fid_ref, cv_ref, cm_ref, flo_ref,
+            fhi_ref, bitpk_ref, validpk_ref, shift_ref, pc_ref, plab_ref,
+            pvpk_ref, w_ref, lut_ref, bias_ref,
+            out_codes_ref, out_label_ref, out_svm_ref, *,
+            n_layers: int, n_trees: int, e_pad: int, f_pad: int,
+            n_leaves: int, n_classes: int, n_chunks: int, chunk_f: int,
+            levels: int):
+    v = pl.program_id(1)
+    codes0 = codes_ref[...]                     # [Bb, T] uint32
+
+    @pl.when(v == 0)
+    def _init():
+        out_codes_ref[...] = codes0
+        out_label_ref[...] = jnp.zeros_like(out_label_ref)
+        out_svm_ref[...] = jnp.zeros_like(out_svm_ref)
+
+    feats = feats_ref[...]                      # [Bb, F_pad] i16|i32
+    feats_f = feats.astype(jnp.float32)
+    wp = e_pad // 32
+
+    # ---- stage 1: multi-layer walk, all T trees, codes stay in VMEM ----
+    def walk_tree(t):
+        def layer(l, codes):                    # codes [Bb, 1] uint32
+            # One-hot feature selector rebuilt from the int16 fid row: the
+            # MXU indirection of tree_walk without its precomputed f32 fsel.
+            fid_l = fid_ref[0, l, t].astype(jnp.int32)      # [E_pad]
+            onehot = (
+                fid_l[:, None]
+                == jax.lax.broadcasted_iota(jnp.int32, (e_pad, f_pad), 1)
+            ).astype(jnp.float32)
+            fv = jnp.dot(feats_f, onehot.T,
+                         preferred_element_type=jnp.float32)  # [Bb, E_pad]
+            cv = cv_ref[0, l, t][None, :]
+            cm = cm_ref[0, l, t][None, :]
+            flo = flo_ref[0, l, t][None, :].astype(jnp.float32)
+            fhi = fhi_ref[0, l, t][None, :].astype(jnp.float32)
+            bit = _unpack_bits(bitpk_ref[0, l, t], wp, e_pad)[None, :]
+            valid = _unpack_bits(validpk_ref[0, l, t], wp, e_pad)[None, :]
+            code_ok = (codes & cm) == cv        # [Bb, E_pad]
+            ok = code_ok & (fv >= flo) & (fv <= fhi) & (valid != 0)
+            first = ok & (jnp.cumsum(ok.astype(jnp.int32), axis=1) == 1)
+            b = jnp.sum(jnp.where(first, bit, 0), axis=1, keepdims=True)
+            hit = ok.any(axis=1, keepdims=True)
+            shift = shift_ref[0, l].astype(jnp.uint32)
+            new = codes | (b.astype(jnp.uint32) << shift)
+            return jnp.where(hit, new, codes)
+
+        return jax.lax.fori_loop(0, n_layers, layer, codes0[:, t:t + 1])
+
+    codes = jnp.concatenate([walk_tree(t) for t in range(n_trees)], axis=1)
+
+    # ---- stage 2: forest vote (forest_vote.py compare-reduce, verbatim) ----
+    pc = pc_ref[0]                              # [T, P] uint32 (this version)
+    plab = plab_ref[0].astype(jnp.int32)        # [T, P]
+    pvalid = _unpack_bits(pvpk_ref[0], pvpk_ref.shape[-1], n_leaves
+                          ).astype(jnp.int32)   # [T, P]
+    eq = (codes[:, :, None] == pc[None]) & (pvalid[None] != 0)   # [Bb, T, P]
+    per_tree = jnp.sum(jnp.where(eq, plab[None], 0), axis=2)     # [Bb, T]
+    w = w_ref[0]                                # [1, T] f32
+    classes = jax.lax.iota(jnp.int32, n_classes)
+    onehot = (per_tree[:, :, None] == classes[None, None, :]).astype(jnp.float32)
+    scores = jnp.sum(onehot * w[0][None, :, None], axis=1)       # [Bb, C]
+    best = jnp.max(scores, axis=1, keepdims=True)
+    is_best = scores >= best
+    first_best = is_best & (jnp.cumsum(is_best.astype(jnp.int32), axis=1) == 1)
+    label = jnp.sum(
+        jnp.where(first_best, classes[None, :], 0), axis=1, keepdims=True
+    ).astype(jnp.int32)
+
+    # ---- stage 3: svm LUT contraction (svm_lookup.py chunk loop, bias
+    # first then chunks ascending — the int-exact accumulation order) ----
+    feats_i = feats.astype(jnp.int32)
+    acc = jnp.zeros(out_svm_ref.shape, jnp.float32) \
+        + bias_ref[0].astype(jnp.float32)
+    for c in range(n_chunks):
+        fc = feats_i[:, c * chunk_f:(c + 1) * chunk_f]   # [Bb, chunk_f]
+        onehot_s = (
+            fc[:, :, None] == jax.lax.iota(jnp.int32, levels)[None, None, :]
+        ).astype(jnp.float32)                   # [Bb, chunk_f, levels]
+        Bb, Fc, L = onehot_s.shape
+        acc = acc + jnp.dot(
+            onehot_s.reshape(Bb, Fc * L), lut_ref[0, c],
+            preferred_element_type=jnp.float32)          # [Bb, H_pad]
+
+    # ---- version merge ----
+    mine = vid_ref[...] == v                    # [Bb, 1]
+    out_codes_ref[...] = jnp.where(mine, codes, out_codes_ref[...])
+    out_label_ref[...] = jnp.where(mine, label, out_label_ref[...])
+    out_svm_ref[...] = jnp.where(mine, acc, out_svm_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("n_classes", "quantize",
+                                             "block_b", "interpret"))
+def classify_fused_pallas_v(
+    codes: jax.Array,        # uint32 [B, T]
+    features: jax.Array,     # int32 [B, F]
+    vid: jax.Array,          # int32 [B] model version per packet, in [0, V)
+    code_value: jax.Array,   # uint32 [V, L, T, E]
+    code_mask: jax.Array,
+    fid: jax.Array,          # int32 [V, L, T, E]
+    f_lo: jax.Array,
+    f_hi: jax.Array,
+    set_bit: jax.Array,      # uint32 [V, L, T, E], {0, 1}
+    valid: jax.Array,        # bool [V, L, T, E]
+    layer_shift: jax.Array,  # int32 [L] status-code bit per layer
+    pred_codes: jax.Array,   # uint32 [V, T, P]
+    pred_labels: jax.Array,  # int32 [V, T, P]
+    pred_valid: jax.Array,   # bool [V, T, P]
+    weights: jax.Array,      # float32 [V, T]
+    lut: jax.Array,          # int32 [V, H, F, levels]
+    bias: jax.Array,         # int32 [V, H]
+    n_classes: int,
+    *,
+    prep: ClassifyFusedOperands | None = None,
+    quantize: bool = True,
+    block_b: int = 256,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One launch for the whole classify: returns (codes [B, T] uint32,
+    vote label [B] int32, svm sums [B, H] int32)."""
+    B, T = codes.shape
+    V, L, _, _ = code_value.shape
+    _, H, F_svm, levels = lut.shape
+    P = pred_codes.shape[2]
+    if prep is None:
+        # Per-call fallback (standalone/test path): the same prep the plane
+        # runs once per install and binds via ``prep=``.
+        prep = prep_classify_fused(
+            code_value, code_mask, fid, f_lo, f_hi, set_bit, valid,
+            pred_codes, pred_labels, pred_valid, weights, lut, bias,
+            quantize=quantize)
+    E_pad = prep.cv.shape[3]
+    WP = prep.bitpk.shape[3]
+    PW = prep.pvalidpk.shape[2]
+    H_pad = prep.bias.shape[1]
+    chunk_f = SVM_CHUNK_F
+    n_chunks = -(-F_svm // chunk_f)
+    # Source-derived shape validation: a prep built for a different profile
+    # cannot slip through (same stance as tree_walk / svm_lookup).
+    if prep.cv.shape != (V, L, T, E_pad) or \
+            prep.lut.shape != (V, n_chunks, chunk_f * levels, H_pad) or \
+            H_pad != -(-H // SVM_SUBLANES) * SVM_SUBLANES or \
+            prep.pred_codes.shape != (V, T, P):
+        raise ValueError(
+            f"prepped operand shapes {prep.cv.shape}/{prep.lut.shape}/"
+            f"{prep.pred_codes.shape} do not match this launch — the exec "
+            "image was built for a different profile")
+
+    feat_dtype = jnp.int16 if prep.fid.dtype == jnp.int16 else jnp.int32
+    # -1 fill: svm chunk columns beyond F match no quantization level (zero
+    # contribution); walk entries never select a padded column (fid < F).
+    feats = pad_to(features.astype(feat_dtype), 1, LANES, fill=-1)
+    F_pad = feats.shape[1]
+    if n_chunks * chunk_f > F_pad:
+        raise ValueError(
+            f"svm chunk span {n_chunks * chunk_f} exceeds the lane-padded "
+            f"feature width {F_pad}")
+
+    # Largest in-kernel transients scale with block_b: the svm one-hot
+    # [block_b, chunk_f*levels] and the vote compare [block_b, T, P]; halve
+    # the batch tile before either would crowd VMEM.
+    while block_b > 8 and \
+            block_b * max(chunk_f * levels, T * P, 4 * E_pad) * 4 \
+            > 4 * 1024 * 1024:
+        block_b //= 2
+
+    codes_p = pad_to(codes, 0, block_b)
+    feats_p = pad_to(feats, 0, block_b)
+    vid_p = pad_to(vid.astype(jnp.int32).reshape(-1, 1), 0, block_b, fill=-1)
+    B_pad = codes_p.shape[0]
+
+    out_codes, out_label, out_svm = pl.pallas_call(
+        functools.partial(
+            _kernel, n_layers=L, n_trees=T, e_pad=E_pad, f_pad=F_pad,
+            n_leaves=P, n_classes=n_classes, n_chunks=n_chunks,
+            chunk_f=chunk_f, levels=levels),
+        grid=(B_pad // block_b, V),
+        in_specs=[
+            pl.BlockSpec((block_b, T), lambda i, v: (i, 0)),       # codes
+            pl.BlockSpec((block_b, 1), lambda i, v: (i, 0)),       # vid
+            pl.BlockSpec((block_b, F_pad), lambda i, v: (i, 0)),   # feats
+            pl.BlockSpec((1, L, T, E_pad), lambda i, v: (v, 0, 0, 0)),  # fid
+            pl.BlockSpec((1, L, T, E_pad), lambda i, v: (v, 0, 0, 0)),  # cv
+            pl.BlockSpec((1, L, T, E_pad), lambda i, v: (v, 0, 0, 0)),  # cm
+            pl.BlockSpec((1, L, T, E_pad), lambda i, v: (v, 0, 0, 0)),  # flo
+            pl.BlockSpec((1, L, T, E_pad), lambda i, v: (v, 0, 0, 0)),  # fhi
+            pl.BlockSpec((1, L, T, WP), lambda i, v: (v, 0, 0, 0)),  # bitpk
+            pl.BlockSpec((1, L, T, WP), lambda i, v: (v, 0, 0, 0)),  # validpk
+            pl.BlockSpec((1, L), lambda i, v: (0, 0)),             # shift
+            pl.BlockSpec((1, T, P), lambda i, v: (v, 0, 0)),       # pred_codes
+            pl.BlockSpec((1, T, P), lambda i, v: (v, 0, 0)),       # plab
+            pl.BlockSpec((1, T, PW), lambda i, v: (v, 0, 0)),      # pvalidpk
+            pl.BlockSpec((1, 1, T), lambda i, v: (v, 0, 0)),       # weights
+            pl.BlockSpec((1, n_chunks, chunk_f * levels, H_pad),
+                         lambda i, v: (v, 0, 0, 0)),               # lut
+            pl.BlockSpec((1, H_pad), lambda i, v: (v, 0)),         # bias
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, T), lambda i, v: (i, 0)),
+            pl.BlockSpec((block_b, 1), lambda i, v: (i, 0)),
+            pl.BlockSpec((block_b, H_pad), lambda i, v: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B_pad, T), codes.dtype),
+            jax.ShapeDtypeStruct((B_pad, 1), jnp.int32),
+            jax.ShapeDtypeStruct((B_pad, H_pad), jnp.float32),
+        ],
+        interpret=interpret,
+    )(codes_p, vid_p, feats_p, prep.fid, prep.cv, prep.cm, prep.flo,
+      prep.fhi, prep.bitpk, prep.validpk,
+      layer_shift.reshape(1, L).astype(jnp.int32), prep.pred_codes,
+      prep.plab, prep.pvalidpk, prep.weights, prep.lut, prep.bias)
+    return (out_codes[:B], out_label[:B, 0],
+            jnp.round(out_svm[:B, :H]).astype(jnp.int32))

@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.classify_fused import classify_fused_pallas_v
 from repro.kernels.decode_attn import decode_attn_pallas
 from repro.kernels.forest_vote import (
     forest_predict_vote_pallas,
@@ -23,6 +24,7 @@ from repro.kernels.tree_walk import tree_walk_pallas_v
 __all__ = [
     "tcam_match", "svm_lookup", "forest_predict_vote", "decode_attn",
     "tcam_match_v", "svm_lookup_v", "forest_predict_vote_v", "tree_walk_v",
+    "classify_fused_v",
     "base_mode", "count_pallas_launches", "count_operand_prep_ops",
 ]
 
@@ -34,15 +36,20 @@ def _resolve(mode: str | None) -> str:
 
 
 def base_mode(mode: str | None) -> str | None:
-    """Strip a ``layerwise`` walk-prefix down to the underlying kernel mode.
+    """Strip a ``layerwise``/``unfused`` prefix down to the underlying kernel
+    mode.
 
-    ``"layerwise"`` selects the scan-of-``tcam_match_v`` tree-walk fallback;
-    an optional suffix pins the per-layer kernel mode (``"layerwise-ref"``,
-    ``"layerwise-interpret"``, ``"layerwise-pallas"``).  Non-walk kernels only
-    understand the base mode, so the engine routes them through this.
+    ``"layerwise"`` selects the scan-of-``tcam_match_v`` tree-walk fallback
+    and ``"unfused"`` the pre-megakernel three-launch classify; an optional
+    suffix pins the per-stage kernel mode (``"layerwise-ref"``,
+    ``"unfused-interpret"``, ...).  Kernels beneath the prefixed path only
+    understand the base mode, so dispatchers route them through this.
     """
-    if mode is not None and mode.startswith("layerwise"):
-        return mode[len("layerwise"):].lstrip("-") or None
+    if mode is None:
+        return mode
+    for prefix in ("layerwise", "unfused"):
+        if mode.startswith(prefix):
+            return mode[len(prefix):].lstrip("-") or None
     return mode
 
 
@@ -103,12 +110,17 @@ def count_operand_prep_ops(fn, *args, **kwargs) -> int:
     install-time ``ExecImage`` bound, classify must trace to **zero** such
     equations: every table operand flows from the jaxpr inputs straight into
     the kernel launches.  The exec-image acceptance test pins this.
+
+    A prep op inside a ``lax.scan`` body reruns every iteration, so it
+    multiplies through the accumulated scan length — the same convention as
+    ``count_pallas_launches`` (both counters share ``_sum_jaxpr_eqns``, and
+    the fused-path unit test pins the multiplied counts).
     """
     def visit(eqn, mult):
         if eqn.primitive.name == "pallas_call":
             return 0, False   # in-kernel math is not per-call HBM-side prep
-        return int(any(getattr(v.aval, "ndim", 0) >= 3
-                       for v in eqn.outvars)), True
+        return mult * int(any(getattr(v.aval, "ndim", 0) >= 3
+                              for v in eqn.outvars)), True
 
     return _sum_jaxpr_eqns(fn, args, kwargs, visit)
 
@@ -227,6 +239,50 @@ def forest_predict_vote_v(codes, vid, pred_codes, pred_labels, pred_valid,
                                         pred_valid, weights, n_classes,
                                         prep=prep,
                                         interpret=(m == "interpret"))
+
+
+def classify_fused_v(codes, features, vid, code_value, code_mask, fid, f_lo,
+                     f_hi, set_bit, valid, layer_shift, pred_codes,
+                     pred_labels, pred_valid, weights, lut, bias, n_classes,
+                     *, mode: str | None = None, prep=None,
+                     unfused_prep=None):
+    """Whole-classify megakernel: walk -> vote -> svm in **one**
+    ``pallas_call`` (``kernels/classify_fused.py``), returning (final codes
+    [B, T], vote label [B], svm sums [B, H]).
+
+    ``prep`` binds the install-time quantized operand layout
+    (``tiling.prep_classify_fused``, the plane's ``ExecImage.fused``); the
+    ref oracle and the fallback paths ignore it.
+
+    ``mode="unfused[-<kernel mode>]"`` selects the pre-fusion three-launch
+    classify — the individual stage dispatchers above, binding
+    ``unfused_prep`` = (walk, forest, svm) operand groups when given — and
+    ``mode="layerwise[-<kernel mode>]"`` additionally swaps the fused walk
+    for the per-layer kernel scan (L + 2 launches).
+    """
+    m = _resolve(mode)
+    if m == "ref":
+        return ref.classify_fused_v(
+            codes, features, vid, code_value, code_mask, fid, f_lo, f_hi,
+            set_bit, valid, layer_shift, pred_codes, pred_labels, pred_valid,
+            weights, lut, bias, n_classes)
+    if m.startswith(("layerwise", "unfused")):
+        sub = base_mode(m)
+        walk_prep, forest_prep, svm_prep = unfused_prep or (None, None, None)
+        codes_out = tree_walk_v(
+            codes, features, vid, code_value, code_mask, fid, f_lo, f_hi,
+            set_bit, valid, layer_shift,
+            mode=m if m.startswith("layerwise") else sub, prep=walk_prep)
+        label, _per_tree = forest_predict_vote_v(
+            codes_out, vid, pred_codes, pred_labels, pred_valid, weights,
+            n_classes, mode=sub, prep=forest_prep)
+        sums = svm_lookup_v(features, vid, lut, bias, mode=sub, prep=svm_prep)
+        return codes_out, label, sums
+    return classify_fused_pallas_v(
+        codes, features, vid, code_value, code_mask, fid, f_lo, f_hi,
+        set_bit, valid, layer_shift, pred_codes, pred_labels, pred_valid,
+        weights, lut, bias, n_classes, prep=prep,
+        interpret=(m == "interpret"))
 
 
 def decode_attn(q, k, v, kv_len, *, mode: str | None = None):

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 __all__ = [
     "tcam_match", "svm_lookup", "forest_predict_vote", "decode_attn",
     "tcam_match_v", "svm_lookup_v", "forest_predict_vote_v", "tree_walk_v",
+    "classify_fused_v",
 ]
 
 
@@ -204,6 +205,44 @@ def forest_predict_vote_v(
     onehot = per_tree[:, :, None] == jnp.arange(n_classes)[None, None, :]
     scores = (onehot * w[:, :, None]).sum(axis=1)          # [B, C]
     return jnp.argmax(scores, axis=-1).astype(jnp.int32), per_tree.astype(jnp.int32)
+
+
+def classify_fused_v(
+    codes: jax.Array,        # uint32 [B, T]
+    features: jax.Array,     # int32 [B, F]
+    vid: jax.Array,          # int32 [B] model version per packet, in [0, V)
+    code_value: jax.Array,   # uint32 [V, L, T, E]
+    code_mask: jax.Array,
+    fid: jax.Array,          # int32 [V, L, T, E]
+    f_lo: jax.Array,
+    f_hi: jax.Array,
+    set_bit: jax.Array,      # uint32 [V, L, T, E]
+    valid: jax.Array,        # bool [V, L, T, E]
+    layer_shift: jax.Array,  # int32 [L]
+    pred_codes: jax.Array,   # uint32 [V, T, P]
+    pred_labels: jax.Array,  # int32 [V, T, P]
+    pred_valid: jax.Array,   # bool [V, T, P]
+    weights: jax.Array,      # float32 [V, T]
+    lut: jax.Array,          # int32 [V, H, F, levels]
+    bias: jax.Array,         # int32 [V, H]
+    n_classes: int,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Whole-classify oracle: tree walk -> forest vote, plus the svm LUT
+    sums, composed from the three stage oracles above.
+
+    Semantic ground truth for the single-launch megakernel
+    (``kernels/classify_fused.py``) — by construction identical to issuing
+    the three stages as separate launches, which is the ``unfused`` fallback
+    path in ``ops.classify_fused_v``.  Returns (final codes [B, T], vote
+    label [B], svm sums [B, H]).
+    """
+    codes_out = tree_walk_v(codes, features, vid, code_value, code_mask, fid,
+                            f_lo, f_hi, set_bit, valid, layer_shift)
+    label, _per_tree = forest_predict_vote_v(
+        codes_out, vid, pred_codes, pred_labels, pred_valid, weights,
+        n_classes)
+    sums = svm_lookup_v(features, vid, lut, bias)
+    return codes_out, label, sums
 
 
 def decode_attn(

@@ -26,9 +26,12 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = [
-    "LANES", "pad_to", "lane_pad", "pad_entry_tables", "feature_select_matrix",
+    "LANES", "pad_to", "lane_pad", "bitpack_last", "pad_entry_tables",
+    "feature_select_matrix",
     "TreeWalkOperands", "TcamOperands", "SvmOperands", "ForestOperands",
+    "ClassifyFusedOperands",
     "prep_tree_walk", "prep_tcam_match", "prep_svm_lookup", "prep_forest_vote",
+    "prep_classify_fused",
 ]
 
 LANES = 128
@@ -49,6 +52,22 @@ def pad_to(x: jax.Array, axis: int, mult: int, fill=0) -> jax.Array:
 def lane_pad(n: int) -> int:
     """Smallest multiple of the 128-lane dimension >= n."""
     return ((n + LANES - 1) // LANES) * LANES
+
+
+def bitpack_last(x: jax.Array) -> jax.Array:
+    """Pack a 0/1 array into uint32 words along its last axis (length must be
+    a multiple of 32): word ``w`` bit ``j`` holds ``x[..., 32*w + j]``.
+
+    Inputs are collapsed through ``!= 0`` first, so this is lossless exactly
+    for {0, 1}-valued tables — which ``set_bit`` / ``valid`` / ``pred_valid``
+    are by the translator contract (each dt_layer writes one status bit).
+    """
+    *lead, n = x.shape
+    if n % 32:
+        raise ValueError(f"bitpack_last needs a 32-multiple last axis, got {n}")
+    bits = (x != 0).astype(jnp.uint32).reshape(*lead, n // 32, 32)
+    return (bits << jnp.arange(32, dtype=jnp.uint32)).sum(
+        axis=-1, dtype=jnp.uint32)
 
 
 def pad_entry_tables(axis: int, code_value, code_mask, f_lo, f_hi, set_bit,
@@ -170,3 +189,78 @@ def prep_forest_vote(pred_valid, weights) -> ForestOperands:
     V, T = weights.shape
     return ForestOperands(pred_valid.astype(jnp.int32),
                           weights.reshape(V, 1, T).astype(jnp.float32))
+
+
+class ClassifyFusedOperands(NamedTuple):
+    """Kernel-ready operands for the whole-classify megakernel
+    (``classify_fused_pallas_v``): walk -> vote -> svm in one launch.
+
+    Quantized widths (``prep_classify_fused(..., quantize=True)``) shrink
+    what the launch streams per grid step without changing a single output
+    bit: feature ids and range bounds are int16 (lossless for
+    ``feature_width <= 15``), leaf labels int8 (``n_classes <= 127``), and
+    the three {0,1} tables (``set_bit``/``valid``/``pred_valid``) are
+    bit-packed into uint32 words — 32 entries per lane.  The f32 width
+    (``quantize=False``) keeps i32/f32 element types in the identical layout;
+    both compile against the same kernel, which upcasts in VMEM.  SVM LUT
+    *values* stay f32 in both widths: per-chunk partials must remain
+    integer-exact (< 2**24, see ``svm_lookup.py``).
+
+    Unlike ``TreeWalkOperands`` there is no precomputed one-hot ``fsel``
+    matmul operand: the fused kernel rebuilds the per-(layer, tree) one-hot
+    selector from ``fid`` in VMEM, so the dominant f32 ``[V, T, L*E_pad,
+    F_pad]`` stream of the unfused path disappears entirely.
+    """
+
+    # tree walk, [V, L, T, E_pad] (WP = E_pad // 32)
+    fid: jax.Array       # i16 (quantized) | i32
+    cv: jax.Array        # u32
+    cm: jax.Array        # u32  (pad: mask all vs value 0)
+    flo: jax.Array       # i16 (quantized) | f32  (pad: 1 — empty range)
+    fhi: jax.Array       # i16 (quantized) | f32  (pad: 0)
+    bitpk: jax.Array     # u32 [V, L, T, WP] bit-packed set_bit
+    validpk: jax.Array   # u32 [V, L, T, WP] bit-packed valid
+    # forest vote, [V, T, P] (PW = ceil32(P) // 32)
+    pred_codes: jax.Array  # u32
+    plab: jax.Array        # i8 (quantized) | i32
+    pvalidpk: jax.Array    # u32 [V, T, PW] bit-packed pred_valid
+    weights: jax.Array     # f32 [V, 1, T]
+    # svm
+    lut: jax.Array       # f32 [V, n_chunks, chunk_f*levels, H_pad]
+    bias: jax.Array      # i32 [V, H_pad]
+
+
+def prep_classify_fused(code_value, code_mask, fid, f_lo, f_hi, set_bit,
+                        valid, pred_codes, pred_labels, pred_valid, weights,
+                        lut, bias, *, chunk_f: int = SVM_CHUNK_F,
+                        quantize: bool = True) -> ClassifyFusedOperands:
+    """Source tables of all three classify stages -> megakernel operands.
+
+    Walk tables are ``[V, L, T, E]`` dt_layer state, predict tables
+    ``[V, T, P]`` + ``[V, T]`` weights, svm ``[V, H, F, levels]`` + bias.
+    ``quantize`` selects the narrow widths (see ``ClassifyFusedOperands``);
+    it is a pure layout choice — both widths decode bit-identically.
+    """
+    V, L, T, E = fid.shape
+    cv, cm, flo, fhi, bit, vld = pad_entry_tables(
+        3, code_value, code_mask, f_lo, f_hi, set_bit, valid)
+    # fid pad fill 0 is harmless: padded entries are masked out via the
+    # bit-packed valid words before any match can use their selected feature.
+    fid_p = pad_to(fid, 3, LANES)
+    bitpk = bitpack_last(bit)
+    validpk = bitpack_last(vld)
+    if quantize:
+        fid_p = fid_p.astype(jnp.int16)
+        flo = flo.astype(jnp.int16)
+        fhi = fhi.astype(jnp.int16)
+        plab = pred_labels.astype(jnp.int8)
+    else:
+        fid_p = fid_p.astype(jnp.int32)
+        plab = pred_labels.astype(jnp.int32)
+    pvalidpk = bitpack_last(pad_to(pred_valid.astype(jnp.uint32), 2, 32))
+    w_r = weights.reshape(V, 1, T).astype(jnp.float32)
+    lut_r, bias_p = prep_svm_lookup(lut, bias, chunk_f=chunk_f)
+    return ClassifyFusedOperands(
+        fid=fid_p, cv=cv, cm=cm, flo=flo, fhi=fhi, bitpk=bitpk,
+        validpk=validpk, pred_codes=pred_codes.astype(jnp.uint32), plab=plab,
+        pvalidpk=pvalidpk, weights=w_r, lut=lut_r, bias=bias_p)

@@ -11,7 +11,10 @@ out **bit-identical** through
   policy, demuxed back to futures),
 
 against the ``kernels.ref`` oracle (``SwitchEngine(mode="ref")`` on the
-unpadded batch).  ≥ 200 cases total.
+unpadded batch).  ≥ 200 cases total.  The same draws also gate the fused
+classify megakernel: every case re-runs through a
+``SwitchEngine(mode="interpret")`` (one quantized ``classify_fused`` launch)
+and must stay bit-identical to the oracle.
 
 On failure the harness *shrinks*: classification is per-packet, so the first
 mismatching packet is re-run alone (B = 1) against the oracle and a
@@ -304,6 +307,32 @@ def test_conformance_cross_executor_and_async(harness):
                             oracle.classify(packed, pb1))
                 _shrink_and_fail(V, case, seed, "async", field, pb,
                                  got_async, want, classify_one)
+
+
+def test_conformance_fused_megakernel(harness):
+    """Fused-megakernel lane (ISSUE-9 acceptance pin): the same drawn cases,
+    classified through the one-launch ``classify_fused`` kernel body
+    (``mode="interpret"``) with its quantized install-time operand layouts,
+    bit-identical to the ``kernels.ref`` oracle."""
+    V, prof, _executors, _runtimes, _zoo, oracle = harness
+    only = _repro_filter()
+    if only.get("V") not in (None, V):
+        pytest.skip(f"CONFORMANCE_ONLY pins V={only['V']}")
+    eng = SwitchEngine(prof, mode="interpret")
+    cases = ([only["case"]] if only.get("case") is not None
+             else range(N_CASES[V]))
+    for case in cases:
+        seed, _progs, packed, pb = _draw_case(V, case, prof)
+        want = oracle.classify(packed, pb)
+        out = eng.classify(packed, pb)
+        for field in FIELDS:
+            if not (np.asarray(getattr(out, field))
+                    == np.asarray(getattr(want, field))).all():
+                def classify_one(pb1):
+                    return (eng.classify(packed, pb1),
+                            oracle.classify(packed, pb1))
+                _shrink_and_fail(V, case, seed, "fused-interpret", field,
+                                 pb, out, want, classify_one)
 
 
 def test_conformance_draw_count():

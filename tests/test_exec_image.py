@@ -67,10 +67,10 @@ def test_classify_binds_precomputed_operands_zero_prep_ops(satdap, plane_engine)
         packed, pb)
     assert count() == 0
     assert count(use_image=False) > 0
-    # and the fused-walk launch pin still holds with the image bound
+    # and the megakernel launch pin still holds with the image bound
     assert ops.count_pallas_launches(
         lambda pk, b: _classify_impl(pk, b, n_classes=n_cls, mode="interpret"),
-        packed, pb) == 3  # tree walk + forest vote + svm lookup
+        packed, pb) == 1  # the whole classify is one fused launch
 
 
 # ----------------------------------------------- incremental == full rebuild

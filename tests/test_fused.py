@@ -1,0 +1,236 @@
+"""Fused classify megakernel: parity sweeps, quantization round-trips,
+launch/prep-op count pins.
+
+The quantized operand layouts (int16 feature ids / range bounds, int8 leaf
+labels, bit-packed masks) are pure *layout* choices — every narrow operand
+is upcast in-kernel before arithmetic — so quantized and f32 layouts must
+decode **bit-identical** classifications.  These tests pin that, the
+3-launches -> 1 fusion, and the jaxpr counters' scan-multiplier convention
+the pins rely on.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref, tiling
+from repro.kernels.classify_fused import classify_fused_pallas_v
+
+
+def _rand_fused(rng, B, T, E, F, V, L, P, C, H, levels, empty_slots=()):
+    """Random source tables for one whole-classify call — the same
+    distributions as the per-stage sweeps in ``test_kernels.py`` (a random
+    ``PackedProgram`` without the plane around it)."""
+    codes = jnp.asarray(rng.integers(0, 2**12, (B, T)), jnp.uint32)
+    feats = jnp.asarray(rng.integers(0, levels, (B, F)), jnp.int32)
+    vid = jnp.asarray(rng.integers(0, V, (B,)), jnp.int32)
+    shape = (V, L, T, E)
+    cv = jnp.asarray(rng.integers(0, 2**6, shape), jnp.uint32)
+    cm = jnp.asarray(rng.integers(0, 2**6, shape), jnp.uint32)
+    fid = jnp.asarray(rng.integers(0, F, shape), jnp.int32)
+    flo = jnp.asarray(rng.integers(0, levels - 1, shape), jnp.int32)
+    fhi = flo + jnp.asarray(rng.integers(0, levels // 2, shape), jnp.int32)
+    bit = jnp.asarray(rng.integers(0, 2, shape), jnp.uint32)
+    valid = np.asarray(rng.random(shape) < 0.9)
+    shift = jnp.asarray(rng.permutation(L), jnp.int32)
+    pc = np.sort(rng.choice(2**16, size=(V * T * P,), replace=False)
+                 .astype(np.uint32).reshape(V, T, P), axis=2)
+    plab = rng.integers(0, C, (V, T, P)).astype(np.int32)
+    pv = np.asarray(rng.random((V, T, P)) < 0.9)
+    w = rng.random((V, T)).astype(np.float32)
+    lut = rng.integers(-60_000, 60_000, (V, H, F, levels)).astype(np.int32)
+    bias = jnp.zeros((V, H), jnp.int32)
+    for v in empty_slots:
+        valid[v] = False
+        pv[v] = False
+        lut[v] = 0           # an evicted slot's LUT is blanked too
+    return (codes, feats, vid, cv, cm, fid, flo, fhi, bit,
+            jnp.asarray(valid), shift, jnp.asarray(pc), jnp.asarray(plab),
+            jnp.asarray(pv), jnp.asarray(w), jnp.asarray(lut), bias)
+
+
+def _assert_triple_equal(a, b):
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# V sweep covers the acceptance range {1, 4, 8}; B=300 exercises the
+# off-block_b tail, E=130 pads past one 128-lane tile.
+@pytest.mark.parametrize("B,T,E,F,V,L,P,C,H,levels,empty", [
+    (7, 1, 3, 4, 1, 1, 4, 2, 1, 16, ()),
+    (64, 4, 17, 13, 4, 5, 32, 5, 3, 64, ()),
+    (300, 2, 130, 20, 2, 3, 16, 3, 2, 32, ()),
+    (257, 3, 33, 21, 8, 8, 64, 6, 4, 64, (1, 5)),
+    (33, 5, 64, 40, 1, 32, 128, 8, 8, 128, ()),
+])
+def test_classify_fused_sweep(rng, B, T, E, F, V, L, P, C, H, levels, empty):
+    """Megakernel (interpret) vs jnp oracle vs the pre-fusion three-launch
+    fallback — all bit-identical, including evicted zoo slots."""
+    args = _rand_fused(rng, B, T, E, F, V, L, P, C, H, levels,
+                       empty_slots=empty)
+    r = ops.classify_fused_v(*args, C, mode="ref")
+    p = ops.classify_fused_v(*args, C, mode="interpret")
+    u = ops.classify_fused_v(*args, C, mode="unfused-interpret")
+    _assert_triple_equal(r, p)
+    _assert_triple_equal(r, u)
+    # packets addressing an evicted slot keep their incoming codes untouched
+    codes, vid = args[0], args[2]
+    for v in empty:
+        sel = np.asarray(vid) == v
+        np.testing.assert_array_equal(np.asarray(p[0])[sel],
+                                      np.asarray(codes)[sel])
+
+
+@pytest.mark.parametrize("V", [1, 4, 8])
+def test_quantized_round_trip(rng, V):
+    """Property: quantized prep layouts decode bit-identical classifications
+    vs the f32 layouts, and both match the oracle."""
+    B, T, E, F, L, P, C, H, levels = 90, 3, 20, 11, 4, 32, 5, 3, 64
+    args = _rand_fused(rng, B, T, E, F, V, L, P, C, H, levels)
+    q = classify_fused_pallas_v(*args, C, quantize=True, interpret=True)
+    f = classify_fused_pallas_v(*args, C, quantize=False, interpret=True)
+    r = ref.classify_fused_v(*args, C)
+    _assert_triple_equal(q, f)
+    _assert_triple_equal(q, r)
+    # the layouts really are narrow: this is what the round-trip is *of*
+    prep = tiling.prep_classify_fused(*args[3:10], *args[11:17],
+                                      quantize=True)
+    assert prep.fid.dtype == jnp.int16
+    assert prep.flo.dtype == jnp.int16 and prep.fhi.dtype == jnp.int16
+    assert prep.plab.dtype == jnp.int8
+    assert prep.bitpk.dtype == jnp.uint32 and prep.validpk.dtype == jnp.uint32
+
+
+def test_quantized_int16_boundary_features(rng):
+    """Feature values at the int16 ceiling (2^15 - 1, the feature_width=15
+    profile limit): the i16 feature stream must compare exactly like the i32
+    one through the walk's range compare.  (The svm stage is compared
+    kernel-width vs kernel-width: values >= levels select no LUT level by
+    the one-hot construction in *both* widths.)"""
+    B, T, E, F, V, L, P, C, H, levels = 40, 2, 8, 6, 2, 3, 16, 3, 2, 32
+    args = list(_rand_fused(rng, B, T, E, F, V, L, P, C, H, levels))
+    top = 2**15 - 1
+    feats = np.asarray(rng.integers(0, levels, (B, F)), np.int32)
+    feats[::3] = top                       # boundary packets
+    args[1] = jnp.asarray(feats)
+    flo = np.asarray(rng.integers(0, top, (V, L, T, E)), np.int32)
+    flo[..., ::2] = top                    # boundary entry rows
+    fhi = np.minimum(flo + np.asarray(
+        rng.integers(0, 100, (V, L, T, E)), np.int32), top)
+    args[6], args[7] = jnp.asarray(flo), jnp.asarray(fhi)
+    q = classify_fused_pallas_v(*args, C, quantize=True, interpret=True)
+    f = classify_fused_pallas_v(*args, C, quantize=False, interpret=True)
+    _assert_triple_equal(q, f)
+    # the walk itself (boundary compares included) still matches the oracle
+    np.testing.assert_array_equal(
+        np.asarray(q[0]), np.asarray(ref.tree_walk_v(*args[:11])))
+
+
+def test_all_masked_tcam_rows(rng):
+    """Entry rows carrying the no-match padding convention (mask all bits
+    against value 0) and fully-wildcarded rows (mask 0) survive bit-packing
+    and quantization: parity with the oracle on both extremes."""
+    B, T, E, F, V, L, P, C, H, levels = 50, 2, 8, 6, 2, 3, 16, 3, 2, 32
+    args = list(_rand_fused(rng, B, T, E, F, V, L, P, C, H, levels))
+    cv = np.zeros((V, L, T, E), np.uint32)
+    cm = np.full((V, L, T, E), 0xFFFFFFFF, np.uint32)   # match nothing
+    cm[..., ::2] = 0                                    # match everything
+    args[3], args[4] = jnp.asarray(cv), jnp.asarray(cm)
+    r = ops.classify_fused_v(*args, C, mode="ref")
+    p = ops.classify_fused_v(*args, C, mode="interpret")
+    _assert_triple_equal(r, p)
+
+
+def test_empty_zoo_slot_round_trip(rng):
+    """A fully-evicted slot (all-invalid entries and leaves) yields the
+    no-model outputs in every width: codes pass through, label 0, sums 0."""
+    B, T, E, F, V, L, P, C, H, levels = 30, 2, 8, 6, 3, 3, 16, 3, 2, 32
+    args = _rand_fused(rng, B, T, E, F, V, L, P, C, H, levels,
+                       empty_slots=(1,))
+    q = classify_fused_pallas_v(*args, C, quantize=True, interpret=True)
+    f = classify_fused_pallas_v(*args, C, quantize=False, interpret=True)
+    r = ref.classify_fused_v(*args, C)
+    _assert_triple_equal(q, f)
+    _assert_triple_equal(q, r)
+    codes, vid = args[0], args[2]
+    sel = np.asarray(vid) == 1
+    assert sel.any()
+    np.testing.assert_array_equal(np.asarray(q[0])[sel],
+                                  np.asarray(codes)[sel])
+    assert (np.asarray(q[1])[sel] == 0).all()
+    assert (np.asarray(q[2])[sel] == 0).all()
+
+
+def test_fused_single_launch_and_fallback_counts(rng):
+    """The acceptance pin: one classify = one ``pallas_call``.  The unfused
+    fallback restores the pre-fusion 3 launches; layerwise restores L + 2."""
+    B, T, E, F, V, L, P, C, H, levels = 16, 2, 8, 6, 2, 5, 16, 3, 2, 32
+    args = _rand_fused(rng, B, T, E, F, V, L, P, C, H, levels)
+    fused = ops.count_pallas_launches(
+        lambda *a: ops.classify_fused_v(*a, C, mode="interpret"), *args)
+    unfused = ops.count_pallas_launches(
+        lambda *a: ops.classify_fused_v(*a, C, mode="unfused-interpret"),
+        *args)
+    layerwise = ops.count_pallas_launches(
+        lambda *a: ops.classify_fused_v(*a, C, mode="layerwise-interpret"),
+        *args)
+    assert fused == 1
+    assert unfused == 3
+    assert layerwise == L + 2
+
+
+def test_fused_prep_ops_zero_with_bound_image(rng):
+    """With the install-time operand layout bound via ``prep=``, the fused
+    classify traces to ZERO table-shaped (>= 3-D) prep equations — every
+    operand flows from the jaxpr inputs straight into the launch."""
+    B, T, E, F, V, L, P, C, H, levels = 16, 2, 8, 6, 2, 3, 16, 3, 2, 32
+    args = _rand_fused(rng, B, T, E, F, V, L, P, C, H, levels)
+    prep = tiling.prep_classify_fused(*args[3:10], *args[11:17],
+                                      quantize=True)
+    bound = ops.count_operand_prep_ops(
+        lambda *a: classify_fused_pallas_v(*a, C, prep=prep, interpret=True),
+        *args)
+    unbound = ops.count_operand_prep_ops(
+        lambda *a: classify_fused_pallas_v(*a, C, interpret=True), *args)
+    assert bound == 0
+    assert unbound > 0
+
+
+def test_counters_multiply_through_scan_consistently(rng):
+    """Both jaxpr counters share one traversal and the same convention: an
+    equation (or launch) inside a ``lax.scan`` body counts once per
+    iteration, through nested ``pjit`` too.  Pinned here because the fused
+    launch/prep pins above are meaningless if the counters disagree."""
+    x = jnp.asarray(rng.random((4, 4)), jnp.float32)
+
+    def body(c, _):
+        t = c[None, :, :] * jnp.ones((3, 4, 4), jnp.float32)   # 3-D prep op
+        return c + t.sum(axis=0), None
+
+    def once(c):
+        return body(c, None)[0]
+
+    def scanned(c):
+        out, _ = jax.lax.scan(body, c, None, length=5)
+        return out
+
+    single = ops.count_operand_prep_ops(once, x)
+    assert single > 0
+    assert ops.count_operand_prep_ops(scanned, x) == 5 * single
+    # nested pjit neither loses nor double-counts
+    assert ops.count_operand_prep_ops(jax.jit(scanned), x) == 5 * single
+    assert ops.count_operand_prep_ops(
+        jax.jit(lambda c: scanned(c) + scanned(c)), x) == 10 * single
+
+
+def test_bitpack_round_trip(rng):
+    """``tiling.bitpack_last`` packs {0,1} tables 32/word little-endian; the
+    kernel-side unpack is its exact inverse."""
+    from repro.kernels.classify_fused import _unpack_bits
+    bits = jnp.asarray(rng.integers(0, 2, (3, 5, 64)), jnp.uint32)
+    packed = tiling.bitpack_last(bits)
+    assert packed.shape == (3, 5, 2) and packed.dtype == jnp.uint32
+    np.testing.assert_array_equal(
+        np.asarray(_unpack_bits(packed, 2, 64)), np.asarray(bits))
+    with pytest.raises(ValueError):
+        tiling.bitpack_last(jnp.zeros((4, 33), jnp.uint32))

@@ -138,8 +138,9 @@ def test_layerwise_fallback_matches_fused(satdap):
 
 
 def test_classify_issues_single_tree_walk_launch(satdap, plane_engine):
-    """Acceptance: one classify = exactly one tree-walk pallas_call (the
-    fused kernel), vs max_layers launches on the layerwise fallback."""
+    """Acceptance: one classify = exactly ONE pallas_call (the fused
+    megakernel), vs 3 on the unfused fallback (walk + vote + svm) and
+    max_layers + 2 on the layerwise one."""
     from repro.core.plane import _classify_impl
     from repro.kernels import ops
 
@@ -154,8 +155,8 @@ def test_classify_issues_single_tree_walk_launch(satdap, plane_engine):
         lambda pk, b: _classify_impl(pk, b, n_classes=n_cls, mode=mode),
         packed, pb)
     L = eng.profile.max_layers
-    # interpret mode: tree walk + forest vote + svm lookup kernels
-    assert count("interpret") == 3
+    assert count("interpret") == 1
+    assert count("unfused-interpret") == 3
     assert count("layerwise-interpret") == L + 2
 
 

@@ -247,8 +247,9 @@ def test_pl003_shipped_kernels_match_manifest_and_doc():
                                doc, re.M))
     assert set(doc_rows) == set(BUDGETS)
     for key, entry in BUDGETS.items():
-        got = kernel_footprints(SRC_REPRO / "kernels" / f"{key}.py")
-        assert set(got) == {key}, key
+        mod = entry.module or key
+        got = kernel_footprints(SRC_REPRO / "kernels" / f"{mod}.py")
+        assert key in got, (key, got)
         fp = got[key]
         assert abs(fp - entry.pinned_bytes) <= entry.tolerance * \
             entry.pinned_bytes, (key, fp, entry.pinned_bytes)
@@ -458,14 +459,15 @@ def test_pl006_pragma_suppresses(tmp_path):
 
 
 def test_pl006_shipped_entries_pass_all_legs():
-    """The acceptance bar: all four shipped ``*_v`` kernel entries have a
+    """The acceptance bar: all five shipped ``*_v`` kernel entries have a
     ref oracle, an ops dispatcher calling both paths, and a call chain from
     tests/test_conformance.py."""
     run = lint_project([SRC_REPRO])
     report = parity_report(run.project)
     assert set(report) == {
         "tree_walk_pallas_v", "forest_predict_vote_pallas_v",
-        "svm_lookup_pallas_v", "tcam_match_pallas_v"}
+        "svm_lookup_pallas_v", "tcam_match_pallas_v",
+        "classify_fused_pallas_v"}
     for name, legs in report.items():
         assert legs["ref"], name
         assert legs["dispatch"], name
