@@ -38,7 +38,14 @@ signal and ``ControlCounters`` surfaced through ``latency_stats()``.
 This package is the **only** place in ``src/repro`` allowed to construct a
 ``shard_map`` classify loop (pinned by ``tests/test_runtime.py``).
 """
-from repro.runtime.admission import bucket_size, coalesce, pad_to_bucket, split, trim
+from repro.runtime.admission import (
+    bucket_ladder,
+    bucket_size,
+    coalesce,
+    pad_to_bucket,
+    split,
+    trim,
+)
 from repro.runtime.control import ControlCounters, ControlLoop, DeviceFailure
 from repro.runtime.executors import (
     Executor,
@@ -53,6 +60,7 @@ from repro.runtime.policies import (
     BatchingPolicy,
     ImmediatePolicy,
     SizeOrDeadlinePolicy,
+    SloAutoscaler,
 )
 
 __all__ = [
@@ -66,10 +74,12 @@ __all__ = [
     "ImmediatePolicy",
     "SizeOrDeadlinePolicy",
     "AdaptiveBucketPolicy",
+    "SloAutoscaler",
     "ControlLoop",
     "ControlCounters",
     "DeviceFailure",
     "bucket_size",
+    "bucket_ladder",
     "pad_to_bucket",
     "trim",
     "coalesce",

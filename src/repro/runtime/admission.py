@@ -31,7 +31,8 @@ import numpy as np
 
 from repro.core.packets import PacketBatch
 
-__all__ = ["bucket_size", "pad_to_bucket", "trim", "coalesce", "split"]
+__all__ = ["bucket_size", "bucket_ladder", "pad_to_bucket", "trim",
+           "coalesce", "split"]
 
 
 def bucket_size(batch: int, granularity: int = 1) -> int:
@@ -47,6 +48,21 @@ def bucket_size(batch: int, granularity: int = 1) -> int:
         raise ValueError(f"granularity must be >= 1, got {granularity}")
     units = -(-batch // granularity)          # ceil(batch / granularity)
     return granularity * (1 << max(units - 1, 0).bit_length())
+
+
+def bucket_ladder(max_batch: int, granularity: int = 1) -> tuple[int, ...]:
+    """Every admission bucket a batch of up to ``max_batch`` can land in:
+    ``granularity * 2^k`` for ``k = 0 .. log2(bucket(max_batch))`` — the
+    shapes a serving front pre-traces so no dispatch pays first-touch
+    compile mid-stream (``DataplaneRuntime.warm``).  Length is the O(log B)
+    trace bound itself."""
+    top = bucket_size(max_batch, granularity)
+    ladder = []
+    b = granularity
+    while b <= top:
+        ladder.append(b)
+        b *= 2
+    return tuple(ladder)
 
 
 def pad_to_bucket(pb: PacketBatch, bucket: int) -> PacketBatch:

@@ -69,6 +69,8 @@ class ControlCounters:
     reinstalls: int = 0
     retries: int = 0
     heal_failures: int = 0          # replan infeasible: no surviving deployment
+    interrupted_heals: int = 0      # server shut down mid-heal (drain refused
+                                    # or the owned hold was broken by stop())
     last_heal_ms: float = 0.0
     total_downtime_s: float = 0.0
     # (t0, t1) heal windows on the serving clock (seconds since loop start)
@@ -187,13 +189,33 @@ class ControlLoop:
             self.counters.replans += 1
             # drain BEFORE reinstall: the in-flight dispatch completes (or
             # fails with DeviceFailure and retries) on the old deployment —
-            # no batch sees a half-swapped program set
-            await self.server.drain()
+            # no batch sees a half-swapped program set.  A server that is
+            # shutting down refuses the drain barrier (RuntimeError): the
+            # heal cannot proceed against a flushing server, so it is
+            # counted as interrupted and surfaced, never applied half-way.
+            try:
+                await self.server.drain()
+            except RuntimeError:
+                self.counters.interrupted_heals += 1
+                raise
             self.counters.drains += 1
+            broken = None
             try:
                 self.fleet.reinstall(plans, devices, programs)
             finally:
-                self.server.release()
+                try:
+                    self.server.release()
+                except RuntimeError as e:
+                    # stop() broke our hold mid-reinstall: the server
+                    # already flushed and shut down underneath the barrier.
+                    # Capture rather than raise here so a reinstall
+                    # exception (if any) is not masked by the finally.
+                    broken = e
+            if broken is not None:
+                self.counters.interrupted_heals += 1
+                raise RuntimeError(
+                    "server stopped during heal: the drain barrier was "
+                    "broken by stop() while the reinstall ran") from broken
             self.counters.reinstalls += 1
             t_done = loop.time()
             self.counters.last_heal_ms = (t_done - t_detect) * 1e3

@@ -27,6 +27,7 @@ import numpy as np
 from repro.core.packets import PacketBatch
 from repro.core.plane import PlaneProfile
 from repro.runtime.admission import (
+    bucket_ladder,
     bucket_size,
     coalesce,
     pad_to_bucket,
@@ -96,6 +97,22 @@ class DataplaneRuntime:
         batch = jax.tree.map(np.asarray, batch)
         out = self.executor.classify(pad_to_bucket(batch, self.bucket(B)))
         return jax.tree.map(lambda x: np.asarray(x)[:B], out)
+
+    def warm(self, make_batch, max_batch: int) -> tuple[int, ...]:
+        """Pre-trace every admission bucket up to ``bucket(max_batch)``.
+
+        ``make_batch(b)`` must build a ``PacketBatch`` of exactly ``b``
+        packets (serving fronts pass zero-filled FORWARD passthrough
+        traffic — semantically invisible, same compiled shapes); each
+        bucket is driven once through the ``run_host`` hot path, so the
+        executable cache is warmed against exactly the shapes a batching
+        policy can dispatch into.  Returns the warmed bucket ladder.
+        Blocking compile work — serving fronts call this off-loop.
+        """
+        ladder = bucket_ladder(max_batch, self.executor.granularity)
+        for b in ladder:
+            self.run_host(make_batch(b))
+        return ladder
 
     # ------------------------------------------------------------ coalesce
     # The multi-client seam batching policies dispatch through: several

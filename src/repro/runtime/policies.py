@@ -34,7 +34,10 @@ owns the clock and calls:
 """
 from __future__ import annotations
 
+import collections
 from typing import Protocol, runtime_checkable
+
+import numpy as np
 
 from repro.runtime.admission import bucket_size
 
@@ -43,6 +46,7 @@ __all__ = [
     "ImmediatePolicy",
     "SizeOrDeadlinePolicy",
     "AdaptiveBucketPolicy",
+    "SloAutoscaler",
 ]
 
 
@@ -167,3 +171,85 @@ class AdaptiveBucketPolicy:
         else:
             self._demand = ((1 - self.alpha) * self._demand
                             + self.alpha * packets)
+
+
+class SloAutoscaler:
+    """p99-vs-SLO lane controller for the continuous serving engine.
+
+    Decides when the ``("switch", "port")`` mesh should widen or narrow its
+    port lanes: sustained p99 latency **above** ``slo_p99_ms`` (``patience``
+    consecutive over-SLO observations on a full evidence window) widens to
+    the next lane count in ``lanes``; sustained p99 **below**
+    ``narrow_margin * slo_p99_ms`` narrows back, releasing devices.  A
+    ``cooldown`` of observations after each change — and a cleared evidence
+    window — keeps the controller from flapping on the transient while the
+    freshly-swapped executor settles.
+
+    Pure-by-inputs like the batching policies: ``observe`` takes one
+    request latency and returns the new lane count when (and only when) a
+    scale decision fires, else ``None``.  The engine owns the actual
+    executor swap — quiesce, pre-warm the incoming lane's buckets, swap —
+    so this class stays unit-testable without an event loop or a mesh.
+    """
+
+    def __init__(self, *, slo_p99_ms: float, lanes: tuple[int, ...] = (1, 2, 4),
+                 window: int = 64, patience: int = 4,
+                 narrow_margin: float = 0.5, cooldown: int = 32) -> None:
+        if slo_p99_ms <= 0:
+            raise ValueError(f"slo_p99_ms must be > 0, got {slo_p99_ms}")
+        if len(lanes) < 1 or list(lanes) != sorted(set(lanes)):
+            raise ValueError(
+                f"lanes must be distinct and ascending, got {lanes}")
+        if not (0.0 < narrow_margin < 1.0):
+            raise ValueError(
+                f"narrow_margin must be in (0, 1), got {narrow_margin}")
+        if patience < 1 or window < 2 or cooldown < 0:
+            raise ValueError("need patience >= 1, window >= 2, cooldown >= 0")
+        self.slo_p99_ms = float(slo_p99_ms)
+        self.lanes = tuple(int(l) for l in lanes)
+        self.patience = int(patience)
+        self.narrow_margin = float(narrow_margin)
+        self.cooldown = int(cooldown)
+        self.lane = self.lanes[0]
+        self._lat = collections.deque(maxlen=int(window))
+        self._hot = 0
+        self._cold = 0
+        self._since_change = self.cooldown   # first decision needs no wait
+
+    @property
+    def p99_ms(self) -> float:
+        """Current-window p99 estimate (NaN until the window has evidence)."""
+        if len(self._lat) < 2:
+            return float("nan")
+        return float(np.percentile(np.asarray(self._lat, float), 99))
+
+    def observe(self, latency_ms: float) -> int | None:
+        """Feed one completed request's end-to-end latency.  Returns the
+        new lane count when a widen/narrow decision fires, else ``None``."""
+        self._lat.append(float(latency_ms))
+        self._since_change += 1
+        if (len(self._lat) < self._lat.maxlen
+                or self._since_change < self.cooldown):
+            return None          # not enough post-change evidence yet
+        p99 = self.p99_ms
+        if p99 > self.slo_p99_ms:
+            self._hot += 1
+            self._cold = 0
+        elif p99 < self.narrow_margin * self.slo_p99_ms:
+            self._cold += 1
+            self._hot = 0
+        else:
+            self._hot = self._cold = 0
+        i = self.lanes.index(self.lane)
+        if self._hot >= self.patience and i + 1 < len(self.lanes):
+            return self._decide(self.lanes[i + 1])
+        if self._cold >= self.patience and i > 0:
+            return self._decide(self.lanes[i - 1])
+        return None
+
+    def _decide(self, lane: int) -> int:
+        self.lane = lane
+        self._hot = self._cold = 0
+        self._since_change = 0
+        self._lat.clear()        # old-lane latencies are not evidence now
+        return lane

@@ -1,6 +1,10 @@
 from repro.serving.async_server import AsyncResult, AsyncZooServer
+from repro.serving.engine import ContinuousZooServer
 from repro.serving.fleet import FleetExecutor, FleetRuntime
+from repro.serving.loadgen import LoadReport, arrival_times, open_loop
 from repro.serving.serve import ZooServer, make_decode_step, make_prefill_step
 
-__all__ = ["AsyncResult", "AsyncZooServer", "FleetExecutor", "FleetRuntime",
-           "ZooServer", "make_decode_step", "make_prefill_step"]
+__all__ = ["AsyncResult", "AsyncZooServer", "ContinuousZooServer",
+           "FleetExecutor", "FleetRuntime", "LoadReport", "ZooServer",
+           "arrival_times", "make_decode_step", "make_prefill_step",
+           "open_loop"]

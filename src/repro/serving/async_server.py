@@ -30,11 +30,29 @@ harness ``tests/test_conformance.py``):
   (``loop.run_in_executor``), so the event loop keeps accepting submits
   while a batch classifies — that concurrency is where size-or-deadline
   coalescing beats per-request dispatch at high offered load
-  (``benchmarks/serve_async.py``).
+  (``benchmarks/serve_async.py``);
+* **no future is left pending** — ``stop()`` flushes the queue through a
+  final dispatch, and any straggler that slipped in around the final drain
+  cut (or survived an externally-cancelled dispatch loop) is
+  fail-or-flushed deterministically before ``stop()`` returns.
+
+Hold ownership: ``drain()``/``hold()`` give the control plane an exclusive
+dispatch barrier.  ``stop()`` on a held server must still flush (a dying
+server cannot wait on a holder that may never come back), so it *breaks*
+the hold — and the owner is told: its next ``release()`` raises
+``RuntimeError`` instead of silently resuming a server that already
+flushed through whatever half-installed state the holder was protecting.
+
+``ContinuousZooServer`` (``repro.serving.engine``) extends this class with
+a persistent slot-pool dispatch engine; the cut/complete helpers below
+(``_next_cut`` / ``_finish_dispatch`` / ``_fail``) are the shared seam.
 
 Latency accounting: each request carries ``t_submit`` / ``t_dispatch`` /
 ``t_done`` (event-loop monotonic clock); ``latency_stats()`` aggregates
-p50/p99 end-to-end latency, queue wait, and mean coalesced batch size.
+p50/p99/p99.9 end-to-end latency, queue wait, and mean coalesced batch
+size.  Empty submits (B = 0) resolve without a dispatch but are counted —
+rates and percentiles cover every accepted request, not just the queued
+ones.
 """
 from __future__ import annotations
 
@@ -109,6 +127,8 @@ class AsyncZooServer:
         self._inflight = 0
         self._task: asyncio.Task | None = None
         self._closing = False
+        self._held = False            # a drain()/hold() owner is active
+        self._hold_broken = False     # stop() force-released an owned hold
         self._stats_sources: dict[str, object] = {}
         # bounded: a long-lived front at line rate must not grow its
         # accounting without limit (stats_window = most recent requests /
@@ -131,6 +151,8 @@ class AsyncZooServer:
         if self._task is not None:
             raise RuntimeError("server already started")
         self._closing = False
+        self._held = False
+        self._hold_broken = False
         self._arrival = asyncio.Event()
         self._hold_gate = asyncio.Event()
         self._hold_gate.set()
@@ -141,15 +163,34 @@ class AsyncZooServer:
         return self
 
     async def stop(self) -> None:
-        """Flush queued requests, then stop the dispatch loop.  An active
-        ``hold()`` is released so the final drain can flush."""
+        """Flush queued requests, then stop the dispatch loop.
+
+        An owned ``hold()``/``drain()`` barrier is *broken* so the final
+        drain can flush; the owner's next ``release()`` raises.  Requests
+        that raced past the final drain cut — or were stranded by an
+        externally-cancelled dispatch loop — are fail-or-flushed before
+        this returns: no future is ever left pending.
+        """
         if self._task is None:
             return
         self._closing = True
+        if self._held:
+            # a control-plane drain still owns the barrier; break it and
+            # remember — the owner's release() must raise, not silently
+            # resume a server that flushed through its half-done reinstall
+            self._held = False
+            self._hold_broken = True
         self._hold_gate.set()
         self._arrival.set()
-        await self._task
-        self._task = None
+        task, self._task = self._task, None
+        try:
+            await task
+        except asyncio.CancelledError:
+            if not task.cancelled():
+                raise           # stop() itself was cancelled
+            # the dispatch loop was killed out from under us (external
+            # cancel / loop teardown): its queue is flushed below
+        await self._flush_stragglers()
 
     async def __aenter__(self) -> "AsyncZooServer":
         return await self.start()
@@ -167,24 +208,44 @@ class AsyncZooServer:
     # ------------------------------------------------------ quiesce seam
     # The control plane's drain/reinstall barrier (repro.runtime.control):
     # hold() pauses cutting new dispatches (submits keep queuing), drain()
-    # additionally waits for the in-flight dispatch to land, release()
+    # additionally waits for every in-flight dispatch to land, release()
     # resumes.  Nothing is dropped — held requests dispatch after release.
     def hold(self) -> None:
         """Pause new dispatches; queued and new submits wait for release()."""
         if self._hold_gate is None:
             raise RuntimeError("AsyncZooServer is not serving")
+        if self._closing:
+            # a hold taken now would stall the final flush forever
+            raise RuntimeError("AsyncZooServer is stopping — hold unavailable")
+        self._held = True
         self._hold_gate.clear()
 
     def release(self) -> None:
-        """Resume dispatching after a hold()."""
+        """Resume dispatching after a hold().  Raises if ``stop()`` broke
+        the hold meanwhile — the barrier the caller thought it owned did
+        not survive shutdown, and whatever it was protecting (a reinstall,
+        a swap) may have raced the final flush."""
         if self._hold_gate is None:
             raise RuntimeError("AsyncZooServer is not serving")
+        if self._hold_broken:
+            self._hold_broken = False
+            raise RuntimeError(
+                "hold was broken by stop(): the server flushed and shut "
+                "down while the control plane still owned the drain barrier")
+        self._held = False
         self._hold_gate.set()
 
     async def drain(self) -> None:
         """Quiesce for a control-plane write: hold new dispatches and wait
-        until the in-flight dispatch (if any) completes.  The caller owns
-        the hold and must release() when its reinstall is done."""
+        until every in-flight dispatch completes.  The caller owns the
+        hold and must release() when its reinstall is done.  Raises
+        ``RuntimeError`` on a stopping server — a drain barrier cannot be
+        granted while the final flush is running."""
+        if self._hold_gate is None:
+            raise RuntimeError("AsyncZooServer is not serving")
+        if self._closing or self._task is None or self._task.done():
+            raise RuntimeError(
+                "AsyncZooServer is stopping — drain unavailable")
         self.hold()
         await self._idle.wait()
 
@@ -206,13 +267,21 @@ class AsyncZooServer:
     async def submit_batch(self, pb: PacketBatch) -> AsyncResult:
         """Classify one pre-built ``PacketBatch`` (arbitrary ptype/vid mixes
         — the conformance harness's entry point)."""
-        if self._task is None or self._closing:
+        if self._task is None or self._task.done() or self._closing:
+            # _task.done() covers a dispatch loop that died out from under
+            # us (external cancel): enqueueing now would strand the future
+            # until stop() — fail fast instead
             raise RuntimeError("AsyncZooServer is not serving — use "
                                "'async with AsyncZooServer(zoo) as srv'")
         loop = asyncio.get_running_loop()
         now = loop.time()
         if pb.batch == 0:
-            # empty submit: nothing to classify, resolve immediately
+            # empty submit: nothing to classify, resolve immediately — but
+            # it is still an accepted request; rates and percentiles must
+            # not silently exclude it
+            self._total_requests += 1
+            self._latencies.append(0.0)
+            self._queue_waits.append(0.0)
             return AsyncResult(
                 rslt=np.empty((0,), np.int32),
                 codes=np.asarray(pb.codes, np.uint32),
@@ -244,6 +313,71 @@ class AsyncZooServer:
         self._queued_packets -= taken
         return reqs
 
+    @staticmethod
+    def _fail(reqs: list[_Pending], exc: BaseException) -> None:
+        for p in reqs:
+            if not p.future.done():
+                p.future.set_exception(exc)
+
+    async def _next_cut(self, loop):
+        """Policy wait phase + cut + coalesce: the front half of one
+        dispatch.  Returns ``(reqs, flat, offsets)``, or ``None`` when the
+        queue emptied under the wait.  A broken ``BatchingPolicy`` (it is a
+        user-implementable protocol) or coalesce failure fails the affected
+        futures loudly and returns ``None`` — the caller keeps serving.
+        (CancelledError is a BaseException and still propagates.)"""
+        reqs: list[_Pending] = []
+        try:
+            # hold for more traffic until the policy says cut (or the
+            # server is draining on stop())
+            while self._queue and not self._closing:
+                age_us = (loop.time() - self._queue[0].t_submit) * 1e6
+                w = self.policy.wait_us(self._queued_packets, age_us)
+                if w <= 0:
+                    break
+                self._arrival.clear()
+                try:
+                    await asyncio.wait_for(self._arrival.wait(), w / 1e6)
+                except (asyncio.TimeoutError, TimeoutError):
+                    break   # deadline: cut what we have
+            if not self._queue:
+                return None
+            reqs = self._cut_batch()
+            flat, offsets = self.runtime.coalesce([p.pb for p in reqs])
+        except Exception as e:
+            if not reqs:        # failed before the cut: fail the queue
+                reqs = list(self._queue)
+                self._queue.clear()
+                self._queued_packets = 0
+            self._fail(reqs, e)
+            return None
+        return reqs, flat, offsets
+
+    def _finish_dispatch(self, reqs: list[_Pending], offsets, batch_packets,
+                         rslt, codes, acc, t_dispatch: float, t_done: float,
+                         waited_us: float) -> None:
+        """Back half of one dispatch: policy feedback, accounting, demux.
+        A broken ``note_dispatch`` hook fails the batch's futures (the
+        results are already computed, but the policy contract was violated
+        — surface it) and leaves the server serving."""
+        try:
+            self.policy.note_dispatch(batch_packets, waited_us)
+        except Exception as e:   # broken feedback hook: surface it
+            self._fail(reqs, e)
+            return
+        self._dispatch_log.append(
+            (batch_packets, len(reqs), waited_us, t_done - t_dispatch))
+        self._total_dispatches += 1
+        for p, lo, hi in zip(reqs, offsets, offsets[1:]):
+            self._total_requests += 1
+            self._latencies.append(t_done - p.t_submit)
+            self._queue_waits.append(t_dispatch - p.t_submit)
+            if not p.future.done():   # client may have been cancelled
+                p.future.set_result(AsyncResult(
+                    rslt=rslt[lo:hi], codes=codes[lo:hi],
+                    svm_acc=acc[lo:hi], t_submit=p.t_submit,
+                    t_dispatch=t_dispatch, t_done=t_done))
+
     async def _dispatch_loop(self) -> None:
         loop = asyncio.get_running_loop()
         while True:
@@ -258,38 +392,10 @@ class AsyncZooServer:
                 # stop() sets the gate, so a closing server still flushes
                 await self._hold_gate.wait()
                 continue
-            # A broken BatchingPolicy (it is a user-implementable protocol)
-            # or coalesce failure must fail the affected futures loudly and
-            # leave the loop serving — NOT kill this task silently, which
-            # would hang every pending and future submit forever.
-            # (CancelledError is a BaseException and still propagates.)
-            reqs: list[_Pending] = []
-            try:
-                # ---- policy wait phase: hold for more traffic until the
-                # policy says cut (or the server is draining on stop()).
-                while self._queue and not self._closing:
-                    age_us = (loop.time() - self._queue[0].t_submit) * 1e6
-                    w = self.policy.wait_us(self._queued_packets, age_us)
-                    if w <= 0:
-                        break
-                    self._arrival.clear()
-                    try:
-                        await asyncio.wait_for(self._arrival.wait(), w / 1e6)
-                    except (asyncio.TimeoutError, TimeoutError):
-                        break   # deadline: cut what we have
-                if not self._queue:
-                    continue
-                reqs = self._cut_batch()
-                flat, offsets = self.runtime.coalesce([p.pb for p in reqs])
-            except Exception as e:
-                if not reqs:        # failed before the cut: fail the queue
-                    reqs = list(self._queue)
-                    self._queue.clear()
-                    self._queued_packets = 0
-                for p in reqs:
-                    if not p.future.done():
-                        p.future.set_exception(e)
+            cut = await self._next_cut(loop)
+            if cut is None:
                 continue
+            reqs, flat, offsets = cut
             t_dispatch = loop.time()
             waited_us = (t_dispatch - reqs[0].t_submit) * 1e6
             self._inflight += 1
@@ -298,43 +404,47 @@ class AsyncZooServer:
                 rslt, codes, acc = await loop.run_in_executor(
                     None, self._classify_flat, flat)
             except Exception as e:  # executor died: fail this batch's futures
-                for p in reqs:
-                    if not p.future.done():
-                        p.future.set_exception(e)
+                self._fail(reqs, e)
                 continue
             finally:
                 self._inflight -= 1
                 if self._inflight == 0:
                     self._idle.set()
-            t_done = loop.time()
+            self._finish_dispatch(reqs, offsets, flat.batch, rslt, codes,
+                                  acc, t_dispatch, loop.time(), waited_us)
+
+    async def _flush_stragglers(self) -> None:
+        """Deterministic fail-or-flush of requests still queued after the
+        dispatch loop exited — the shutdown-race backstop.  Each round is
+        classified through the same ``run_host`` path (flush), and any
+        failure fails that round's futures (fail); either way every future
+        resolves before ``stop()`` returns."""
+        loop = asyncio.get_running_loop()
+        while self._queue:
+            reqs = list(self._queue)
+            self._queue.clear()
+            self._queued_packets = 0
             try:
-                self.policy.note_dispatch(flat.batch, waited_us)
-            except Exception as e:  # broken feedback hook: surface it
-                for p in reqs:
-                    if not p.future.done():
-                        p.future.set_exception(e)
+                flat, offsets = self.runtime.coalesce([p.pb for p in reqs])
+                t_dispatch = loop.time()
+                waited_us = (t_dispatch - reqs[0].t_submit) * 1e6
+                rslt, codes, acc = await loop.run_in_executor(
+                    None, self._classify_flat, flat)
+            except Exception as e:
+                self._fail(reqs, e)
                 continue
-            self._dispatch_log.append(
-                (flat.batch, len(reqs), waited_us, t_done - t_dispatch))
-            self._total_dispatches += 1
-            for p, lo, hi in zip(reqs, offsets, offsets[1:]):
-                self._total_requests += 1
-                self._latencies.append(t_done - p.t_submit)
-                self._queue_waits.append(t_dispatch - p.t_submit)
-                if not p.future.done():   # client may have been cancelled
-                    p.future.set_result(AsyncResult(
-                        rslt=rslt[lo:hi], codes=codes[lo:hi],
-                        svm_acc=acc[lo:hi], t_submit=p.t_submit,
-                        t_dispatch=t_dispatch, t_done=t_done))
+            self._finish_dispatch(reqs, offsets, flat.batch, rslt, codes,
+                                  acc, t_dispatch, loop.time(), waited_us)
 
     # --------------------------------------------------------------- stats
     def latency_stats(self) -> dict:
-        """Aggregate latency accounting: p50/p99 end-to-end, queue wait,
-        dispatch count, and mean coalesced batch size.  ``requests`` /
-        ``dispatches`` are lifetime totals; the distribution numbers cover
-        the most recent ``stats_window`` of each.  Registered stats sources
-        (``add_stats_source``) are merged in as nested dicts — the control
-        plane's counters appear under ``"control"``."""
+        """Aggregate latency accounting: p50/p99/p99.9 end-to-end, queue
+        wait, dispatch count, and mean coalesced batch size.  ``requests``
+        / ``dispatches`` are lifetime totals; the distribution numbers
+        cover the most recent ``stats_window`` of each.  Registered stats
+        sources (``add_stats_source``) are merged in as nested dicts — the
+        control plane's counters appear under ``"control"``, the
+        continuous engine's under ``"engine"``."""
         lat = np.asarray(self._latencies, float)
         if lat.size == 0:
             out = {"requests": self._total_requests,
@@ -348,9 +458,11 @@ class AsyncZooServer:
                 "dispatches": self._total_dispatches,
                 "p50_ms": float(np.percentile(lat, 50) * 1e3),
                 "p99_ms": float(np.percentile(lat, 99) * 1e3),
+                "p999_ms": float(np.percentile(lat, 99.9) * 1e3),
                 "mean_ms": float(lat.mean() * 1e3),
                 "p50_wait_ms": float(np.percentile(waits, 50) * 1e3),
-                "mean_batch_packets": float(batches.mean()),
+                "mean_batch_packets": float(batches.mean())
+                if batches.size else 0.0,
             }
         for name, fn in self._stats_sources.items():
             out[name] = fn()

@@ -207,7 +207,13 @@ def test_empty_submit_resolves_immediately(zoo):
     assert out.rslt.shape == (0,)
     assert out.codes.shape[0] == 0 and out.svm_acc.shape[0] == 0
     assert out.latency_s == 0.0
-    assert stats["requests"] == 0           # nothing was queued or dispatched
+    # the short-circuit must not bypass accounting: an empty submit is an
+    # accepted request (zero latency, zero wait) with no dispatch — rates
+    # and percentiles cover every request the server answered
+    assert stats["requests"] == 1
+    assert stats["dispatches"] == 0
+    assert stats["p50_ms"] == 0.0 and stats["p50_wait_ms"] == 0.0
+    assert stats["mean_batch_packets"] == 0.0   # no dispatch log yet, no NaN
 
 
 def test_stop_drains_pending_requests(zoo, satdap):
@@ -333,10 +339,10 @@ def test_latency_stats_surface(zoo, satdap):
     stats = run_async(main())
     assert stats["requests"] == 6
     assert stats["dispatches"] >= 1
-    for key in ("p50_ms", "p99_ms", "mean_ms", "p50_wait_ms",
+    for key in ("p50_ms", "p99_ms", "p999_ms", "mean_ms", "p50_wait_ms",
                 "mean_batch_packets"):
         assert stats[key] >= 0.0
-    assert stats["p50_ms"] <= stats["p99_ms"]
+    assert stats["p50_ms"] <= stats["p99_ms"] <= stats["p999_ms"]
 
 
 # ------------------------------------------------- quiesce seam (control plane)
@@ -395,6 +401,94 @@ def test_stop_releases_an_active_hold(zoo, satdap):
         await asyncio.sleep(0.01)
         await srv.stop()                           # releases + flushes
         return await task
+
+    out = run_async(main())
+    np.testing.assert_array_equal(out.rslt, zoo.classify(Xte[:4], mid=0,
+                                                         vid=0))
+
+
+def test_cancelled_dispatch_loop_fails_fast_and_stop_flushes(zoo, satdap):
+    """Shutdown-race regression: the dispatch task dying out from under the
+    queue (external cancel / loop teardown) used to let later submits
+    enqueue onto a loop nobody runs — futures hung until the test timed
+    out.  Now: submits after the death fail fast, and ``stop()``
+    fail-or-flushes the stranded straggler so no future is left pending."""
+    _, _, Xte, _ = satdap
+
+    async def main():
+        srv = AsyncZooServer(zoo, policy=SizeOrDeadlinePolicy(
+            max_batch=4096, max_wait_us=60_000_000))   # straggler waits forever
+        await srv.start()
+        straggler = asyncio.create_task(srv.submit(Xte[:3], mid=0, vid=0))
+        await asyncio.sleep(0.01)          # enqueued, parked on the deadline
+        srv._task.cancel()                 # the loop dies under the queue
+        await asyncio.sleep(0.01)
+        with pytest.raises(RuntimeError, match="not serving"):
+            await srv.submit(Xte[:3], mid=0, vid=0)    # used to hang here
+        await srv.stop()                   # flushes the straggler
+        return await asyncio.wait_for(straggler, timeout=5)
+
+    out = run_async(asyncio.wait_for(main(), timeout=30))
+    np.testing.assert_array_equal(out.rslt, zoo.classify(Xte[:3], mid=0,
+                                                         vid=0))
+
+
+def test_submit_stop_interleave_leaves_no_future_pending(zoo, satdap):
+    """Submits racing ``stop()``: every future either resolves bit-identical
+    or fails fast with the not-serving error — none hang (the whole
+    interleave runs under a hard timeout and asyncio debug mode)."""
+    _, _, Xte, _ = satdap
+
+    async def main():
+        srv = AsyncZooServer(zoo, policy=SizeOrDeadlinePolicy(
+            max_batch=4096, max_wait_us=60_000_000))
+        await srv.start()
+        tasks = [asyncio.create_task(srv.submit(Xte[i:i + 2], mid=0, vid=0))
+                 for i in range(6)]
+        await asyncio.sleep(0)             # some enqueue before the stop
+        stopper = asyncio.create_task(srv.stop())
+        tasks += [asyncio.create_task(srv.submit(Xte[i:i + 2], mid=0, vid=0))
+                  for i in range(6, 12)]   # these race the closing flag
+        await stopper
+        return await asyncio.gather(*tasks, return_exceptions=True)
+
+    results = run_async(asyncio.wait_for(main(), timeout=30))
+    assert len(results) == 12
+    resolved = 0
+    for i, r in enumerate(results):
+        if isinstance(r, BaseException):
+            assert isinstance(r, RuntimeError) and "not serving" in str(r)
+        else:
+            resolved += 1
+            np.testing.assert_array_equal(
+                r.rslt, zoo.classify(Xte[i:i + 2], mid=0, vid=0))
+    assert resolved >= 6                   # the pre-stop submits all land
+
+
+def test_stop_breaks_owned_hold_and_release_raises(zoo, satdap):
+    """A control-plane drain owner whose server is stopped mid-hold must
+    find out: stop() breaks the barrier so the final flush can run, and the
+    owner's release() raises instead of silently resuming a server that
+    already flushed through its half-done reinstall."""
+    _, _, Xte, _ = satdap
+
+    async def main():
+        srv = AsyncZooServer(zoo)
+        await srv.start()
+        await srv.drain()                  # the control plane owns the barrier
+        task = asyncio.create_task(srv.submit(Xte[:4], mid=0, vid=0))
+        await asyncio.sleep(0.01)
+        await srv.stop()                   # breaks the hold, flushes the queue
+        out = await task
+        with pytest.raises(RuntimeError, match="broken by stop"):
+            srv.release()                  # the owner must be told
+        # once surfaced, the broken flag is consumed — and a stopped server
+        # refuses new barriers outright
+        with pytest.raises(RuntimeError, match="drain unavailable"):
+            await srv.drain()
+        with pytest.raises(RuntimeError, match="hold unavailable"):
+            srv.hold()
+        return out
 
     out = run_async(main())
     np.testing.assert_array_equal(out.rslt, zoo.classify(Xte[:4], mid=0,

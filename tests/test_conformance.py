@@ -57,7 +57,12 @@ from repro.runtime.executors import (
     ShardedExecutor,
     SingleSwitchExecutor,
 )
-from repro.serving import AsyncZooServer, FleetRuntime, ZooServer
+from repro.serving import (
+    AsyncZooServer,
+    ContinuousZooServer,
+    FleetRuntime,
+    ZooServer,
+)
 
 N_CASES = {1: 72, 4: 72, 8: 60}          # 204 drawn cases total (>= 200)
 N_FAULT_CASES = 8                        # topology-lane fault schedules
@@ -245,9 +250,10 @@ def harness(request):
     return V, prof, executors, runtimes, zoo, oracle
 
 
-async def _serve_async(zoo, pb, rng):
-    """Submit the case's traffic as 1-3 ragged client chunks through the
-    async front; return the demuxed results re-concatenated in order."""
+async def _serve_async(zoo, pb, rng, server_cls=AsyncZooServer):
+    """Submit the case's traffic as 1-3 ragged client chunks through an
+    async front (the coalescing server or the continuous slot-pool engine);
+    return the demuxed results re-concatenated in order."""
     policy = SizeOrDeadlinePolicy(max_batch=32, max_wait_us=500.0)
     B = pb.batch
     n_chunks = int(rng.integers(1, min(3, B) + 1))
@@ -256,7 +262,11 @@ async def _serve_async(zoo, pb, rng):
     bounds = [0] + cuts + [B]
     chunks = [jax.tree.map(lambda x: np.asarray(x)[lo:hi], pb)
               for lo, hi in zip(bounds, bounds[1:])]
-    async with AsyncZooServer(zoo, policy=policy) as srv:
+    # warm=False: the harness pre-warms the shared jit cache itself; the
+    # warm path is pinned in tests/test_engine.py
+    kw = {"n_slots": 2, "warm": False} \
+        if server_cls is ContinuousZooServer else {}
+    async with server_cls(zoo, policy=policy, **kw) as srv:
         outs = await asyncio.gather(
             *[srv.submit_batch(c) for c in chunks])
     return (np.concatenate([o.rslt for o in outs]),
@@ -292,21 +302,24 @@ def test_conformance_cross_executor_and_async(harness):
                     _shrink_and_fail(V, case, seed, name, field, pb, out,
                                      want, classify_one)
 
-        rng = np.random.default_rng(seed + 1)
-        a_rslt, a_codes, a_acc = asyncio.run(_serve_async(zoo, pb, rng))
-        got_async = dataclasses.replace(pb, rslt=a_rslt, codes=a_codes,
-                                        svm_acc=a_acc)
-        for field in FIELDS:
-            if not (np.asarray(getattr(got_async, field))
-                    == np.asarray(getattr(want, field))).all():
-                def classify_one(pb1):
-                    r, c, a = asyncio.run(_serve_async(
-                        zoo, pb1, np.random.default_rng(0)))
-                    return (dataclasses.replace(pb1, rslt=r, codes=c,
-                                                svm_acc=a),
-                            oracle.classify(packed, pb1))
-                _shrink_and_fail(V, case, seed, "async", field, pb,
-                                 got_async, want, classify_one)
+        for aname, cls in (("async", AsyncZooServer),
+                           ("continuous", ContinuousZooServer)):
+            rng = np.random.default_rng(seed + 1)   # same chunking both fronts
+            a_rslt, a_codes, a_acc = asyncio.run(
+                _serve_async(zoo, pb, rng, cls))
+            got_async = dataclasses.replace(pb, rslt=a_rslt, codes=a_codes,
+                                            svm_acc=a_acc)
+            for field in FIELDS:
+                if not (np.asarray(getattr(got_async, field))
+                        == np.asarray(getattr(want, field))).all():
+                    def classify_one(pb1, _cls=cls):
+                        r, c, a = asyncio.run(_serve_async(
+                            zoo, pb1, np.random.default_rng(0), _cls))
+                        return (dataclasses.replace(pb1, rslt=r, codes=c,
+                                                    svm_acc=a),
+                                oracle.classify(packed, pb1))
+                    _shrink_and_fail(V, case, seed, aname, field, pb,
+                                     got_async, want, classify_one)
 
 
 def test_conformance_fused_megakernel(harness):

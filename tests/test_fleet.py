@@ -340,3 +340,83 @@ def test_fleet_not_serving_raises(fleet_setup):
         run_async(fleet.submit(Xq, mid=0, vid=0))
     with pytest.raises(RuntimeError, match="not serving"):
         fleet.latency_stats()
+
+
+# --------------------------------------------- heal vs shutdown ownership
+def test_fleet_heal_interrupted_by_shutdown_is_counted(fleet_setup):
+    """A heal cycle that loses its server to shutdown mid-replan must raise
+    cleanly — never reinstall onto a flushed server — and count as an
+    interrupted heal, not a success and not a masked pass."""
+    import threading
+
+    fleet = _mk_fleet(fleet_setup)
+    gate = threading.Event()
+    orig_replan = fleet.replan_sync
+
+    def slow_replan():
+        gate.wait(timeout=10.0)         # park the heal inside its solve
+        return orig_replan()
+
+    fleet.replan_sync = slow_replan
+
+    async def main():
+        async with fleet.serving(probe_interval_s=30.0):
+            control = fleet.control
+            fleet.kill(fleet.path[2])
+            heal = asyncio.create_task(control.heal())
+            await asyncio.sleep(0.05)   # heal is off-loop, held at the gate
+        # session exited: the server stopped while the heal still ran
+        gate.set()
+        with pytest.raises(RuntimeError, match="drain unavailable"):
+            await asyncio.wait_for(heal, timeout=15)
+        return control.counters
+
+    counters = run_async(asyncio.wait_for(main(), timeout=30))
+    assert counters.interrupted_heals == 1
+    assert counters.replans == 1        # the solve finished...
+    assert counters.drains == 0         # ...but the barrier was refused
+    assert counters.reinstalls == 0, \
+        "a reinstall must never land on a stopped server"
+
+
+def test_fleet_heal_broken_barrier_during_reinstall_is_counted(fleet_setup):
+    """The other shutdown interleaving: drain succeeds, then stop() breaks
+    the heal's barrier while the reinstall runs.  release() raising inside
+    heal() must surface as an interrupted heal — drained and replanned, but
+    never counted as a completed reinstall."""
+    from repro.runtime import ControlLoop
+
+    fleet = _mk_fleet(fleet_setup)
+    fleet.kill(fleet.path[2])
+
+    class _StoppedUnderneath:
+        """DrainableServer whose owned hold was broken by stop() between
+        drain and release — exactly AsyncZooServer's post-stop behavior."""
+
+        async def drain(self):
+            pass
+
+        def release(self):
+            raise RuntimeError(
+                "hold was broken by stop(): the server flushed and shut "
+                "down while the control plane still owned the drain barrier")
+
+        def add_stats_source(self, name, fn):
+            pass
+
+    async def main():
+        control = ControlLoop(fleet, _StoppedUnderneath(),
+                              probe_interval_s=30.0)
+        await control.start()
+        try:
+            with pytest.raises(RuntimeError,
+                               match="broken by stop.*while the reinstall"):
+                await control.heal()
+        finally:
+            await control.stop()
+        return control.counters
+
+    counters = run_async(asyncio.wait_for(main(), timeout=30))
+    assert counters.interrupted_heals == 1
+    assert counters.replans == 1 and counters.drains == 1
+    assert counters.reinstalls == 0

@@ -35,11 +35,13 @@ from repro.core.plane import (
 )
 from repro.core.translator import MID_SVM, translate
 from repro.runtime import (
+    AdaptiveBucketPolicy,
     DataplaneRuntime,
     PipelinedExecutor,
     SequentialPathExecutor,
     ShardedExecutor,
     SingleSwitchExecutor,
+    bucket_ladder,
     bucket_size,
 )
 from repro.serving import ZooServer
@@ -265,6 +267,89 @@ def test_admission_edge_cases_no_extra_traces(satdap):
     assert rt.cache_size() == 3
     # O(log B) bound: traces never exceed log2(max bucket) + 1
     assert rt.cache_size() <= int(np.log2(512)) + 1
+
+
+def test_bucket_ladder_is_the_trace_bound():
+    """The ladder enumerates exactly the shapes admission can produce up to
+    max_batch — its length IS the O(log B) trace bound serving fronts warm
+    against."""
+    assert bucket_ladder(1) == (1,)
+    assert bucket_ladder(5) == (1, 2, 4, 8)
+    assert bucket_ladder(8) == (1, 2, 4, 8)
+    assert bucket_ladder(65) == (1, 2, 4, 8, 16, 32, 64, 128)
+    assert bucket_ladder(5, 4) == (4, 8)          # granularity floors the rungs
+    for max_batch, g in ((1, 1), (7, 1), (64, 1), (65, 1), (13, 4)):
+        ladder = bucket_ladder(max_batch, g)
+        assert ladder[-1] == bucket_size(max_batch, g)
+        assert all(b == 2 * a for a, b in zip(ladder, ladder[1:]))
+        assert len(ladder) <= int(np.log2(max(max_batch, 2))) + 2
+
+
+def test_warm_pretaces_ladder_then_live_traffic_compiles_nothing(satdap):
+    """``DataplaneRuntime.warm`` drives every bucket through the run_host
+    hot path once; afterwards arbitrary ragged live sizes mint zero new
+    traces — the continuous engine's no-first-touch-compile guarantee."""
+    Xtr, ytr, Xte, _ = satdap
+    prof = _profile(1)
+    dt = DecisionTree(max_depth=4, max_leaf_nodes=16).fit(Xtr, ytr)
+    prog = translate(dt)
+    packed = install_program(empty_program(prof), prog, prof)
+    rt = DataplaneRuntime(SingleSwitchExecutor(prof, packed=packed))
+
+    def req(B):
+        X = np.tile(Xte, (B // max(Xte.shape[0], 1) + 1, 1))[:B]
+        return PacketBatch.make_request(X, mid=prog.mid, max_features=36,
+                                        n_trees=prof.max_trees,
+                                        n_hyperplanes=prof.max_hyperplanes)
+
+    ladder = rt.warm(req, 65)
+    assert ladder == bucket_ladder(65, 1)
+    assert rt.cache_size() == len(ladder)
+    for B in (1, 3, 7, 63, 65, 100, 128):         # live ragged traffic
+        out = rt.run_host(req(B))
+        assert out.batch == B
+    assert rt.cache_size() == len(ladder), \
+        "a live dispatch compiled a shape the warm ladder should have owned"
+
+
+def test_adaptive_policy_snapback_keeps_trace_bound(satdap):
+    """Burst -> widen -> deadline flush -> snap back, driven through a real
+    runtime: the target rides admission buckets the whole way, the snap
+    lands back on the small bucket (no per-dispatch deadline tax on the
+    trickle), and the full trajectory stays inside O(log B) traces."""
+    Xtr, ytr, Xte, _ = satdap
+    prof = _profile(1)
+    dt = DecisionTree(max_depth=4, max_leaf_nodes=16).fit(Xtr, ytr)
+    prog = translate(dt)
+    packed = install_program(empty_program(prof), prog, prof)
+    rt = DataplaneRuntime(SingleSwitchExecutor(prof, packed=packed))
+    policy = AdaptiveBucketPolicy(min_batch=1, max_batch=64,
+                                  max_wait_us=1_000.0, alpha=0.5)
+
+    def req(B):
+        X = np.tile(Xte, (B // max(Xte.shape[0], 1) + 1, 1))[:B]
+        return PacketBatch.make_request(X, mid=prog.mid, max_features=36,
+                                        n_trees=prof.max_trees,
+                                        n_hyperplanes=prof.max_hyperplanes)
+
+    def dispatch(queued, waited_us):
+        b = policy.drain(queued)
+        rt.run_host(req(b))
+        policy.note_dispatch(b, waited_us)
+        return policy.target_batch
+
+    targets = [dispatch(48, 500.0) for _ in range(8)]   # sustained burst
+    assert targets[-1] == 64, "sustained load must widen to the top bucket"
+    # load drops: ONE deadline flush below target snaps the estimate down
+    assert dispatch(2, 1_500.0) == 2
+    assert policy.wait_us(2, 0.0) <= 0                  # trickle cuts at once
+    targets += [dispatch(1, 100.0) for _ in range(4)]
+    assert targets[-1] == 1
+    # every target along the widen/snap trajectory was an admission bucket
+    assert all(t == bucket_size(t, 1) for t in targets)
+    # the whole trajectory minted only the buckets it actually dispatched
+    assert rt.cache_size() == 3                         # {64, 2, 1}
+    assert rt.cache_size() <= int(np.log2(64)) + 1
 
 
 # ----------------------------------------------- pipelined compile thrash
